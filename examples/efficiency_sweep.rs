@@ -1,0 +1,46 @@
+//! The Fig 15/16 scalability experiment as a standalone example: sweep MAC
+//! budgets 60..4000 for every zoo network, compare FGPM against the
+//! factorized-granularity baseline, and print the staircase effect that
+//! motivates §IV-A.
+//!
+//! ```sh
+//! cargo run --release --offline --example efficiency_sweep [net]
+//! ```
+
+use repro::{nets, report};
+
+fn main() {
+    let filter = std::env::args().nth(1);
+    let budgets = report::fig15_budgets();
+    for net in nets::all_networks() {
+        if let Some(f) = &filter {
+            let alias = nets::by_name(f).map(|n| n.name);
+            if !net.name.contains(f.as_str()) && alias.as_deref() != Some(&net.name) {
+                continue;
+            }
+        }
+        println!("=== {} ===", net.name);
+        let pts = report::fig15_sweep(&net, &budgets);
+        println!(
+            "{:>6} {:>10} {:>10} {:>11} {:>11} {:>12}",
+            "MACs", "eff FGPM", "eff fact", "GOPS FGPM", "GOPS fact", "staircase"
+        );
+        let mut prev_fact_gops = 0.0f64;
+        for p in &pts {
+            // The "staircase" marker: budget grew but the factorized
+            // baseline's throughput did not (wasted PEs, Fig 10(a)/15).
+            let stair = if p.gops_fact <= prev_fact_gops * 1.001 && prev_fact_gops > 0.0 { "  <- flat" } else { "" };
+            prev_fact_gops = p.gops_fact;
+            println!(
+                "{:>6} {:>9.2}% {:>9.2}% {:>11.1} {:>11.1}{}",
+                p.pes,
+                p.eff_fgpm * 100.0,
+                p.eff_fact * 100.0,
+                p.gops_fgpm,
+                p.gops_fact,
+                stair
+            );
+        }
+        println!();
+    }
+}

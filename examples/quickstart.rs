@@ -1,0 +1,75 @@
+//! Quickstart: the five-minute tour of the library.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! 1. Load a network description from the zoo.
+//! 2. Run the paper's resource-aware methodology (Algorithm 1 + 2) for the
+//!    ZC706 budget.
+//! 3. Cycle-simulate the resulting accelerator and compare actual vs
+//!    theoretical MAC efficiency.
+//! 4. If `make artifacts` has been run, execute one real inference through
+//!    the AOT-compiled PJRT pipeline and check it against the golden.
+
+use repro::alloc::{self, Granularity};
+use repro::model::memory::CePlan;
+use repro::sim::{self, SimOptions};
+use repro::{nets, runtime, zc706, CLOCK_HZ};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A network from the zoo.
+    let net = nets::mobilenet_v2();
+    println!(
+        "{}: {} layers, {:.1}M MACs, {:.2}M weight bytes (8-bit), {} SCBs",
+        net.name,
+        net.layers.len(),
+        net.total_macs() as f64 / 1e6,
+        net.total_weight_bytes() as f64 / 1e6,
+        net.scbs.len()
+    );
+
+    // 2. Resource-aware allocation for the ZC706 budget.
+    let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
+    println!(
+        "design point: boundary={} ({} FRCEs / {} WRCEs), {} PEs on {} DSPs, \
+         SRAM {:.2} MB, DRAM {:.2} MB/frame",
+        d.memory.boundary,
+        d.memory.boundary,
+        net.layers.len() - d.memory.boundary,
+        d.parallelism.pes,
+        d.parallelism.dsps,
+        d.sram_bytes as f64 / 1048576.0,
+        d.dram_bytes as f64 / 1048576.0,
+    );
+    println!(
+        "theoretical: {:.1} FPS @200MHz, MAC efficiency {:.2}%",
+        d.performance.fps,
+        d.performance.mac_efficiency * 100.0
+    );
+
+    // 3. Cycle-level simulation of the streaming pipeline.
+    let plan = CePlan { boundary: d.memory.boundary };
+    let stats = sim::simulate(&net, &d.parallelism.allocs, &plan, &SimOptions::optimized(), 10)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "simulated:   {:.1} FPS @200MHz, actual MAC efficiency {:.2}%, latency {:.2} ms",
+        stats.fps(CLOCK_HZ),
+        stats.mac_efficiency() * 100.0,
+        stats.latency_ms(CLOCK_HZ)
+    );
+
+    // 4. Real numerics through the AOT artifacts (optional).
+    let dir = runtime::artifacts_dir();
+    if dir.join("mbv2_manifest.json").exists() {
+        let engine = runtime::Engine::load(&dir, "mbv2")?;
+        let input = engine.manifest.read_f32(&engine.manifest.golden_input)?;
+        let golden = engine.manifest.read_f32(&engine.manifest.golden_logits)?;
+        let logits = engine.infer(&input)?;
+        let err = logits.iter().zip(&golden).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        println!("PJRT inference: {} logits, max |err| vs golden = {err:.2e}", logits.len());
+    } else {
+        println!("(run `make artifacts` to enable the PJRT inference step)");
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! END-TO-END DRIVER (DESIGN.md experiment "E2E"; recorded in
+//! EXPERIMENTS.md): serve a batch of frames through the full three-layer
+//! system for both implemented networks and report the paper's headline
+//! metrics.
+//!
+//! The request path is Rust-only: per-stage HLO executables (compiled once
+//! by python/compile/aot.py from the JAX+Pallas stage graphs) are loaded
+//! via PJRT and chained by the threaded streaming coordinator — FRCE
+//! stages carry their weights as on-chip constants, WRCE stages receive
+//! their weights from the host-memory "DRAM" on every frame. Every output
+//! frame is checked against the golden logits.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example streaming_inference
+//! ```
+
+use repro::alloc::{self, Granularity};
+use repro::model::memory::CePlan;
+use repro::sim::{self, SimOptions};
+use repro::{coordinator, nets, runtime, zc706, CLOCK_HZ};
+
+fn main() -> anyhow::Result<()> {
+    let dir = runtime::artifacts_dir();
+    let frames = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12u64);
+    let workers = 4usize;
+
+    for (short, net) in [("mbv2", nets::mobilenet_v2()), ("snv2", nets::shufflenet_v2())] {
+        if !dir.join(format!("{short}_manifest.json")).exists() {
+            println!("{short}: artifacts missing — run `make artifacts`");
+            continue;
+        }
+        println!("=== {} : streaming {} frames through {} CE groups ===", net.name, frames, workers);
+        let r = coordinator::run_streaming(dir.clone(), short, frames, workers)?;
+        println!(
+            "functional: {:.2} FPS (XLA-CPU substrate), mean latency {:.1} ms, max |logits err| {:.2e}",
+            r.fps,
+            r.latency * 1e3,
+            r.max_abs_err
+        );
+        assert!(r.max_abs_err < 1e-3, "golden check failed");
+        println!(
+            "DRAM weight stream {:.2} MB/frame (8-bit model), coordinator overhead {:.1}%",
+            r.dram_weight_bytes_8bit as f64 / 1048576.0,
+            r.coordinator_overhead() * 100.0
+        );
+        for g in &r.groups {
+            println!("  CE group {:?}: busy {:.2}s", g.stages, g.busy);
+        }
+
+        // Projected hardware performance of the same workload: the paper's
+        // headline metric comes from the cycle-level simulator at 200 MHz.
+        let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
+        let plan = CePlan { boundary: d.memory.boundary };
+        let stats = sim::simulate(&net, &d.parallelism.allocs, &plan, &SimOptions::optimized(), 10)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "projected accelerator: {:.1} FPS @200MHz, MAC efficiency {:.2}% \
+             (paper: {:.1} FPS / {:.2}%)\n",
+            stats.fps(CLOCK_HZ),
+            stats.mac_efficiency() * 100.0,
+            if short == "mbv2" { 985.8 } else { 2092.4 },
+            if short == "mbv2" { 94.35 } else { 94.58 },
+        );
+    }
+    Ok(())
+}

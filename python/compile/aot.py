@@ -1,0 +1,169 @@
+"""AOT compiler: stage graphs -> HLO-text artifacts + weights + goldens.
+
+Emits, per network, into ``artifacts/``:
+
+* ``<net>_stageNN_<name>.hlo.txt`` — one HLO module per stage. FRCE stages
+  close over their fake-quantized weights (HLO constants == the on-chip
+  weight ROM of §III-B); WRCE stages take weights as leading parameters,
+  streamed from "DRAM" by the Rust coordinator on every frame (the fully
+  reused weight scheme: each weight is read from host memory exactly once
+  per frame).
+* ``<net>_weights.bin`` — flat little-endian f32 blob of all WRCE weights.
+* ``<net>_input.bin`` / ``<net>_logits.bin`` — golden input and reference
+  logits for end-to-end verification in Rust.
+* ``<net>_manifest.json`` — the stage plan (shapes, CE kinds, weight
+  offsets, per-stage output checksums).
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+The FRCE/WRCE split follows a block-granular analogue of Algorithm 1: a
+stage stays FRCE while its weights are no larger than its output FM (the
+shallow-layer distribution criterion of §II-B); ``--boundary`` overrides.
+The rust-side layer-granular Algorithm 1 is cross-checked against this
+split in rust/tests/integration.rs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, quant
+
+WEIGHT_SEED = 42
+INPUT_SEED = 7
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: FRCE weight ROMs are baked as HLO constants;
+    # the default printer elides them as '{...}' which the text parser
+    # round-trips as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def default_boundary(stages) -> int:
+    """First stage index whose weights outgrow its output FM (all stages
+    from here on are WRCEs). The head (pooling + FC) is always WRCE."""
+    for i, s in enumerate(stages):
+        if s.weight_bytes > s.fm_bytes:
+            return i
+    return len(stages) - 1
+
+
+def compile_network(net_name: str, out_dir: str, boundary: int | None = None, input_size: int = 224) -> dict:
+    # First pass with default reuse to compute the boundary, then rebuild
+    # with the per-stage Pallas reuse schedule implied by the CE kinds.
+    probe = model.NETWORKS[net_name](input_size)
+    b = default_boundary(probe) if boundary is None else boundary
+    stages = model.NETWORKS[net_name](input_size, reuse_for=lambda i: "fm" if i < b else "weight")
+
+    key = jax.random.fold_in(jax.random.PRNGKey(WEIGHT_SEED), hash(net_name) % (1 << 16))
+    params_per_stage = [
+        model.init_params(s.param_shapes, jax.random.fold_in(key, i)) for i, s in enumerate(stages)
+    ]
+
+    # Golden reference pass.
+    x0 = quant.fake_quant(
+        jax.random.uniform(jax.random.PRNGKey(INPUT_SEED), (input_size, input_size, 3), jnp.float32),
+        1.0 / 127.0,
+    )
+    logits, checksums = model.run_reference(stages, params_per_stage, x0)
+
+    short = {"mobilenet_v2": "mbv2", "shufflenet_v2": "snv2"}[net_name]
+    manifest = {
+        "network": net_name,
+        "input_shape": list(x0.shape),
+        "boundary": b,
+        "weights_file": f"{short}_weights.bin",
+        "golden_input": f"{short}_input.bin",
+        "golden_logits": f"{short}_logits.bin",
+        "stages": [],
+    }
+
+    weight_blob: list[np.ndarray] = []
+    offset = 0
+    for i, (stage, params) in enumerate(zip(stages, params_per_stage)):
+        kind = "frce" if i < b else "wrce"
+        hlo_name = f"{short}_stage{i:02d}_{stage.name}.hlo.txt"
+        x_spec = jax.ShapeDtypeStruct(stage.in_shape, jnp.float32)
+        if kind == "frce":
+            fn = stage.fn
+            closed = jax.jit(lambda x, fn=fn, p=params: (fn(p, x),))
+            hlo = to_hlo_text(closed.lower(x_spec))
+            param_entries = []
+        else:
+            names = sorted(params.keys())
+            fn = stage.fn
+
+            def open_fn(*args, fn=fn, names=names):
+                p = dict(zip(names, args[:-1]))
+                return (fn(p, args[-1]),)
+
+            specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+            hlo = to_hlo_text(jax.jit(open_fn).lower(*specs, x_spec))
+            param_entries = []
+            for n in names:
+                arr = np.asarray(params[n], np.float32)
+                param_entries.append(
+                    {"name": n, "shape": list(arr.shape), "offset": offset, "len": int(arr.size)}
+                )
+                weight_blob.append(arr.ravel())
+                offset += arr.size
+        with open(os.path.join(out_dir, hlo_name), "w") as f:
+            f.write(hlo)
+        mean, std = checksums[i]
+        manifest["stages"].append(
+            {
+                "name": stage.name,
+                "kind": kind,
+                "hlo": hlo_name,
+                "in_shape": list(stage.in_shape),
+                "out_shape": list(stage.out_shape),
+                "weight_bytes_8bit": stage.weight_bytes,
+                "fm_bytes_8bit": stage.fm_bytes,
+                "params": param_entries,
+                "mean": mean,
+                "std": std,
+            }
+        )
+        print(f"  [{kind}] {hlo_name}: {len(hlo)} chars, {len(param_entries)} streamed params")
+
+    blob = np.concatenate(weight_blob) if weight_blob else np.zeros(0, np.float32)
+    blob.astype("<f4").tofile(os.path.join(out_dir, manifest["weights_file"]))
+    np.asarray(x0, np.float32).astype("<f4").tofile(os.path.join(out_dir, manifest["golden_input"]))
+    np.asarray(logits, np.float32).astype("<f4").tofile(os.path.join(out_dir, manifest["golden_logits"]))
+    with open(os.path.join(out_dir, f"{short}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"{net_name}: {len(stages)} stages, boundary={b}, "
+        f"{blob.size * 4} weight bytes streamed, logits mean={float(jnp.mean(logits)):.4f}"
+    )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nets", default="mobilenet_v2,shufflenet_v2")
+    ap.add_argument("--boundary", type=int, default=None, help="override the FRCE/WRCE stage boundary")
+    ap.add_argument("--input-size", type=int, default=224)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for net in args.nets.split(","):
+        compile_network(net.strip(), args.out, args.boundary, args.input_size)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Layer-1 Pallas kernels — the accelerator's compute hot-spots.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's FPGA PE
+array broadcasts FM pixels and kernel weights into a ``P_f x P_w`` MAC
+grid fed from BRAM line buffers. On TPU the transferable insight is the
+*reuse schedule*, not the broadcast wiring:
+
+* :func:`pwc` is the MAC-dominant kernel. Its BlockSpec grid realizes the
+  two data-reuse schemes of §III-B as two grid orders of one kernel:
+  ``reuse="weight"`` (WRCE flavour) keeps the FM block resident in VMEM
+  and marches over weight tiles — each weight tile is read once, exactly
+  the fully-reused-weight scheme; ``reuse="fm"`` (FRCE flavour) keeps the
+  weight matrix resident and marches over FM-position tiles — the
+  fully-reused-FM scheme.
+* :func:`dwc` has no cross-channel reduction (the paper's motivation for
+  skipping DSP decomposition in DWC layers); it is laid out as a VPU
+  stencil over a ``(rows, C)`` block rather than an MXU matmul.
+* :func:`stc` lowers the KxK standard convolution to K^2 accumulated MXU
+  matmuls — the same "window fully integrated into the output pixel"
+  schedule as the fully-reused FM scheme of Fig 5.
+* Padding is materialized by index arithmetic *inside* the kernels (zero
+  rows never occupy VMEM) — the TPU analogue of the paper's
+  address-generated padding (§IV-B).
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness (and
+AOT-lowering) path; real-TPU efficiency is estimated from the BlockSpecs
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _largest_tile(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (tile sizes must divide the
+    dimension so the BlockSpec grid covers it exactly)."""
+    t = min(n, cap)
+    while n % t:
+        t -= 1
+    return t
+
+
+# --------------------------------------------------------------------------
+# PWC — pointwise convolution as a tiled MXU matmul
+# --------------------------------------------------------------------------
+
+
+def _pwc_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def pwc(x: jnp.ndarray, w: jnp.ndarray, *, reuse: str = "weight", tile: int = 128) -> jnp.ndarray:
+    """Pointwise convolution ``(H, W, M) x (M, N) -> (H, W, N)``.
+
+    ``reuse="weight"``: grid over N-tiles, FM block stays in VMEM (WRCE).
+    ``reuse="fm"``: grid over position-tiles, weights stay in VMEM (FRCE).
+    """
+    h, wd, m = x.shape
+    m2, n = w.shape
+    assert m == m2, (x.shape, w.shape)
+    f2 = h * wd
+    xf = x.reshape(f2, m)
+    if reuse == "weight":
+        tn = _largest_tile(n, tile)
+        grid = (n // tn,)
+        out = pl.pallas_call(
+            _pwc_kernel,
+            out_shape=jax.ShapeDtypeStruct((f2, n), jnp.float32),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((f2, m), lambda i: (0, 0)),
+                pl.BlockSpec((m, tn), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((f2, tn), lambda i: (0, i)),
+            interpret=INTERPRET,
+        )(xf, w)
+    elif reuse == "fm":
+        tf = _largest_tile(f2, tile)
+        grid = (f2 // tf,)
+        out = pl.pallas_call(
+            _pwc_kernel,
+            out_shape=jax.ShapeDtypeStruct((f2, n), jnp.float32),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tf, m), lambda i: (i, 0)),
+                pl.BlockSpec((m, n), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tf, n), lambda i: (i, 0)),
+            interpret=INTERPRET,
+        )(xf, w)
+    else:
+        raise ValueError(f"unknown reuse scheme {reuse!r}")
+    return out.reshape(h, wd, n)
+
+
+def grouped_pwc(x: jnp.ndarray, w: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """Grouped 1x1 convolution: ``(H, W, M) x (g, M/g, N/g)``; the grid
+    iterates groups, giving each group's weight slice one VMEM residence."""
+    h, wd, m = x.shape
+    g, mg, ng = w.shape
+    assert g == groups and g * mg == m
+
+    def kernel(x_ref, w_ref, o_ref):
+        o_ref[...] = jnp.dot(x_ref[...], w_ref[0], preferred_element_type=jnp.float32)
+
+    f2 = h * wd
+    xg = x.reshape(f2, g, mg).transpose(1, 0, 2)  # (g, F2, M/g)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((g, f2, ng), jnp.float32),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, f2, mg), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, mg, ng), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, f2, ng), lambda i: (i, 0, 0)),
+        interpret=INTERPRET,
+    )(xg, w)
+    return out.transpose(1, 0, 2).reshape(h, wd, g * ng)
+
+
+# --------------------------------------------------------------------------
+# DWC — depthwise stencil on the VPU
+# --------------------------------------------------------------------------
+
+
+def dwc(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, pad: int = 1, row_tiles: int = 4) -> jnp.ndarray:
+    """Depthwise KxK convolution ``(H, W, C) x (K, K, C)``.
+
+    The grid tiles output rows; each step holds a ``(K-1+rows*s, W, C)``
+    input band in VMEM — the VMEM twin of the FRCE line buffer (the band is
+    exactly the live pixel set of Fig 5). Padding rows/cols are composed by
+    index clamping + masking, never stored.
+    """
+    h, wd, c = x.shape
+    k = w.shape[0]
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (wd + 2 * pad - k) // stride + 1
+    rt = _largest_tile(oh, max(1, oh // row_tiles))
+
+    def kernel(x_ref, w_ref, o_ref):
+        band = x_ref[...]  # full input (interpret mode keeps this cheap)
+        tile_idx = pl.program_id(0)
+        r0 = tile_idx * rt
+        acc = jnp.zeros((rt, ow, c), jnp.float32)
+        for dy in range(k):
+            for dx in range(k):
+                # Input rows for output rows r0..r0+rt-1 at kernel tap dy:
+                # r_in = r*stride + dy - pad.
+                rows = (r0 + jax.lax.iota(jnp.int32, rt)) * stride + dy - pad
+                cols = jax.lax.iota(jnp.int32, ow) * stride + dx - pad
+                rvalid = (rows >= 0) & (rows < h)
+                cvalid = (cols >= 0) & (cols < wd)
+                ridx = jnp.clip(rows, 0, h - 1)
+                cidx = jnp.clip(cols, 0, wd - 1)
+                patch = band[ridx][:, cidx]  # (rt, ow, c)
+                mask = rvalid[:, None, None] & cvalid[None, :, None]
+                acc = acc + jnp.where(mask, patch, 0.0) * w_ref[dy, dx]
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        grid=(oh // rt,),
+        in_specs=[
+            pl.BlockSpec((h, wd, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, k, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, ow, c), lambda i: (i, 0, 0)),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+# --------------------------------------------------------------------------
+# STC — standard convolution as K^2 accumulated matmuls
+# --------------------------------------------------------------------------
+
+
+def stc(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, pad: int = 1, tile_n: int = 128) -> jnp.ndarray:
+    """Standard KxK convolution ``(H, W, M) x (K, K, M, N)``: for each
+    kernel tap, gather the strided input plane and accumulate an MXU
+    matmul over channels — the whole reduction stays in VMEM."""
+    h, wd, m = x.shape
+    k = w.shape[0]
+    n = w.shape[3]
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (wd + 2 * pad - k) // stride + 1
+    tn = _largest_tile(n, tile_n)
+
+    def kernel(x_ref, w_ref, o_ref):
+        acc = jnp.zeros((oh * ow, tn), jnp.float32)
+        band = x_ref[...]
+        for dy in range(k):
+            for dx in range(k):
+                rows = jax.lax.iota(jnp.int32, oh) * stride + dy - pad
+                cols = jax.lax.iota(jnp.int32, ow) * stride + dx - pad
+                rvalid = (rows >= 0) & (rows < h)
+                cvalid = (cols >= 0) & (cols < wd)
+                patch = band[jnp.clip(rows, 0, h - 1)][:, jnp.clip(cols, 0, wd - 1)]
+                mask = rvalid[:, None, None] & cvalid[None, :, None]
+                plane = jnp.where(mask, patch, 0.0).reshape(oh * ow, m)
+                acc = acc + jnp.dot(plane, w_ref[dy, dx], preferred_element_type=jnp.float32)
+        o_ref[...] = acc.reshape(oh, ow, tn)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, n), jnp.float32),
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((h, wd, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, k, m, tn), lambda i: (0, 0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow, tn), lambda i: (0, 0, i)),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+# --------------------------------------------------------------------------
+# SCB add — the shortcut join
+# --------------------------------------------------------------------------
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def scb_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise SCB addition ``(H, W, C) + (H, W, C)``."""
+    assert a.shape == b.shape
+    h, w, c = a.shape
+    rt = _largest_tile(h, max(1, h // 4))
+    return pl.pallas_call(
+        _add_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        grid=(h // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, w, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((rt, w, c), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, w, c), lambda i: (i, 0, 0)),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+@functools.lru_cache(maxsize=None)
+def pwc_vmem_bytes(f2: int, m: int, n: int, tile: int = 128, reuse: str = "weight") -> dict:
+    """Static per-grid-step VMEM footprint of :func:`pwc` (f32 bytes).
+
+    Used by EXPERIMENTS.md §Perf to check each layer shape against the
+    ~16 MiB VMEM budget and to estimate MXU occupancy
+    (``macs_per_step / (128*128 * ideal_cycles)``).
+    """
+    if reuse == "weight":
+        tn = _largest_tile(n, tile)
+        blocks = {"fm_block": f2 * m * 4, "weight_tile": m * tn * 4, "out_tile": f2 * tn * 4}
+    else:
+        tf = _largest_tile(f2, tile)
+        blocks = {"fm_block": tf * m * 4, "weight_tile": m * n * 4, "out_tile": tf * n * 4}
+    blocks["total"] = sum(blocks.values())
+    return blocks

@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in :mod:`conv` must match these references to float tolerance
+under ``pytest python/tests``; the AOT model is additionally cross-checked
+against a composition of these references.
+
+Layouts (chosen to mirror the accelerator's dataflow):
+  * activations: ``(H, W, C)`` — channel-last, matching the channel-first
+    pixel-vector stream of the FRCEs (a "pixel" is one ``(h, w)`` position's
+    C-vector).
+  * PWC weights: ``(M, N)``; DWC weights: ``(K, K, C)``; STC weights:
+    ``(K, K, M, N)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pwc(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise (1x1) convolution: ``(H, W, M) x (M, N) -> (H, W, N)``."""
+    h, wd, m = x.shape
+    assert w.shape[0] == m, (x.shape, w.shape)
+    return (x.reshape(h * wd, m) @ w).reshape(h, wd, w.shape[1])
+
+
+def grouped_pwc(x: jnp.ndarray, w: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """Grouped 1x1 convolution (ShuffleNetV1): ``w`` is ``(g, M/g, N/g)``."""
+    h, wd, m = x.shape
+    g, mg, ng = w.shape
+    assert groups == g and mg * g == m
+    xg = x.reshape(h * wd, g, mg)
+    out = jnp.einsum("pgm,gmn->pgn", xg, w)
+    return out.reshape(h, wd, g * ng)
+
+
+def dwc(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 1) -> jnp.ndarray:
+    """Depthwise KxK convolution: ``(H, W, C) x (K, K, C)``."""
+    c = x.shape[2]
+    lhs = x[None].transpose(0, 3, 1, 2)  # NCHW
+    rhs = w.transpose(2, 0, 1)[:, None]  # (C, 1, K, K) == OIHW with I=1
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        feature_group_count=c,
+    )
+    return out[0].transpose(1, 2, 0)
+
+
+def stc(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 1) -> jnp.ndarray:
+    """Standard KxK convolution: ``(H, W, M) x (K, K, M, N)``."""
+    lhs = x[None].transpose(0, 3, 1, 2)  # NCHW
+    rhs = w.transpose(3, 2, 0, 1)  # OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+    )
+    return out[0].transpose(1, 2, 0)
+
+
+def scb_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise shortcut addition."""
+    return a + b
+
+
+def relu6(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def avgpool_global(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool: ``(H, W, C) -> (1, 1, C)``."""
+    return jnp.mean(x, axis=(0, 1), keepdims=True)
+
+
+def maxpool(x: jnp.ndarray, k: int = 3, stride: int = 2, pad: int = 1) -> jnp.ndarray:
+    """Max pooling over ``(H, W, C)``."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (k, k, 1),
+        (stride, stride, 1),
+        [(pad, pad), (pad, pad), (0, 0)],
+    )
+
+
+def avgpool_spatial(x: jnp.ndarray, k: int = 3, stride: int = 2, pad: int = 1) -> jnp.ndarray:
+    """Average pooling with a KxK window (ShuffleNetV1 shortcut branch)."""
+    summed = jax.lax.reduce_window(
+        x,
+        0.0,
+        jax.lax.add,
+        (k, k, 1),
+        (stride, stride, 1),
+        [(pad, pad), (pad, pad), (0, 0)],
+    )
+    counts = jax.lax.reduce_window(
+        jnp.ones_like(x),
+        0.0,
+        jax.lax.add,
+        (k, k, 1),
+        (stride, stride, 1),
+        [(pad, pad), (pad, pad), (0, 0)],
+    )
+    return summed / counts
+
+
+def channel_shuffle(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """ShuffleNet channel shuffle: ``(H, W, g*n) -> interleave groups``."""
+    h, w, c = x.shape
+    return x.reshape(h, w, groups, c // groups).transpose(0, 1, 3, 2).reshape(h, w, c)

@@ -1,0 +1,290 @@
+"""Layer-2 JAX models: MobileNetV2 and ShuffleNetV2 as *stage graphs*.
+
+A stage == one network block == one AOT-compiled HLO artifact == one CE
+group of the Rust streaming coordinator. Each stage is a pure function
+``(params, x) -> y`` over ``(H, W, C)`` activations, built from the
+Layer-1 Pallas kernels (PWC/DWC/STC/SCB-add); pooling and channel
+plumbing are plain jnp.
+
+The FRCE/WRCE assignment of a stage decides two things downstream:
+
+* ``aot.py`` closes FRCE stages over their weights (HLO constants — the
+  on-chip weight ROM) and leaves WRCE weights as runtime parameters (the
+  coordinator streams them from "DRAM" each frame);
+* the PWC kernels inside the stage use the matching Pallas reuse schedule
+  (``reuse="fm"`` for FRCE, ``reuse="weight"`` for WRCE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .kernels import conv, ref
+
+#: Static activation-quantization scales (fold into the HLO): ReLU6
+#: activations live in [0, 6]; linear-bottleneck outputs are clipped to ~8.
+ACT_SCALE = 6.0 / 127.0
+LIN_SCALE = 8.0 / 127.0
+
+
+def aq(x: jnp.ndarray) -> jnp.ndarray:
+    """ReLU6 + activation fake-quant (the paper's 8-bit activations)."""
+    return quant.fake_quant(ref.relu6(x), ACT_SCALE)
+
+
+def lq(x: jnp.ndarray) -> jnp.ndarray:
+    """Linear-output fake-quant."""
+    return quant.fake_quant(x, LIN_SCALE)
+
+
+@dataclasses.dataclass
+class Stage:
+    """One compiled unit of the streaming pipeline."""
+
+    name: str
+    fn: Callable  # (params: dict[str, jnp.ndarray], x) -> y
+    param_shapes: dict  # name -> tuple
+    in_shape: tuple  # (H, W, C)
+    out_shape: tuple
+    #: 8-bit weight bytes (the paper's memory unit) — drives the
+    #: FRCE/WRCE stage split in aot.py.
+    weight_bytes: int
+    #: Output feature-map bytes at 8-bit.
+    fm_bytes: int
+
+
+def _shapes_bytes(shapes: dict) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for s in shapes.values())
+
+
+def init_params(shapes: dict, key: jax.Array, fan_scale: float = 1.0) -> dict:
+    """Deterministic fake-quantized weight init (shared with the golden)."""
+    params = {}
+    for i, (name, shape) in enumerate(sorted(shapes.items())):
+        k = jax.random.fold_in(key, i)
+        fan_in = max(1, int(jnp.prod(jnp.array(shape[:-1]))))
+        w = jax.random.normal(k, shape, jnp.float32) * (fan_scale / jnp.sqrt(fan_in))
+        params[name] = quant.quantize_static(w)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2
+# ---------------------------------------------------------------------------
+
+MBV2_BOTTLENECKS = [
+    # (expansion t, out channels c, repeats n, stride s)
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def _bottleneck_fn(t: int, c_out: int, stride: int, c_in: int, reuse: str):
+    residual = stride == 1 and c_in == c_out
+
+    def fn(params, x):
+        h = x
+        if t != 1:
+            h = aq(conv.pwc(h, params["expand"], reuse=reuse))
+        h = aq(conv.dwc(h, params["dw"], stride=stride, pad=1))
+        h = lq(conv.pwc(h, params["project"], reuse=reuse))
+        if residual:
+            h = lq(conv.scb_add(h, x))
+        return h
+
+    shapes = {}
+    mid = c_in * t
+    if t != 1:
+        shapes["expand"] = (c_in, mid)
+    shapes["dw"] = (3, 3, mid)
+    shapes["project"] = (mid, c_out)
+    return fn, shapes
+
+
+def mobilenet_v2_stages(input_size: int = 224, reuse_for: Callable[[int], str] = lambda i: "weight") -> list:
+    """Build MobileNetV2 as a stage list. ``reuse_for(stage_idx)`` picks the
+    Pallas PWC reuse schedule per stage (FRCE stages pass ``"fm"``)."""
+    stages = []
+    size = input_size // 2
+    c_in = 32
+
+    def stem_fn(params, x):
+        return aq(conv.stc(x, params["w"], stride=2, pad=1))
+
+    stages.append(
+        Stage(
+            "stem",
+            stem_fn,
+            {"w": (3, 3, 3, 32)},
+            (input_size, input_size, 3),
+            (size, size, 32),
+            weight_bytes=3 * 3 * 3 * 32,
+            fm_bytes=size * size * 32,
+        )
+    )
+
+    idx = 0
+    for t, c, n, s in MBV2_BOTTLENECKS:
+        for rep in range(n):
+            idx += 1
+            stride = s if rep == 0 else 1
+            fn, shapes = _bottleneck_fn(t, c, stride, c_in, reuse_for(idx))
+            in_shape = (size, size, c_in)
+            size = size // stride
+            stages.append(
+                Stage(
+                    f"bneck{idx:02d}",
+                    fn,
+                    shapes,
+                    in_shape,
+                    (size, size, c),
+                    weight_bytes=_shapes_bytes(shapes),
+                    fm_bytes=size * size * c,
+                )
+            )
+            c_in = c
+
+    def head_fn(params, x):
+        h = aq(conv.pwc(x, params["head"], reuse="weight"))
+        h = ref.avgpool_global(h)
+        return conv.pwc(h, params["fc"], reuse="weight")
+
+    stages.append(
+        Stage(
+            "head",
+            head_fn,
+            {"head": (320, 1280), "fc": (1280, 1000)},
+            (size, size, 320),
+            (1, 1, 1000),
+            weight_bytes=320 * 1280 + 1280 * 1000,
+            fm_bytes=1000,
+        )
+    )
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# ShuffleNetV2 (1.0x)
+# ---------------------------------------------------------------------------
+
+SNV2_STAGES = [(116, 4), (232, 8), (464, 4)]
+
+
+def _snv2_unit_fn(c_out: int, stride: int, c_in: int, reuse: str):
+    half = c_out // 2
+
+    def fn(params, x):
+        if stride == 1:
+            left, right = x[:, :, :half], x[:, :, half:]
+            r = aq(conv.pwc(right, params["pw1"], reuse=reuse))
+            r = conv.dwc(r, params["dw"], stride=1, pad=1)
+            r = aq(conv.pwc(r, params["pw2"], reuse=reuse))
+            out = jnp.concatenate([left, r], axis=2)
+        else:
+            l = conv.dwc(x, params["ldw"], stride=2, pad=1)
+            l = aq(conv.pwc(l, params["lpw"], reuse=reuse))
+            r = aq(conv.pwc(x, params["pw1"], reuse=reuse))
+            r = conv.dwc(r, params["dw"], stride=2, pad=1)
+            r = aq(conv.pwc(r, params["pw2"], reuse=reuse))
+            out = jnp.concatenate([l, r], axis=2)
+        return ref.channel_shuffle(out, 2)
+
+    if stride == 1:
+        shapes = {"pw1": (half, half), "dw": (3, 3, half), "pw2": (half, half)}
+    else:
+        shapes = {
+            "ldw": (3, 3, c_in),
+            "lpw": (c_in, half),
+            "pw1": (c_in, half),
+            "dw": (3, 3, half),
+            "pw2": (half, half),
+        }
+    return fn, shapes
+
+
+def shufflenet_v2_stages(input_size: int = 224, reuse_for: Callable[[int], str] = lambda i: "weight") -> list:
+    stages = []
+    size = input_size // 2
+
+    def stem_fn(params, x):
+        h = aq(conv.stc(x, params["w"], stride=2, pad=1))
+        return ref.maxpool(h, 3, 2, 1)
+
+    stages.append(
+        Stage(
+            "stem",
+            stem_fn,
+            {"w": (3, 3, 3, 24)},
+            (input_size, input_size, 3),
+            (size // 2, size // 2, 24),
+            weight_bytes=3 * 3 * 3 * 24,
+            fm_bytes=(size // 2) ** 2 * 24,
+        )
+    )
+    size //= 2
+    c_in = 24
+
+    idx = 0
+    for c_out, repeats in SNV2_STAGES:
+        for rep in range(repeats):
+            idx += 1
+            stride = 2 if rep == 0 else 1
+            fn, shapes = _snv2_unit_fn(c_out, stride, c_in, reuse_for(idx))
+            in_shape = (size, size, c_in)
+            size = size // stride
+            stages.append(
+                Stage(
+                    f"unit{idx:02d}",
+                    fn,
+                    shapes,
+                    in_shape,
+                    (size, size, c_out),
+                    weight_bytes=_shapes_bytes(shapes),
+                    fm_bytes=size * size * c_out,
+                )
+            )
+            c_in = c_out
+
+    def head_fn(params, x):
+        h = aq(conv.pwc(x, params["head"], reuse="weight"))
+        h = ref.avgpool_global(h)
+        return conv.pwc(h, params["fc"], reuse="weight")
+
+    stages.append(
+        Stage(
+            "head",
+            head_fn,
+            {"head": (464, 1024), "fc": (1024, 1000)},
+            (size, size, 464),
+            (1, 1, 1000),
+            weight_bytes=464 * 1024 + 1024 * 1000,
+            fm_bytes=1000,
+        )
+    )
+    return stages
+
+
+NETWORKS = {
+    "mobilenet_v2": mobilenet_v2_stages,
+    "shufflenet_v2": shufflenet_v2_stages,
+}
+
+
+def run_reference(stages: list, params_per_stage: list, x: jnp.ndarray) -> tuple:
+    """Run the whole stage graph in python (the golden path). Returns the
+    final logits and per-stage output checksums for debugging."""
+    sums = []
+    for stage, params in zip(stages, params_per_stage):
+        x = stage.fn(params, x)
+        sums.append((float(jnp.mean(x)), float(jnp.std(x))))
+    return x, sums

@@ -1,0 +1,37 @@
+"""Fake-quantization substrate (S12 in DESIGN.md).
+
+The paper quantizes both weights and activations to 8 bits (<1% accuracy
+loss, methodologies of [37]/[38]). For this reproduction quantization
+matters as (a) the byte-per-element unit of the memory/bandwidth models and
+(b) a numerics regime the kernels must survive; post-training-quantization
+accuracy itself is out of scope. We therefore use symmetric per-tensor
+int8 *fake* quantization: values are rounded to an int8 grid but kept in
+f32 so the same HLO runs on any PJRT backend.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Quantized activations/weights occupy one byte.
+BYTES_PER_ELEMENT = 1
+
+#: int8 symmetric range.
+QMAX = 127.0
+
+
+def scale_for(x: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric per-tensor scale: max|x| maps to 127."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / QMAX
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray | float) -> jnp.ndarray:
+    """Round to the int8 grid defined by ``scale`` and clamp (kept in f32)."""
+    q = jnp.clip(jnp.round(x / scale), -QMAX - 1, QMAX)
+    return q * scale
+
+
+def quantize_static(x: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize with the tensor's own (traced) scale — used for weight
+    constants at model-build time, where the scale folds into the HLO."""
+    return fake_quant(x, scale_for(x))

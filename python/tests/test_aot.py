@@ -1,0 +1,93 @@
+"""AOT pipeline tests: compile a reduced-size network end to end into a
+temp dir and validate every artifact contract the Rust runtime relies on."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.compile_network("mobilenet_v2", str(out), input_size=32)
+    return str(out), manifest
+
+
+def test_manifest_file_matches_returned(built):
+    out, manifest = built
+    with open(os.path.join(out, "mbv2_manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+
+
+def test_every_stage_has_hlo_file(built):
+    out, manifest = built
+    for s in manifest["stages"]:
+        path = os.path.join(out, s["hlo"])
+        assert os.path.exists(path), s["hlo"]
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # FRCE weights are constants; WRCE weights are parameters.
+        nparams = text.count("parameter(")
+        if s["kind"] == "frce":
+            assert not s["params"]
+        else:
+            assert len(s["params"]) >= 1
+            assert nparams >= len(s["params"]) + 1
+
+
+def test_weight_blob_offsets_are_dense(built):
+    out, manifest = built
+    blob = np.fromfile(os.path.join(out, manifest["weights_file"]), dtype="<f4")
+    cursor = 0
+    for s in manifest["stages"]:
+        for p in s["params"]:
+            assert p["offset"] == cursor, p
+            cursor += p["len"]
+            assert int(np.prod(p["shape"])) == p["len"]
+    assert cursor == blob.size
+
+
+def test_weights_are_fake_quantized(built):
+    out, manifest = built
+    blob = np.fromfile(os.path.join(out, manifest["weights_file"]), dtype="<f4")
+    # Per-tensor symmetric int8 grid: values/scale must be near-integers.
+    for s in manifest["stages"]:
+        for p in s["params"]:
+            w = blob[p["offset"] : p["offset"] + p["len"]]
+            scale = np.abs(w).max() / 127.0
+            if scale == 0:
+                continue
+            grid = w / scale
+            np.testing.assert_allclose(grid, np.round(grid), atol=1e-3)
+
+
+def test_golden_files_consistent(built):
+    out, manifest = built
+    x = np.fromfile(os.path.join(out, manifest["golden_input"]), dtype="<f4")
+    y = np.fromfile(os.path.join(out, manifest["golden_logits"]), dtype="<f4")
+    assert x.size == int(np.prod(manifest["input_shape"]))
+    assert y.size == 1000
+    assert np.isfinite(x).all() and np.isfinite(y).all()
+
+
+def test_stage_shapes_chain_in_manifest(built):
+    _, manifest = built
+    stages = manifest["stages"]
+    assert stages[0]["in_shape"] == manifest["input_shape"]
+    for a, b in zip(stages, stages[1:]):
+        assert a["out_shape"] == b["in_shape"], (a["name"], b["name"])
+
+
+def test_boundary_override(tmp_path):
+    m = aot.compile_network("mobilenet_v2", str(tmp_path), boundary=3, input_size=32)
+    kinds = [s["kind"] for s in m["stages"]]
+    assert kinds[:3] == ["frce"] * 3
+    assert all(k == "wrce" for k in kinds[3:])

@@ -1,0 +1,164 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle, including
+hypothesis sweeps over shapes (the paper's layer geometries and beyond)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref
+from compile import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+def assert_close(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---- PWC -----------------------------------------------------------------
+
+MBV2_PWC_SHAPES = [  # (H, M, N) drawn from MobileNetV2/ShuffleNetV2 layers
+    (56, 24, 144),
+    (14, 96, 576),
+    (7, 320, 1280),
+    (28, 58, 58),
+    (7, 464, 1024),
+]
+
+
+@pytest.mark.parametrize("h,m,n", MBV2_PWC_SHAPES)
+@pytest.mark.parametrize("reuse", ["weight", "fm"])
+def test_pwc_matches_ref(h, m, n, reuse):
+    x, w = rand(0, (h, h, m)), rand(1, (m, n), 0.1)
+    assert_close(conv.pwc(x, w, reuse=reuse), ref.pwc(x, w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 17),
+    m=st.integers(1, 40),
+    n=st.integers(1, 48),
+    reuse=st.sampled_from(["weight", "fm"]),
+)
+def test_pwc_hypothesis(h, m, n, reuse):
+    x, w = rand(2, (h, h, m)), rand(3, (m, n), 0.2)
+    assert_close(conv.pwc(x, w, reuse=reuse), ref.pwc(x, w))
+
+
+def test_pwc_quantized_inputs_exact():
+    # Fake-quantized operands stay on the int8 grid; the kernel must be
+    # bit-identical to the oracle on them.
+    x = quant.fake_quant(rand(4, (14, 14, 32)), 0.05)
+    w = quant.fake_quant(rand(5, (32, 64)), 0.01)
+    assert_close(conv.pwc(x, w), ref.pwc(x, w), tol=1e-6)
+
+
+# ---- grouped PWC ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("g,mg,ng", [(3, 8, 16), (3, 80, 160), (2, 12, 12)])
+def test_grouped_pwc_matches_ref(g, mg, ng):
+    x = rand(6, (14, 14, g * mg))
+    w = rand(7, (g, mg, ng), 0.1)
+    assert_close(conv.grouped_pwc(x, w, g), ref.grouped_pwc(x, w, g))
+
+
+# ---- DWC -----------------------------------------------------------------
+
+DWC_CASES = [  # (H, C, k, stride, pad)
+    (112, 32, 3, 1, 1),
+    (56, 144, 3, 2, 1),
+    (14, 576, 3, 1, 1),
+    (7, 960, 3, 1, 1),
+    (28, 58, 3, 2, 1),
+]
+
+
+@pytest.mark.parametrize("h,c,k,s,p", DWC_CASES)
+def test_dwc_matches_ref(h, c, k, s, p):
+    x, w = rand(8, (h, h, c)), rand(9, (k, k, c), 0.3)
+    assert_close(conv.dwc(x, w, stride=s, pad=p), ref.dwc(x, w, stride=s, pad=p))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(3, 15),
+    c=st.integers(1, 24),
+    s=st.sampled_from([1, 2]),
+    p=st.sampled_from([0, 1]),
+)
+def test_dwc_hypothesis(h, c, s, p):
+    k = 3
+    if h + 2 * p < k:
+        return
+    x, w = rand(10, (h, h, c)), rand(11, (k, k, c), 0.3)
+    assert_close(conv.dwc(x, w, stride=s, pad=p), ref.dwc(x, w, stride=s, pad=p))
+
+
+def test_dwc_padding_is_zero_not_garbage():
+    # A one-hot corner input exercises every padding branch.
+    x = jnp.zeros((5, 5, 2)).at[0, 0, 0].set(1.0)
+    w = jnp.ones((3, 3, 2))
+    out = conv.dwc(x, w, stride=1, pad=1)
+    assert_close(out, ref.dwc(x, w, stride=1, pad=1), tol=1e-6)
+    assert float(out[0, 0, 0]) == 1.0 and float(out[4, 4, 0]) == 0.0
+
+
+# ---- STC -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,m,n,s", [(224, 3, 32, 2), (32, 8, 16, 1), (11, 5, 7, 2)])
+def test_stc_matches_ref(h, m, n, s):
+    x, w = rand(12, (h, h, m)), rand(13, (3, 3, m, n), 0.2)
+    assert_close(conv.stc(x, w, stride=s, pad=1), ref.stc(x, w, stride=s, pad=1))
+
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.integers(4, 12), m=st.integers(1, 8), n=st.integers(1, 12), s=st.sampled_from([1, 2]))
+def test_stc_hypothesis(h, m, n, s):
+    x, w = rand(14, (h, h, m)), rand(15, (3, 3, m, n), 0.2)
+    assert_close(conv.stc(x, w, stride=s, pad=1), ref.stc(x, w, stride=s, pad=1))
+
+
+# ---- SCB add ---------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(1, 16), c=st.integers(1, 32))
+def test_scb_add_hypothesis(h, c):
+    a, b = rand(16, (h, h, c)), rand(17, (h, h, c))
+    assert_close(conv.scb_add(a, b), ref.scb_add(a, b), tol=1e-6)
+
+
+# ---- quantization substrate -------------------------------------------------
+
+
+def test_fake_quant_grid():
+    x = rand(18, (64,))
+    s = quant.scale_for(x)
+    q = quant.fake_quant(x, s)
+    np.testing.assert_allclose(np.asarray(q / s), np.round(np.asarray(q / s)), atol=1e-4)
+    assert np.max(np.abs(np.asarray(q))) <= float(s) * 128 + 1e-6
+
+
+def test_fake_quant_error_bound():
+    x = rand(19, (1000,))
+    q = quant.fake_quant(x, quant.scale_for(x))
+    assert float(jnp.max(jnp.abs(q - x))) <= float(quant.scale_for(x)) / 2 + 1e-6
+
+
+# ---- VMEM accounting --------------------------------------------------------
+
+
+def test_pwc_vmem_within_budget():
+    # Every PWC layer shape of MobileNetV2/ShuffleNetV2 must fit the 16 MiB
+    # VMEM budget under the default tiling.
+    for h, m, n in MBV2_PWC_SHAPES + [(112, 32, 16), (56, 16, 96)]:
+        r = conv.pwc_vmem_bytes(h * h, m, n)
+        assert r["total"] < 16 * 1024 * 1024, (h, m, n, r)

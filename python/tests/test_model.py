@@ -1,0 +1,111 @@
+"""L2 model tests: stage graphs, shapes, quantization behaviour, and the
+stage-vs-oracle composition at a reduced input size (fast)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, quant
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SIZE = 32  # reduced spatial size: every stride/pad path still exercised
+
+
+@pytest.fixture(scope="module", params=["mobilenet_v2", "shufflenet_v2"])
+def net(request):
+    name = request.param
+    stages = model.NETWORKS[name](SIZE)
+    key = jax.random.PRNGKey(0)
+    params = [model.init_params(s.param_shapes, jax.random.fold_in(key, i)) for i, s in enumerate(stages)]
+    return name, stages, params
+
+
+def test_stage_shapes_chain(net):
+    _, stages, params = net
+    x = jnp.ones(stages[0].in_shape, jnp.float32) * 0.1
+    for s, p in zip(stages, params):
+        assert x.shape == s.in_shape, s.name
+        x = s.fn(p, x)
+        assert x.shape == s.out_shape, s.name
+
+
+def test_final_logits_shape_and_finite(net):
+    _, stages, params = net
+    x = quant.fake_quant(jax.random.uniform(jax.random.PRNGKey(3), stages[0].in_shape), 1 / 127.0)
+    logits, sums = model.run_reference(stages, params, x)
+    assert logits.shape == (1, 1, 1000)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert len(sums) == len(stages)
+
+
+def test_weight_bytes_accounting(net):
+    _, stages, _ = net
+    for s in stages:
+        total = sum(int(np.prod(shape)) for shape in s.param_shapes.values())
+        assert s.weight_bytes == total, s.name
+
+
+def test_activations_stay_on_quant_grid(net):
+    # Every ReLU6 stage output must be on the ACT_SCALE int8 grid.
+    _, stages, params = net
+    x = quant.fake_quant(jax.random.uniform(jax.random.PRNGKey(5), stages[0].in_shape), 1 / 127.0)
+    h = stages[0].fn(params[0], x)
+    g = np.asarray(h) / model.ACT_SCALE
+    np.testing.assert_allclose(g, np.round(g), atol=1e-3)
+    assert float(h.max()) <= 6.0 + 1e-6 and float(h.min()) >= 0.0
+
+
+def test_default_boundary_is_distribution_flip(net):
+    name, stages, _ = net
+    b = aot.default_boundary(stages)
+    assert 0 < b < len(stages)
+    for s in stages[:b]:
+        assert s.weight_bytes <= s.fm_bytes, s.name
+    assert stages[b].weight_bytes > stages[b].fm_bytes
+
+
+def test_reuse_schedule_does_not_change_numerics(net):
+    name, _, _ = net
+    a = model.NETWORKS[name](SIZE, reuse_for=lambda i: "fm")
+    b = model.NETWORKS[name](SIZE, reuse_for=lambda i: "weight")
+    key = jax.random.PRNGKey(1)
+    pa = [model.init_params(s.param_shapes, jax.random.fold_in(key, i)) for i, s in enumerate(a)]
+    x = quant.fake_quant(jax.random.uniform(jax.random.PRNGKey(2), a[0].in_shape), 1 / 127.0)
+    ya, _ = model.run_reference(a, pa, x)
+    yb, _ = model.run_reference(b, pa, x)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb), rtol=1e-4, atol=1e-4)
+
+
+def test_mbv2_stem_matches_oracle():
+    stages = model.mobilenet_v2_stages(SIZE)
+    p = model.init_params(stages[0].param_shapes, jax.random.PRNGKey(9))
+    x = jax.random.normal(jax.random.PRNGKey(10), stages[0].in_shape) * 0.1
+    got = stages[0].fn(p, x)
+    want = quant.fake_quant(ref.relu6(ref.stc(x, p["w"], stride=2, pad=1)), model.ACT_SCALE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_snv2_unit_channel_bookkeeping():
+    stages = model.shufflenet_v2_stages(SIZE)
+    # Stage channel widths follow (116, 232, 464) with halving splits.
+    widths = [s.out_shape[2] for s in stages]
+    assert widths[0] == 24
+    assert 116 in widths and 232 in widths and 464 in widths
+    assert widths[-1] == 1000
+
+
+def test_hlo_text_roundtrips_large_constants():
+    # Regression for the print_large_constants bug: an FRCE-style closure
+    # must keep its weight values in the HLO text.
+    stages = model.mobilenet_v2_stages(SIZE)
+    p = model.init_params(stages[0].param_shapes, jax.random.PRNGKey(11))
+    fn = stages[0].fn
+    lowered = jax.jit(lambda x: (fn(p, x),)).lower(
+        jax.ShapeDtypeStruct(stages[0].in_shape, jnp.float32)
+    )
+    txt = aot.to_hlo_text(lowered)
+    assert "constant({...}" not in txt and "constant({ ... }" not in txt
+    assert "f32[3,3,3,32]" in txt

@@ -1,0 +1,53 @@
+//! Regenerates every *figure* of the paper's evaluation (Figs 1, 3, 10,
+//! 12-17 + Table I's analytic comparison) and times each renderer.
+//!
+//! Run: `cargo bench --offline` (or `--bench paper_figures`). The rendered
+//! rows are printed so the bench log doubles as the reproduction record
+//! consumed by EXPERIMENTS.md.
+
+use repro::util::bench::time;
+use repro::{nets, report};
+
+fn main() {
+    println!("== paper_figures: regenerating every figure ==");
+
+    let mut out = String::new();
+    time("fig1_structure_share", 2000.0, || out = report::fig1());
+    println!("{out}");
+
+    time("fig3_memory_distribution", 2000.0, || {
+        out = [nets::mobilenet_v2(), nets::shufflenet_v2()]
+            .iter()
+            .map(report::fig3)
+            .collect();
+    });
+    println!("{out}");
+
+    time("tab1_ce_comparison", 1000.0, || out = report::tab1());
+    println!("{out}");
+
+    time("fig10_granularity_toy", 1000.0, || out = report::fig10());
+    println!("{out}");
+
+    time("fig12_boundary_sweep_all_nets", 4000.0, || {
+        out = nets::all_networks().iter().map(report::fig12).collect();
+    });
+    println!("{out}");
+
+    time("fig13_onchip_memory_schemes", 2000.0, || out = report::fig13());
+    println!("{out}");
+
+    time("fig14_offchip_traffic", 2000.0, || out = report::fig14());
+    println!("{out}");
+
+    time("fig15_fgpm_sweep_all_nets", 8000.0, || {
+        out = nets::all_networks().iter().map(report::fig15).collect();
+    });
+    println!("{out}");
+
+    time("fig16_sweep_statistics", 8000.0, || out = report::fig16());
+    println!("{out}");
+
+    time("fig17_balanced_dataflow_ablation", 20000.0, || out = report::fig17());
+    println!("{out}");
+}

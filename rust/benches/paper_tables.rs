@@ -1,0 +1,24 @@
+//! Regenerates the paper's evaluation *tables* (II-V) end to end — each
+//! table is produced by the real pipeline: Algorithm 1 boundary placement,
+//! Algorithm 2 parallelism tuning, the Eq-12/13/14 models, and the
+//! cycle-level simulator for actual FPS / MAC efficiency.
+
+use repro::util::bench::time;
+use repro::report;
+
+fn main() {
+    println!("== paper_tables: regenerating Tables II-V ==");
+
+    let mut out = String::new();
+    time("tab2_resource_utilization", 30000.0, || out = report::tab2());
+    println!("{out}");
+
+    time("tab3_performance_summary", 30000.0, || out = report::tab3());
+    println!("{out}");
+
+    time("tab4_prior_work_comparison", 30000.0, || out = report::tab4());
+    println!("{out}");
+
+    time("tab5_memory_comparison", 20000.0, || out = report::tab5());
+    println!("{out}");
+}

@@ -1,0 +1,63 @@
+//! §Perf hot-path benches (DESIGN.md §Perf, EXPERIMENTS.md §Perf):
+//!
+//! * cycle-level simulator throughput (wall ms per simulated frame) — the
+//!   L3 bottleneck for every sweep-style experiment;
+//! * allocation pipeline latency (Alg 1 + Alg 2 at ZC706 budgets);
+//! * FGPM space construction;
+//! * streaming-coordinator overhead vs the busiest worker (only when
+//!   artifacts exist).
+
+use repro::alloc::{self, Granularity};
+use repro::model::memory::{CePlan, MemoryModelCfg};
+use repro::sim::{self, SimOptions};
+use repro::util::bench::time;
+use repro::{coordinator, nets, runtime, zc706};
+
+fn main() {
+    println!("== sim_hotpath: performance of the reproduction stack itself ==");
+
+    let net = nets::mobilenet_v2();
+    let cfg = MemoryModelCfg::default();
+    let boundary = alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary;
+    let plan = CePlan { boundary };
+    let par = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+
+    let frames = 10u64;
+    let s = time("sim_mbv2_zc706_10frames", 15000.0, || {
+        sim::simulate(&net, &par.allocs, &plan, &SimOptions::optimized(), frames).unwrap();
+    });
+    println!("  -> {:.2} ms per simulated frame", s.median_ms / frames as f64);
+
+    time("pipeline_build_mbv2", 3000.0, || {
+        let _ = sim::build_pipeline(&net, &par.allocs, &plan, &SimOptions::optimized());
+    });
+
+    time("alg1_balanced_memory_allocation", 3000.0, || {
+        let _ = alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg);
+    });
+
+    time("alg2_dynamic_parallelism_tuning", 5000.0, || {
+        let _ = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    });
+
+    time("fgpm_space_1280", 1000.0, || {
+        let _ = alloc::fgpm_space(1280);
+    });
+
+    time("design_point_full_methodology", 8000.0, || {
+        let _ = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
+    });
+
+    // Coordinator overhead (needs `make artifacts`).
+    let dir = runtime::artifacts_dir();
+    if dir.join("mbv2_manifest.json").exists() {
+        let report = coordinator::run_streaming(dir, "mbv2", 6, 3).expect("stream");
+        println!(
+            "coordinator: {:.2} FPS, overhead {:.1}% (target <5% of wall; XLA-CPU compute dominates)",
+            report.fps,
+            report.coordinator_overhead() * 100.0
+        );
+    } else {
+        println!("coordinator bench skipped: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,94 @@
+//! Resource-aware memory and parallelism allocation (§IV-A, §V):
+//!
+//! * [`fgpm`] — the fine-grained parallel mechanism (Eq 11, §IV-A).
+//! * [`memory_alloc`] — Algorithm 1, the balanced memory allocator that
+//!   places the FRCE/WRCE group boundary.
+//! * [`parallelism`] — Algorithm 2, the dynamic parallelism tuner, plus
+//!   the factorized-granularity baseline.
+//!
+//! [`design_point`] chains both algorithms into the full design-space
+//! exploration the paper performs per (network, FPGA) pair.
+
+pub mod fgpm;
+pub mod memory_alloc;
+pub mod parallelism;
+
+pub use fgpm::{factor_space, fgpm_space};
+pub use memory_alloc::{balanced_memory_allocation, boundary_sweep, MemoryPlan};
+pub use parallelism::{config_ladder, dynamic_parallelism_tuning, tune_and_evaluate, Granularity, ParallelismPlan};
+
+use crate::model::memory::{CePlan, MemoryModelCfg};
+use crate::model::throughput::{self, Performance};
+use crate::nets::Network;
+
+/// A fully-resolved design point: CE plan + parallelism + predicted
+/// performance and memory figures.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub memory: MemoryPlan,
+    pub parallelism: ParallelismPlan,
+    pub performance: Performance,
+    pub sram_bytes: u64,
+    pub dram_bytes: u64,
+}
+
+/// Run the complete resource-aware methodology for a (network, budget)
+/// pair: Algorithm 1 then Algorithm 2, then re-cost the WRCE weight
+/// buffers with the chosen kernel parallelism.
+pub fn design_point(
+    net: &Network,
+    sram_budget: u64,
+    dsp_budget: usize,
+    granularity: Granularity,
+) -> DesignPoint {
+    let cfg = MemoryModelCfg::default();
+    let memory = balanced_memory_allocation(net, sram_budget, &cfg);
+    let ce_plan = CePlan { boundary: memory.boundary };
+    let parallelism = dynamic_parallelism_tuning(net, &ce_plan, dsp_budget, granularity);
+    let performance = throughput::evaluate(net, &parallelism.allocs);
+    // Re-evaluate SRAM with the actual kernel parallelism of each WRCE:
+    // the ping-pong weight buffer of CE i holds P_w(i) kernels (Alg 1 runs
+    // with P_w = 1, so add the per-layer delta here).
+    let base = crate::model::memory::sram_report(net, &ce_plan, &cfg).total();
+    let weight_buffer_delta: u64 = net
+        .layers
+        .iter()
+        .zip(&parallelism.allocs)
+        .enumerate()
+        .filter(|(i, (l, _))| *i >= memory.boundary && l.kind.has_weights())
+        .map(|(_, (l, a))| {
+            let kernel_bytes = (l.k * l.k * l.in_ch / l.groups) as u64;
+            2 * kernel_bytes * (a.pw as u64 - 1)
+        })
+        .sum();
+    let sram_bytes = base + weight_buffer_delta;
+    DesignPoint { dram_bytes: memory.dram_bytes, sram_bytes, memory, parallelism, performance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{mobilenet_v2, shufflenet_v2};
+    use crate::zc706;
+
+    #[test]
+    fn zc706_design_points_match_paper_regime() {
+        // Table III: MobileNetV2 ~1567 PEs / 985.8 FPS; ShuffleNetV2 ~1604
+        // PEs / 2092.4 FPS. Check the methodology lands in the same regime
+        // (within ~25% on FPS, PEs in the right band).
+        let mb = design_point(&mobilenet_v2(), 0, zc706::DSP_BUDGET, Granularity::Fgpm);
+        assert!(mb.performance.fps > 700.0 && mb.performance.fps < 1400.0, "fps {}", mb.performance.fps);
+        assert!(mb.parallelism.pes > 1200 && mb.parallelism.pes < 1900, "pes {}", mb.parallelism.pes);
+
+        let sn = design_point(&shufflenet_v2(), 0, zc706::DSP_BUDGET, Granularity::Fgpm);
+        assert!(sn.performance.fps > 1400.0, "fps {}", sn.performance.fps);
+    }
+
+    #[test]
+    fn sram_recosting_is_bounded() {
+        let d = design_point(&mobilenet_v2(), zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
+        // Recosted SRAM (with real P_w ping-pong weight buffers) stays within
+        // 2x of the Alg-1 estimate.
+        assert!(d.sram_bytes < 2 * d.memory.sram_bytes.max(1) + (1 << 20));
+    }
+}

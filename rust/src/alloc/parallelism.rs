@@ -1,0 +1,342 @@
+//! Algorithm 2 — Dynamic Parallelism Tuning (§V-B), plus the
+//! factorized-granularity baseline used throughout Figs 10/15/16/17.
+//!
+//! Starting from `P_w = P_f = 1` everywhere (so `T(i) = O(i)`), the tuner
+//! repeatedly finds the bottleneck CE(s) and raises their parallelism to
+//! the next level of their config ladder until the DSP budget is
+//! exhausted. Ladders honour the CE-type priorities of §III-C: FRCEs grow
+//! the kernel dimension `P_w` first (more output channels per iteration,
+//! no output buffer), WRCEs grow the FM dimension `P_f` first (wider
+//! output scope per loaded kernel).
+
+use crate::model::memory::{CeKind, CePlan};
+use crate::model::throughput::{self, LayerAlloc};
+use crate::nets::{Layer, Network};
+
+use super::fgpm::{factor_space, fgpm_space};
+
+/// Parallelism granularity mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// The proposed fine-grained parallel mechanism.
+    Fgpm,
+    /// Conventional factorized granularity (baseline).
+    Factorized,
+}
+
+fn dim_space(m: usize, g: Granularity) -> Vec<usize> {
+    match g {
+        Granularity::Fgpm => fgpm_space(m),
+        Granularity::Factorized => factor_space(m),
+    }
+}
+
+/// The ordered config ladder of one layer: the Pareto front of the 2D
+/// `(P_w, P_f)` product space — every rung strictly decreases computing
+/// time at strictly increasing PE cost. The CE-type priority of §III-C
+/// breaks ties between equal-(T, PE) configs: FRCEs prefer kernel-side
+/// parallelism (results stream out channel-first with no output buffer),
+/// WRCEs prefer FM-side parallelism (wider output scope per loaded
+/// kernel).
+pub fn config_ladder(l: &Layer, kind: CeKind, g: Granularity) -> Vec<LayerAlloc> {
+    if !l.kind.is_mac() {
+        return vec![LayerAlloc::ONE];
+    }
+    if g == Granularity::Factorized {
+        // Conventional factorized allocation sweeps the CE's natural
+        // parallel dimension first and only then multiplies the secondary
+        // dimension on top (the baseline of Figs 10/15/16) — it has no
+        // fine-grained 2D space to draw from.
+        let (pref_max, sec_max, pw_first) = match kind {
+            CeKind::Frce => (l.max_pw(), l.max_pf(), true),
+            CeKind::Wrce => (l.max_pf(), l.max_pw(), false),
+        };
+        let mut ladder: Vec<LayerAlloc> = Vec::new();
+        for p in factor_space(pref_max) {
+            ladder.push(if pw_first { LayerAlloc { pw: p, pf: 1 } } else { LayerAlloc { pw: 1, pf: p } });
+        }
+        for p in factor_space(sec_max).into_iter().skip(1) {
+            ladder.push(if pw_first {
+                LayerAlloc { pw: pref_max, pf: p }
+            } else {
+                LayerAlloc { pw: p, pf: pref_max }
+            });
+        }
+        let mut out: Vec<LayerAlloc> = Vec::new();
+        let mut last_t = u64::MAX;
+        for a in ladder {
+            let t = throughput::layer_cycles(l, a);
+            if t < last_t {
+                out.push(a);
+                last_t = t;
+            }
+        }
+        return out;
+    }
+    let pws = dim_space(l.max_pw(), g);
+    let pfs = dim_space(l.max_pf(), g);
+    let mut cands: Vec<(u64, usize, usize, LayerAlloc)> = Vec::with_capacity(pws.len() * pfs.len());
+    for &pw in &pws {
+        for &pf in &pfs {
+            let a = LayerAlloc { pw, pf };
+            let pref = match kind {
+                CeKind::Frce => pw,
+                CeKind::Wrce => pf,
+            };
+            cands.push((throughput::layer_cycles(l, a), a.pes(), usize::MAX - pref, a));
+        }
+    }
+    // Sort by PE cost, then by T, then by the CE-type preference; sweep to
+    // keep the strictly-decreasing-T front.
+    cands.sort_by_key(|&(t, pes, pref_inv, _)| (pes, t, pref_inv));
+    let mut out: Vec<LayerAlloc> = Vec::new();
+    let mut last_t = u64::MAX;
+    for (t, _, _, a) in cands {
+        if t < last_t {
+            out.push(a);
+            last_t = t;
+        }
+    }
+    out
+}
+
+/// What resource Algorithm 2's budget counts.
+///
+/// The ZC706 implementation budgets DSP48E1 slices (with 2x 8-bit
+/// decomposition); the Fig 15/16 scalability sweeps budget raw MAC units
+/// ("60-4000 MACs").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetKind {
+    Dsp,
+    Pes,
+}
+
+/// Outcome of Algorithm 2.
+#[derive(Debug, Clone)]
+pub struct ParallelismPlan {
+    pub allocs: Vec<LayerAlloc>,
+    pub granularity: Granularity,
+    /// DSPs consumed (after 2x 8-bit decomposition).
+    pub dsps: usize,
+    /// Total MAC units.
+    pub pes: usize,
+}
+
+/// Algorithm 2: greedy bottleneck-first DSP assignment.
+///
+/// `dsp_budget` is the DSP constraint (e.g. [`crate::zc706::DSP_BUDGET`]);
+/// `ce_plan` supplies the FRCE/WRCE split that decides ladder priorities.
+pub fn dynamic_parallelism_tuning(
+    net: &Network,
+    ce_plan: &CePlan,
+    dsp_budget: usize,
+    g: Granularity,
+) -> ParallelismPlan {
+    dynamic_parallelism_tuning_with(net, ce_plan, dsp_budget, g, BudgetKind::Dsp)
+}
+
+/// Algorithm 2 with an explicit budget kind (see [`BudgetKind`]).
+pub fn dynamic_parallelism_tuning_with(
+    net: &Network,
+    ce_plan: &CePlan,
+    dsp_budget: usize,
+    g: Granularity,
+    budget_kind: BudgetKind,
+) -> ParallelismPlan {
+    let ladders: Vec<Vec<LayerAlloc>> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| config_ladder(l, ce_plan.kind(i), g))
+        .collect();
+    let mut level = vec![0usize; net.layers.len()];
+    let alloc_at = |level: &[usize], i: usize| ladders[i][level[i]];
+    let times = |level: &[usize]| -> Vec<u64> {
+        net.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| if l.kind.is_mac() { throughput::layer_cycles(l, alloc_at(level, i)) } else { 0 })
+            .collect()
+    };
+    let dsp_total = |level: &[usize]| -> usize {
+        net.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| match budget_kind {
+                BudgetKind::Dsp => throughput::layer_dsps(l, alloc_at(level, i)),
+                BudgetKind::Pes => {
+                    if l.kind.is_mac() {
+                        alloc_at(level, i).pes()
+                    } else {
+                        0
+                    }
+                }
+            })
+            .sum()
+    };
+
+    // Greedy bottleneck-first tuning (the paper's while-loop): each
+    // iteration raises every CE currently at T_max one rung, skipping rungs
+    // that would overflow the DSP budget. When no bottleneck CE can be
+    // raised (ladder saturated or budget exhausted) the throughput is
+    // final and the loop stops.
+    loop {
+        let t = times(&level);
+        let t_max = *t.iter().max().unwrap();
+        if t_max == 0 {
+            break;
+        }
+        // Trim slack: every non-bottleneck CE drops to the cheapest rung
+        // that still meets the bottleneck period. Greedy bumps overshoot
+        // whenever a rung more than halves a layer's T; reclaiming the
+        // overshoot is what lets the saved PEs "be reallocated to the
+        // slowest layer" (Fig 10(b)).
+        for i in 0..net.layers.len() {
+            while level[i] > 0 {
+                let t_down = throughput::layer_cycles(&net.layers[i], ladders[i][level[i] - 1]);
+                if t_down <= t_max {
+                    level[i] -= 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        // T_max only drops if EVERY bottleneck CE advances a rung, so the
+        // bump is all-or-nothing: a partial bump would spend DSPs without
+        // improving throughput (the waste Fig 10(a) attributes to the
+        // staircase effect).
+        let bottlenecks: Vec<usize> = (0..net.layers.len()).filter(|&i| t[i] == t_max).collect();
+        if bottlenecks.iter().any(|&i| level[i] + 1 >= ladders[i].len()) {
+            break;
+        }
+        for &i in &bottlenecks {
+            level[i] += 1;
+        }
+        if dsp_total(&level) > dsp_budget {
+            for &i in &bottlenecks {
+                level[i] -= 1;
+            }
+            break;
+        }
+    }
+
+    let allocs: Vec<LayerAlloc> = (0..net.layers.len()).map(|i| alloc_at(&level, i)).collect();
+    // Report true DSP slices regardless of which resource was budgeted.
+    let dsps = net
+        .layers
+        .iter()
+        .zip(&allocs)
+        .map(|(l, &a)| throughput::layer_dsps(l, a))
+        .sum();
+    let pes = net
+        .layers
+        .iter()
+        .zip(&allocs)
+        .filter(|(l, _)| l.kind.is_mac())
+        .map(|(_, a)| a.pes())
+        .sum();
+    ParallelismPlan { allocs, granularity: g, dsps, pes }
+}
+
+/// Convenience: tune and evaluate in one call.
+pub fn tune_and_evaluate(
+    net: &Network,
+    ce_plan: &CePlan,
+    dsp_budget: usize,
+    g: Granularity,
+) -> (ParallelismPlan, throughput::Performance) {
+    let plan = dynamic_parallelism_tuning(net, ce_plan, dsp_budget, g);
+    let perf = throughput::evaluate(net, &plan.allocs);
+    (plan, perf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{mobilenet_v2, shufflenet_v2};
+    use crate::zc706;
+
+    fn mid_plan(net: &Network) -> CePlan {
+        CePlan { boundary: net.layers.len() / 2 }
+    }
+
+    #[test]
+    fn ladder_times_strictly_decrease() {
+        let net = mobilenet_v2();
+        for (i, l) in net.layers.iter().enumerate() {
+            for kind in [CeKind::Frce, CeKind::Wrce] {
+                let ladder = config_ladder(l, kind, Granularity::Fgpm);
+                let mut last = u64::MAX;
+                for a in ladder {
+                    let t = throughput::layer_cycles(l, a);
+                    assert!(t < last, "{} level not decreasing", i);
+                    last = t;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_priorities_follow_ce_kind() {
+        let net = mobilenet_v2();
+        let l = net.layers.iter().find(|l| l.kind == crate::nets::LayerKind::Pwc).unwrap();
+        let fr = config_ladder(l, CeKind::Frce, Granularity::Fgpm);
+        let wr = config_ladder(l, CeKind::Wrce, Granularity::Fgpm);
+        // Second rung grows the preferred dimension.
+        assert!(fr[1].pw > 1 && fr[1].pf == 1);
+        assert!(wr[1].pf > 1 && wr[1].pw == 1);
+    }
+
+    #[test]
+    fn respects_dsp_budget() {
+        let net = mobilenet_v2();
+        for budget in [64, 256, 855, 2048] {
+            let plan = dynamic_parallelism_tuning(&net, &mid_plan(&net), budget, Granularity::Fgpm);
+            assert!(plan.dsps <= budget, "budget {budget}: used {}", plan.dsps);
+        }
+    }
+
+    #[test]
+    fn fgpm_never_slower_than_factorized() {
+        for net in [mobilenet_v2(), shufflenet_v2()] {
+            for budget in [128, 512, 855] {
+                let cp = mid_plan(&net);
+                let (_, pf) = tune_and_evaluate(&net, &cp, budget, Granularity::Fgpm);
+                let (_, pb) = tune_and_evaluate(&net, &cp, budget, Granularity::Factorized);
+                assert!(
+                    pf.t_max <= pb.t_max,
+                    "{} @{budget}: fgpm {} vs factorized {}",
+                    net.name,
+                    pf.t_max,
+                    pb.t_max
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zc706_fgpm_hits_high_efficiency_and_utilization() {
+        // Table IV: 94.35% MAC efficiency, 844/900 DSPs for MobileNetV2.
+        // The theoretical model should land in the >90% efficiency,
+        // >90% DSP-utilization regime.
+        let net = mobilenet_v2();
+        let (plan, perf) = tune_and_evaluate(&net, &mid_plan(&net), zc706::DSP_BUDGET, Granularity::Fgpm);
+        assert!(perf.mac_efficiency > 0.90, "eff {}", perf.mac_efficiency);
+        assert!(plan.dsps > 760, "dsps {}", plan.dsps);
+        // And the throughput should be in the high-hundreds FPS range the
+        // paper reports (985.8 FPS).
+        assert!(perf.fps > 600.0, "fps {}", perf.fps);
+    }
+
+    #[test]
+    fn more_dsps_never_hurt_throughput() {
+        let net = shufflenet_v2();
+        let cp = mid_plan(&net);
+        let mut last = u64::MAX;
+        for budget in [60, 120, 240, 480, 855, 1700] {
+            let (_, perf) = tune_and_evaluate(&net, &cp, budget, Granularity::Fgpm);
+            assert!(perf.t_max <= last);
+            last = perf.t_max;
+        }
+    }
+}

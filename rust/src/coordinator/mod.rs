@@ -1,0 +1,246 @@
+//! Layer-3 streaming coordinator.
+//!
+//! The Rust twin of the paper's streaming multi-CE architecture at stage
+//! granularity: the compiled stages are partitioned into contiguous
+//! *CE groups*, each owned by a worker thread with its own PJRT client;
+//! frames stream through bounded channels of depth 2 — the software
+//! analogue of the ping-pong FM buffers (§III-A) — so all groups compute
+//! different frames concurrently and intermediate FMs never touch the
+//! "off-chip" side (they move pointer-wise between threads).
+//!
+//! FRCE-group stages carry their weights inside the executable (on-chip
+//! ROM); WRCE-group stages receive weight literals on every execution —
+//! the DRAM weight stream, whose per-frame byte count the metrics report
+//! against Eq (13).
+//!
+//! (The `xla` crate's wrapper types are not `Send`, so each worker
+//! compiles its own stage range from the artifacts rather than sharing
+//! one engine — same artifacts, same numerics.)
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Engine, Manifest, StageKind};
+
+/// A frame moving through the pipeline.
+struct Frame {
+    id: u64,
+    data: Vec<f32>,
+    /// Wall-clock time the frame entered the pipeline.
+    t_in: Instant,
+}
+
+/// Per-group execution statistics.
+#[derive(Debug, Clone)]
+pub struct GroupStats {
+    pub stages: (usize, usize),
+    /// Total seconds spent executing stages (busy time).
+    pub busy: f64,
+    /// DRAM-streamed weight bytes per frame (8-bit model units).
+    pub dram_weight_bytes_8bit: u64,
+}
+
+/// End-to-end run report.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub network: String,
+    pub frames: u64,
+    pub wall: Duration,
+    /// Steady-state throughput (frames/s) over frames after the first.
+    pub fps: f64,
+    /// Mean per-frame latency (s).
+    pub latency: f64,
+    pub groups: Vec<GroupStats>,
+    /// Max |logits - golden| on frame 0 (all frames use the golden input).
+    pub max_abs_err: f32,
+    /// Eq-13 DRAM weight traffic per frame (8-bit bytes).
+    pub dram_weight_bytes_8bit: u64,
+}
+
+impl RunReport {
+    /// Coordinator overhead: wall time not attributable to the busiest
+    /// group (the paper's requirement that L3 not be the bottleneck).
+    pub fn coordinator_overhead(&self) -> f64 {
+        let busiest = self.groups.iter().map(|g| g.busy).fold(0.0, f64::max);
+        (self.wall.as_secs_f64() - busiest).max(0.0) / self.wall.as_secs_f64()
+    }
+}
+
+/// Partition `n` stages into `workers` contiguous groups balanced by a
+/// cost estimate (streamed bytes + FM bytes as a compute proxy).
+fn partition(manifest: &Manifest, workers: usize) -> Vec<(usize, usize)> {
+    let n = manifest.stages.len();
+    let w = workers.clamp(1, n);
+    let cost: Vec<u64> = manifest.stages.iter().map(|s| s.fm_bytes_8bit + s.weight_bytes_8bit).collect();
+    let total: u64 = cost.iter().sum();
+    let mut bounds = Vec::with_capacity(w);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    let mut target = total / w as u64;
+    for (i, c) in cost.iter().enumerate() {
+        acc += c;
+        let groups_left = w - bounds.len();
+        let stages_left = n - i - 1;
+        if (acc >= target && groups_left > 1 && stages_left >= groups_left - 1) || stages_left + 1 == groups_left {
+            bounds.push((start, i + 1));
+            start = i + 1;
+            acc = 0;
+            target = total / w as u64;
+        }
+    }
+    if start < n {
+        bounds.push((start, n));
+    }
+    bounds
+}
+
+/// Streaming coordinator: run `frames` frames of the golden input through
+/// the `short` network's artifact pipeline with `workers` CE groups.
+pub fn run_streaming(dir: PathBuf, short: &str, frames: u64, workers: usize) -> Result<RunReport> {
+    let manifest = Manifest::load(&dir, short)?;
+    let input = manifest.read_f32(&manifest.golden_input)?;
+    let golden = manifest.read_f32(&manifest.golden_logits)?;
+    let groups = partition(&manifest, workers);
+
+    // Channel chain with ping-pong depth 2.
+    let mut senders: Vec<mpsc::SyncSender<Frame>> = Vec::new();
+    let mut receivers: Vec<mpsc::Receiver<Frame>> = Vec::new();
+    for _ in 0..=groups.len() {
+        let (tx, rx) = mpsc::sync_channel::<Frame>(2);
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    // Stage compilation happens inside each worker; the barrier keeps it
+    // out of the timed window so throughput reflects the request path only.
+    let ready = Arc::new(Barrier::new(groups.len() + 1));
+    let mut handles = Vec::new();
+    let mut stat_rxs = Vec::new();
+    let mut rx_iter = receivers.into_iter();
+    for (g, &(s0, s1)) in groups.iter().enumerate() {
+        let rx = rx_iter.next().unwrap();
+        let tx = senders[g + 1].clone();
+        let (stat_tx, stat_rx) = mpsc::channel::<Result<GroupStats>>();
+        stat_rxs.push(stat_rx);
+        let dir = dir.clone();
+        let short = short.to_string();
+        let ready = ready.clone();
+        handles.push(std::thread::spawn(move || {
+            let run = || -> Result<GroupStats> {
+                // Each worker owns its own PJRT client + stage range.
+                let engine = Engine::load(&dir, &short)
+                    .with_context(|| format!("group {g}: loading stages {s0}..{s1}"))?;
+                ready.wait();
+                let mut busy = 0.0f64;
+                let dram: u64 = engine.stages[s0..s1]
+                    .iter()
+                    .filter(|s| s.spec.kind == StageKind::Wrce)
+                    .map(|s| s.spec.weight_bytes_8bit)
+                    .sum();
+                while let Ok(mut frame) = rx.recv() {
+                    let t0 = Instant::now();
+                    for stage in &engine.stages[s0..s1] {
+                        frame.data = stage.run(&frame.data)?;
+                    }
+                    busy += t0.elapsed().as_secs_f64();
+                    if tx.send(frame).is_err() {
+                        break;
+                    }
+                }
+                Ok(GroupStats { stages: (s0, s1), busy, dram_weight_bytes_8bit: dram })
+            };
+            let _ = stat_tx.send(run());
+        }));
+    }
+    // NOTE: each worker compiles the *full* engine for simplicity of
+    // artifact handling but executes only its range; compile cost is
+    // load-time only and excluded from throughput metrics.
+
+    // Source: frame 0..frames of the golden input (weights and input are
+    // fixed so every frame must reproduce the golden logits).
+    let src = senders[0].clone();
+    drop(senders);
+    ready.wait(); // all workers compiled and standing by
+    let t_start = Instant::now();
+    let producer = std::thread::spawn(move || {
+        for id in 0..frames {
+            let frame = Frame { id, data: input.clone(), t_in: Instant::now() };
+            if src.send(frame).is_err() {
+                break;
+            }
+        }
+    });
+
+    // Sink.
+    let sink = rx_iter.next().unwrap();
+    let mut completions: Vec<Instant> = Vec::with_capacity(frames as usize);
+    let mut latency_sum = 0.0f64;
+    let mut max_abs_err = 0.0f32;
+    for _ in 0..frames {
+        let frame = sink.recv().context("pipeline dropped before completing all frames")?;
+        latency_sum += frame.t_in.elapsed().as_secs_f64();
+        completions.push(Instant::now());
+        for (a, b) in frame.data.iter().zip(&golden) {
+            max_abs_err = max_abs_err.max((a - b).abs());
+        }
+        let _ = frame.id;
+    }
+    let wall = t_start.elapsed();
+    producer.join().ok();
+    drop(sink);
+    let mut group_stats = Vec::new();
+    for rx in stat_rxs {
+        group_stats.push(rx.recv().context("worker died")??);
+    }
+    for h in handles {
+        h.join().ok();
+    }
+
+    let fps = if completions.len() > 1 {
+        (completions.len() - 1) as f64
+            / (completions[completions.len() - 1] - completions[0]).as_secs_f64().max(1e-9)
+    } else {
+        1.0 / wall.as_secs_f64()
+    };
+    let dram = group_stats.iter().map(|g| g.dram_weight_bytes_8bit).sum();
+    Ok(RunReport {
+        network: manifest.network.clone(),
+        frames,
+        wall,
+        fps,
+        latency: latency_sum / frames as f64,
+        groups: group_stats,
+        max_abs_err,
+        dram_weight_bytes_8bit: dram,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_all_stages_contiguously() {
+        // Build a synthetic manifest shape via the real loader is overkill;
+        // exercise partition() through its public behaviour instead.
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("mbv2_manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir, "mbv2").unwrap();
+        for w in [1, 2, 3, 5, 100] {
+            let parts = partition(&m, w);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, m.stages.len());
+            for pair in parts.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0);
+            }
+            assert!(parts.len() <= w.min(m.stages.len()));
+            assert!(parts.iter().all(|(a, b)| a < b));
+        }
+    }
+}

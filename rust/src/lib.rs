@@ -1,0 +1,48 @@
+//! Reproduction of *"A High-Throughput FPGA Accelerator for Lightweight
+//! CNNs With Balanced Dataflow"* (Zhao et al., 2024) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate hosts every system the paper describes or depends on:
+//!
+//! * [`nets`] — the LWCNN zoo (MobileNetV1/V2, ShuffleNetV1/V2).
+//! * [`model`] — the analytical performance model (Eqs 1-14: MAC/access
+//!   costs, SRAM/DRAM models, throughput).
+//! * [`alloc`] — FGPM parallel spaces, Algorithm 1 (balanced memory
+//!   allocation) and Algorithm 2 (dynamic parallelism tuning), plus the
+//!   factorized-granularity baseline.
+//! * [`sim`] — the cycle-level streaming simulator (hybrid CEs, line
+//!   buffers with both padding schemes, order converter, SCB joins).
+//! * [`runtime`] — PJRT wrapper loading AOT-compiled HLO artifacts.
+//! * [`coordinator`] — the streaming inference pipeline chaining per-stage
+//!   executables with FM channels and a DRAM weight streamer.
+//! * [`report`] — paper-style table/figure renderers with the paper's
+//!   reference numbers side by side.
+
+pub mod alloc;
+pub mod coordinator;
+pub mod model;
+pub mod nets;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Clock frequency of the evaluated design (the paper implements at 200 MHz).
+pub const CLOCK_HZ: f64 = 200.0e6;
+
+/// ZC706 (XC7Z045) resource budget used throughout the paper's evaluation:
+/// 545 BRAM36K (75% of 545 -> the paper's 1.80 MB SRAM cap is 75% of the
+/// 545-BRAM budget), 900 DSP48E1 with a 95% empirical cap (855).
+pub mod zc706 {
+    /// Total BRAM36K blocks.
+    pub const BRAM36K: usize = 545;
+    /// SRAM byte budget at the paper's 75% utilization cap (1.80 MB).
+    pub const SRAM_BYTES: u64 = (545.0 * 0.75 * 36.0 * 1024.0 / 8.0) as u64;
+    /// Total DSP48E1 slices.
+    pub const DSP: usize = 900;
+    /// DSP cap at the paper's empirical 95% utilization target.
+    pub const DSP_BUDGET: usize = 855;
+    /// LUT / DFF totals (reported, not modelled).
+    pub const LUT: usize = 218_600;
+    pub const DFF: usize = 437_200;
+}

@@ -1,0 +1,188 @@
+//! `repro` — leader CLI of the balanced-dataflow LWCNN accelerator
+//! reproduction.
+//!
+//! Subcommands (hand-rolled parser; clap is not vendored offline):
+//!
+//! * `report <id>` — regenerate a paper table/figure
+//!   (`fig1|fig3|tab1|fig10|fig12|fig13|fig14|fig15|fig16|fig17|tab2|tab3|tab4|tab5|all`).
+//! * `allocate <net> [--sram-mb F] [--dsp N] [--factorized]` — run the
+//!   resource-aware methodology (Alg 1 + Alg 2) and print the design point.
+//! * `simulate <net> [--frames N] [--baseline]` — cycle-level simulation.
+//! * `infer <short> [--frames N]` — sequential PJRT inference vs golden.
+//! * `stream <short> [--frames N] [--workers N]` — the threaded streaming
+//!   coordinator (the end-to-end system path).
+
+use std::process::ExitCode;
+
+use repro::model::memory::CePlan;
+use repro::{alloc, coordinator, nets, report, runtime, sim, zc706, CLOCK_HZ};
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: repro <command>\n\
+         \x20 report <fig1|fig3|tab1|fig10|fig12|fig13|fig14|fig15|fig16|fig17|tab2|tab3|tab4|tab5|ablation|all>\n\
+         \x20 allocate <mbv1|mbv2|snv1|snv2> [--sram-mb F] [--dsp N] [--factorized]\n\
+         \x20 simulate <mbv1|mbv2|snv1|snv2> [--frames N] [--baseline]\n\
+         \x20 infer  <mbv2|snv2> [--frames N]\n\
+         \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
+    );
+    ExitCode::from(2)
+}
+
+fn flag_val(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { return usage() };
+    match cmd.as_str() {
+        "report" => {
+            let id = args.get(1).map(String::as_str).unwrap_or("all");
+            let out = match id {
+                "fig1" => report::fig1(),
+                "fig3" => {
+                    let mut s = String::new();
+                    for net in [nets::mobilenet_v2(), nets::shufflenet_v2()] {
+                        s.push_str(&report::fig3(&net));
+                    }
+                    s
+                }
+                "tab1" => report::tab1(),
+                "fig10" => report::fig10(),
+                "fig12" => nets::all_networks().iter().map(report::fig12).collect(),
+                "fig13" => report::fig13(),
+                "fig14" => report::fig14(),
+                "fig15" => nets::all_networks().iter().map(report::fig15).collect(),
+                "fig16" => report::fig16(),
+                "fig17" => report::fig17(),
+                "tab2" => report::tab2(),
+                "tab3" => report::tab3(),
+                "tab4" => report::tab4(),
+                "tab5" => report::tab5(),
+                "ablation" => report::ablation(),
+                "fig17layers" => report::fig17_layers(),
+                "all" => report::all(),
+                _ => return usage(),
+            };
+            println!("{out}");
+        }
+        "allocate" => {
+            let Some(net) = args.get(1).and_then(|n| nets::by_name(n)) else { return usage() };
+            let sram = flag_val(&args, "--sram-mb")
+                .and_then(|v| v.parse::<f64>().ok())
+                .map(|mb| (mb * 1024.0 * 1024.0) as u64)
+                .unwrap_or(zc706::SRAM_BYTES);
+            let dsp = flag_val(&args, "--dsp").and_then(|v| v.parse().ok()).unwrap_or(zc706::DSP_BUDGET);
+            let g = if args.iter().any(|a| a == "--factorized") {
+                alloc::Granularity::Factorized
+            } else {
+                alloc::Granularity::Fgpm
+            };
+            let d = alloc::design_point(&net, sram, dsp, g);
+            println!(
+                "{}: boundary={} (min-SRAM {}), SRAM {:.2} MB, DRAM {:.2} MB/frame",
+                net.name,
+                d.memory.boundary,
+                d.memory.boundary_min_sram,
+                d.sram_bytes as f64 / 1048576.0,
+                d.dram_bytes as f64 / 1048576.0
+            );
+            println!(
+                "PEs={} DSPs={} ({:.1}% of {}), T_max={} cyc, FPS={:.1}, GOPS={:.1}, theoretical MAC eff={:.2}%",
+                d.parallelism.pes,
+                d.parallelism.dsps,
+                d.parallelism.dsps as f64 / zc706::DSP as f64 * 100.0,
+                zc706::DSP,
+                d.performance.t_max,
+                d.performance.fps,
+                d.performance.gops,
+                d.performance.mac_efficiency * 100.0
+            );
+        }
+        "simulate" => {
+            let Some(net) = args.get(1).and_then(|n| nets::by_name(n)) else { return usage() };
+            let frames = flag_val(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(10);
+            let opts = if args.iter().any(|a| a == "--baseline") {
+                sim::SimOptions::baseline()
+            } else {
+                sim::SimOptions::optimized()
+            };
+            let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, alloc::Granularity::Fgpm);
+            let plan = CePlan { boundary: d.memory.boundary };
+            match sim::simulate(&net, &d.parallelism.allocs, &plan, &opts, frames) {
+                Ok(stats) => println!(
+                    "{}: period={:.0} cyc, FPS={:.1} @200MHz, actual MAC eff={:.2}%, latency={:.2} ms",
+                    net.name,
+                    stats.period_cycles,
+                    stats.fps(CLOCK_HZ),
+                    stats.mac_efficiency() * 100.0,
+                    stats.latency_ms(CLOCK_HZ)
+                ),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        "infer" => {
+            let Some(short) = args.get(1) else { return usage() };
+            let frames: u64 = flag_val(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(1);
+            let engine = match runtime::Engine::load(&runtime::artifacts_dir(), short) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let input = engine.manifest.read_f32(&engine.manifest.golden_input).unwrap();
+            let golden = engine.manifest.read_f32(&engine.manifest.golden_logits).unwrap();
+            let t0 = std::time::Instant::now();
+            let mut out = Vec::new();
+            for _ in 0..frames {
+                out = engine.infer(&input).unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let err = out.iter().zip(&golden).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            println!(
+                "{}: {} frames in {:.2}s ({:.2} FPS sequential), max |logits err| = {:.2e}",
+                engine.manifest.network,
+                frames,
+                dt,
+                frames as f64 / dt,
+                err
+            );
+        }
+        "stream" => {
+            let Some(short) = args.get(1) else { return usage() };
+            let frames: u64 = flag_val(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let workers: usize = flag_val(&args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(4);
+            match coordinator::run_streaming(runtime::artifacts_dir(), short, frames, workers) {
+                Ok(r) => {
+                    println!(
+                        "{}: {} frames, {:.2} FPS streaming, mean latency {:.1} ms, max |err| {:.2e}",
+                        r.network,
+                        r.frames,
+                        r.fps,
+                        r.latency * 1e3,
+                        r.max_abs_err
+                    );
+                    println!(
+                        "DRAM weight stream: {:.2} MB/frame (8-bit model); coordinator overhead {:.1}%",
+                        r.dram_weight_bytes_8bit as f64 / 1048576.0,
+                        r.coordinator_overhead() * 100.0
+                    );
+                    for g in &r.groups {
+                        println!("  group stages {:?}: busy {:.2}s", g.stages, g.busy);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        _ => return usage(),
+    }
+    ExitCode::SUCCESS
+}

@@ -1,0 +1,373 @@
+//! On-chip (SRAM) memory model — Eq (12) of §V-A and the buffer-size
+//! analysis of §III-B (Table I, Fig 5/6, Fig 13).
+//!
+//! All quantities are bytes at 8-bit precision. A "pixel" is one spatial
+//! position across all channels of the stream at that point (channel-first
+//! order in FRCEs), so a buffer of `p` pixels on a stream of `C` channels
+//! occupies `p * C` bytes.
+
+use crate::nets::{Layer, LayerKind, LayerSrc, Network, Scb};
+
+/// Which data-reuse scheme a CE's FM buffer follows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FmScheme {
+    /// The paper's fully-reused-feature-map scheme (§III-B, Fig 5): a
+    /// window's oldest pixel dies as soon as the window is computed, so a
+    /// `K x K` conv needs only `(K-1) * F + (K-1)` pixels.
+    FullyReusedFm,
+    /// The conventional line-based weight-reuse scheme of [14], [22], [28]:
+    /// processing granularity is a full line; `K + 1` lines are buffered
+    /// (K for the window + 1 for continuity).
+    LineBased,
+}
+
+/// CE type assignment (§III-B, Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CeKind {
+    /// Feature-map-reused CE: weights on-chip, minimal line buffer,
+    /// shortcut in an on-chip delayed buffer. Zero off-chip access.
+    Frce,
+    /// Weight-reused CE: weights streamed from DRAM once per frame,
+    /// ping-pong global FM buffer, shortcut stored off-chip.
+    Wrce,
+}
+
+/// A CE assignment for a whole network: layers `0..boundary` are FRCEs,
+/// the rest WRCEs ("the location of the group boundary", §V-A).
+#[derive(Debug, Clone)]
+pub struct CePlan {
+    pub boundary: usize,
+}
+
+impl CePlan {
+    pub fn kind(&self, layer_idx: usize) -> CeKind {
+        if layer_idx < self.boundary {
+            CeKind::Frce
+        } else {
+            CeKind::Wrce
+        }
+    }
+}
+
+/// Options of the SRAM model (shared by Figs 12/13 and the allocator).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModelCfg {
+    /// FM-buffer scheme used in FRCEs.
+    pub fm_scheme: FmScheme,
+    /// Dataflow-oriented line buffer (§IV-B): one extra line for
+    /// stride > 1 convolutions to avoid window bubbles.
+    pub stride_extra_line: bool,
+    /// Kernel-side parallelism assumed when sizing WRCE ping-pong weight
+    /// buffers (Alg 1 runs before parallelism is known; 1 reproduces the
+    /// paper's "relatively small" weight buffers).
+    pub wrce_pw: usize,
+}
+
+impl Default for MemoryModelCfg {
+    fn default() -> Self {
+        MemoryModelCfg { fm_scheme: FmScheme::FullyReusedFm, stride_extra_line: true, wrce_pw: 1 }
+    }
+}
+
+/// Line-buffer pixels required by a windowed layer under `scheme`
+/// (PWC/FC/Add need none under the fully-reused scheme).
+pub fn line_buffer_px(l: &Layer, scheme: FmScheme, stride_extra_line: bool) -> u64 {
+    let f = l.in_size as u64;
+    let k = l.k as u64;
+    if !l.kind.needs_line_buffer() || l.k <= 1 {
+        return match scheme {
+            FmScheme::FullyReusedFm => 0,
+            // Line granularity: ping-pong pair of lines even for 1x1 work.
+            FmScheme::LineBased => 2 * f,
+        };
+    }
+    match scheme {
+        FmScheme::FullyReusedFm => {
+            let base = (k - 1) * f + (k - 1);
+            if stride_extra_line && l.stride > 1 {
+                base + f
+            } else {
+                base
+            }
+        }
+        FmScheme::LineBased => (k + 1) * f,
+    }
+}
+
+/// Startup latency of a layer in *input pixels* before its first output can
+/// be produced — the pixel "lifetime" that the delayed shortcut buffer must
+/// absorb (§III-B, Fig 6).
+pub fn startup_latency_px(l: &Layer, scheme: FmScheme) -> u64 {
+    let f = l.in_size as u64;
+    let k = l.k as u64;
+    match scheme {
+        FmScheme::FullyReusedFm => {
+            if l.kind.needs_line_buffer() && l.k > 1 {
+                (k - 1) * f + k
+            } else {
+                1
+            }
+        }
+        FmScheme::LineBased => {
+            if l.kind.needs_line_buffer() && l.k > 1 {
+                k * f
+            } else {
+                f
+            }
+        }
+    }
+}
+
+/// Bytes of the delayed shortcut buffer for one SCB whose branch layers are
+/// all FRCEs: the accumulated main-branch startup latency, held at the
+/// snapshot's channel width (Fig 6: ~2 lines for the pw/dw/pw SCB under the
+/// fully-reused scheme vs >= 5 lines line-based).
+pub fn scb_delay_buffer_bytes(net: &Network, scb: &Scb, scheme: FmScheme) -> u64 {
+    let (_, ch) = scb.snapshot_shape(net);
+    let delay_px: u64 = net.layers[scb.from_layer..scb.join_layer]
+        .iter()
+        .map(|l| startup_latency_px(l, scheme))
+        .sum();
+    delay_px * ch as u64
+}
+
+/// Per-layer SRAM breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct LayerSram {
+    pub line_buffer: u64,
+    pub weight_rom: u64,
+    pub gfm_buffer: u64,
+    pub weight_buffer: u64,
+}
+
+impl LayerSram {
+    pub fn total(&self) -> u64 {
+        self.line_buffer + self.weight_rom + self.gfm_buffer + self.weight_buffer
+    }
+}
+
+/// SRAM contribution of one layer under a CE kind (Table I):
+///
+/// * FRCE: line buffer (fully-reused FM scheme) + on-chip weight ROM.
+/// * WRCE: ping-pong global FM buffer (`2 * F^2 * M`; a few lines of one
+///   channel for DWC since the FM arrives location-first) + ping-pong
+///   weight buffer sized by the kernel parallelism.
+pub fn layer_sram(l: &Layer, kind: CeKind, cfg: &MemoryModelCfg) -> LayerSram {
+    let mut s = LayerSram::default();
+    match kind {
+        CeKind::Frce => {
+            if l.kind.needs_line_buffer() || matches!(cfg.fm_scheme, FmScheme::LineBased) {
+                s.line_buffer = line_buffer_px(l, cfg.fm_scheme, cfg.stride_extra_line) * l.in_ch as u64;
+            }
+            s.weight_rom = l.weight_bytes();
+        }
+        CeKind::Wrce => {
+            match l.kind {
+                LayerKind::Dwc | LayerKind::MaxPool | LayerKind::AvgPool => {
+                    // Location-first order: a K-line window of a single
+                    // channel, ping-ponged.
+                    s.gfm_buffer = 2 * (l.k as u64) * l.in_size as u64;
+                }
+                LayerKind::Stc | LayerKind::Pwc | LayerKind::Fc => {
+                    s.gfm_buffer = 2 * l.in_fm_bytes();
+                }
+                // Data-movement layers and Adds keep no FM state in WRCEs
+                // (shortcuts live off-chip).
+                _ => {}
+            }
+            if l.kind.has_weights() {
+                let kernel_bytes = (l.k * l.k * l.in_ch / l.groups) as u64;
+                s.weight_buffer = 2 * kernel_bytes * cfg.wrce_pw as u64;
+            }
+        }
+    }
+    s
+}
+
+/// Full-network SRAM report under a CE plan (Eq 12).
+#[derive(Debug, Clone)]
+pub struct SramReport {
+    /// Per-layer breakdown, FRCE/WRCE assigned per the plan.
+    pub layers: Vec<LayerSram>,
+    /// Delayed-buffer bytes per SCB fully inside the FRCE region (SCBs
+    /// joining in the WRCE region are stored off-chip instead).
+    pub scb_buffers: u64,
+    /// Sum of line buffers (FRCE region).
+    pub line_buffer_total: u64,
+    /// Sum of on-chip weight ROMs (FRCE region).
+    pub weight_rom_total: u64,
+    /// Sum of WRCE global-FM + weight ping-pong buffers.
+    pub wrce_total: u64,
+}
+
+impl SramReport {
+    pub fn total(&self) -> u64 {
+        self.layers.iter().map(LayerSram::total).sum::<u64>() + self.scb_buffers
+    }
+}
+
+/// Whether an SCB's shortcut is held on-chip (join strictly inside the FRCE
+/// region) under `plan`.
+pub fn scb_on_chip(scb: &Scb, plan: &CePlan) -> bool {
+    scb.join_layer < plan.boundary
+}
+
+/// Tee branches (two-branch ShuffleNet units) buffer the teed stream like a
+/// shortcut; on-chip iff the consuming tee layer is an FRCE.
+fn tee_buffer_bytes(net: &Network, scheme: FmScheme) -> Vec<(usize, u64)> {
+    net.layers
+        .iter()
+        .enumerate()
+        .filter_map(|(i, l)| match l.src {
+            LayerSrc::Tee(j) => {
+                // The tee stream must be held while the layers between the
+                // tee point and this branch head produce their startup
+                // latency, bounded by one full snapshot.
+                let src = &net.layers[j];
+                let hold_px: u64 = net.layers[j..i].iter().map(|p| startup_latency_px(p, scheme)).sum();
+                let cap = (src.in_size * src.in_size) as u64;
+                Some((i, hold_px.min(cap) * src.in_ch as u64))
+            }
+            LayerSrc::Prev => None,
+        })
+        .collect()
+}
+
+/// Evaluate Eq (12) for `net` under `plan`.
+pub fn sram_report(net: &Network, plan: &CePlan, cfg: &MemoryModelCfg) -> SramReport {
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let (mut line_total, mut rom_total, mut wrce_total) = (0u64, 0u64, 0u64);
+    for (i, l) in net.layers.iter().enumerate() {
+        // FC weights are excluded from the on-chip comparison (Fig 13) by
+        // always streaming them (they sit at the very end of the WRCE
+        // region in every plan).
+        let s = layer_sram(l, plan.kind(i), cfg);
+        match plan.kind(i) {
+            CeKind::Frce => {
+                line_total += s.line_buffer;
+                rom_total += s.weight_rom;
+            }
+            CeKind::Wrce => wrce_total += s.total(),
+        }
+        layers.push(s);
+    }
+    let mut scb_buffers = 0u64;
+    for scb in &net.scbs {
+        if scb_on_chip(scb, plan) {
+            scb_buffers += scb_delay_buffer_bytes(net, scb, cfg.fm_scheme);
+        }
+    }
+    for (i, bytes) in tee_buffer_bytes(net, cfg.fm_scheme) {
+        if plan.kind(i) == CeKind::Frce {
+            scb_buffers += bytes;
+        }
+    }
+    SramReport { layers, scb_buffers, line_buffer_total: line_total, weight_rom_total: rom_total, wrce_total }
+}
+
+/// Marginal SRAM cost of deploying layer `i` as FRCE vs WRCE — the
+/// comparison Algorithm 1's first iteration performs per layer.
+pub fn frce_vs_wrce_cost(net: &Network, i: usize, cfg: &MemoryModelCfg) -> (u64, u64) {
+    let l = &net.layers[i];
+    let mut frce = layer_sram(l, CeKind::Frce, cfg).total();
+    // Moving the boundary past an SCB join pulls its delayed buffer on-chip;
+    // charge it to the join layer.
+    if let Some(scb) = net.scb_joining_at(i) {
+        frce += scb_delay_buffer_bytes(net, scb, cfg.fm_scheme);
+    }
+    if let LayerSrc::Tee(j) = l.src {
+        // The branch head pulls the tee hold buffer on-chip with it.
+        let hold_px: u64 = net.layers[j..i].iter().map(|p| startup_latency_px(p, cfg.fm_scheme)).sum();
+        let src = &net.layers[j];
+        let cap = (src.in_size * src.in_size) as u64;
+        frce += hold_px.min(cap) * src.in_ch as u64;
+    }
+    let wrce = layer_sram(l, CeKind::Wrce, cfg).total();
+    (frce, wrce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::mobilenet_v2;
+
+    /// Build the paper's Fig 6 SCB: pw -> dw3x3 -> pw over a 56x56x64 FM.
+    fn fig6_scb() -> (Network, Scb) {
+        let net = crate::nets::mobilenet_v2();
+        let scb = net.scbs[0].clone();
+        (net, scb)
+    }
+
+    #[test]
+    fn fully_reused_scheme_saves_a_line_vs_line_based() {
+        // "for a k x k kernel, the fully reused feature map scheme only
+        // needs to cache k-1 full lines plus k-1 pixels ... saves one line
+        // of buffer size even if the buffer lines increased to k full lines"
+        let net = mobilenet_v2();
+        let dwc = net.layers.iter().find(|l| l.kind == LayerKind::Dwc && l.stride == 1).unwrap();
+        let fr = line_buffer_px(dwc, FmScheme::FullyReusedFm, false);
+        let lb = line_buffer_px(dwc, FmScheme::LineBased, false);
+        let f = dwc.in_size as u64;
+        assert_eq!(fr, 2 * f + 2);
+        assert_eq!(lb, 4 * f);
+        assert!(lb - fr >= f); // at least one full line saved
+    }
+
+    #[test]
+    fn fig6_shortcut_buffer_ratio() {
+        // Fig 6: ~2 lines of shortcut delay (fully reused) vs >= 5 lines
+        // (line-based), a 69.23%-class reduction of the SCB FM buffer.
+        let (net, scb) = fig6_scb();
+        let f = net.layers[scb.from_layer].in_size as u64;
+        let ch = net.layers[scb.from_layer].in_ch as u64;
+        let fast = scb_delay_buffer_bytes(&net, &scb, FmScheme::FullyReusedFm);
+        let slow = scb_delay_buffer_bytes(&net, &scb, FmScheme::LineBased);
+        // fully reused: 1 + (2F + 3) + 1 px  ~= 2 lines
+        assert_eq!(fast, (2 * f + 5) * ch);
+        // line-based: F + 3F + F = 5 lines
+        assert_eq!(slow, 5 * f * ch);
+        let total_fast = fast + net.layers[scb.from_layer..scb.join_layer]
+            .iter()
+            .map(|l| line_buffer_px(l, FmScheme::FullyReusedFm, false) * l.in_ch as u64)
+            .sum::<u64>();
+        let total_slow = slow + net.layers[scb.from_layer..scb.join_layer]
+            .iter()
+            .map(|l| line_buffer_px(l, FmScheme::LineBased, false) * l.in_ch as u64)
+            .sum::<u64>();
+        let reduction = 1.0 - total_fast as f64 / total_slow as f64;
+        assert!(reduction > 0.5, "reduction {reduction}");
+    }
+
+    #[test]
+    fn boundary_zero_means_all_wrce() {
+        let net = mobilenet_v2();
+        let cfg = MemoryModelCfg::default();
+        let r = sram_report(&net, &CePlan { boundary: 0 }, &cfg);
+        assert_eq!(r.weight_rom_total, 0);
+        assert_eq!(r.line_buffer_total, 0);
+        assert_eq!(r.scb_buffers, 0);
+        assert!(r.wrce_total > 0);
+    }
+
+    #[test]
+    fn full_frce_holds_all_weights_on_chip() {
+        let net = mobilenet_v2();
+        let cfg = MemoryModelCfg::default();
+        let r = sram_report(&net, &CePlan { boundary: net.layers.len() }, &cfg);
+        assert_eq!(r.weight_rom_total, net.total_weight_bytes());
+        assert_eq!(r.wrce_total, 0);
+    }
+
+    #[test]
+    fn sram_total_is_monotone_in_components() {
+        let net = mobilenet_v2();
+        let cfg = MemoryModelCfg::default();
+        for b in [0, 10, 30, net.layers.len()] {
+            let r = sram_report(&net, &CePlan { boundary: b }, &cfg);
+            assert_eq!(
+                r.total(),
+                r.layers.iter().map(LayerSram::total).sum::<u64>() + r.scb_buffers
+            );
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Analytical performance model of the accelerator (§II-A, §V):
+//!
+//! * [`ops`] — Eqs (1)-(10): MAC/access costs of STC/DSC/SCB structures.
+//! * [`memory`] — Eq (12): SRAM footprint under a hybrid-CE plan, with the
+//!   fully-reused-FM vs line-based buffer schemes of §III-B.
+//! * [`dram`] — Eq (13): off-chip traffic of the proposed design and the
+//!   unified-/separated-CE baselines of Fig 14.
+//! * [`throughput`] — Eq (14): barrel-effect throughput, MAC efficiency,
+//!   DSP accounting with 2x 8-bit decomposition.
+
+pub mod dram;
+pub mod memory;
+pub mod ops;
+pub mod throughput;
+
+pub use dram::DramTraffic;
+pub use memory::{CeKind, CePlan, FmScheme, MemoryModelCfg, SramReport};
+pub use throughput::{LayerAlloc, Performance};
+
+/// Bytes of one BRAM36K block (36 Kbit).
+pub const BRAM36K_BYTES: u64 = 36 * 1024 / 8;
+
+/// Approximate BRAM36K blocks for a byte footprint (the paper notes "the
+/// SRAM footprint is only an approximate estimate based on the BRAM
+/// number").
+pub fn brams_for(bytes: u64) -> u64 {
+    bytes.div_ceil(BRAM36K_BYTES)
+}

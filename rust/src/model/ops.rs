@@ -1,0 +1,114 @@
+//! Operation counts and FM memory-access costs — Eqs (1)-(10) of §II-A.
+//!
+//! These closed forms are stated for an isolated structure (stride 1,
+//! padding included, `F x F` FMs, `M`/`N` channels, `K x K` kernels); the
+//! per-[`crate::nets::Layer`] generalizations live on the `Layer` methods.
+//! This module keeps the paper's exact formulas so tests can check both
+//! against each other, and provides the DSC/SCB-vs-STC ratio analysis the
+//! paper uses to motivate the architecture.
+
+/// MACs of a standard convolution (Eq 1): `F^2 * K^2 * M * N`.
+pub fn o_stc(f: u64, k: u64, m: u64, n: u64) -> u64 {
+    f * f * k * k * m * n
+}
+
+/// MACs of a depthwise-separable convolution (Eq 2):
+/// `O_DWC + O_PWC = F^2 * M * (K^2 + N)`.
+pub fn o_dsc(f: u64, k: u64, m: u64, n: u64) -> u64 {
+    f * f * m * (k * k + n)
+}
+
+/// MACs of a skip-connection block's element-wise additions (Eq 3):
+/// `M * F^2 / 2` — additions count as half MACs.
+pub fn o_scb(f: u64, m: u64) -> u64 {
+    m * f * f / 2
+}
+
+/// FM memory access of a standard convolution (Eq 4): `F^2 * (M + N)`.
+pub fn a_stc(f: u64, m: u64, n: u64) -> u64 {
+    f * f * (m + n)
+}
+
+/// FM memory access of a DSC (Eq 5): `F^2 * (3M + N)` — the extra `2M`
+/// term is the intermediate FM written by the DWC and read by the PWC.
+pub fn a_dsc(f: u64, m: u64, n: u64) -> u64 {
+    f * f * (3 * m + n)
+}
+
+/// FM memory access of an SCB (Eq 6): `M_in + M_mid + M_out = 3 * M * F^2`.
+pub fn a_scb(f: u64, m: u64) -> u64 {
+    3 * m * f * f
+}
+
+/// Eq (7): `RA_DSC = 1 + 2M / (M + N)`.
+pub fn ra_dsc(m: f64, n: f64) -> f64 {
+    1.0 + 2.0 * m / (m + n)
+}
+
+/// Eq (8): `RO_DSC = 1/N + 1/K^2`.
+pub fn ro_dsc(k: f64, n: f64) -> f64 {
+    1.0 / n + 1.0 / (k * k)
+}
+
+/// Eq (9): `RA_SCB = 3M / (M + N)`.
+pub fn ra_scb(m: f64, n: f64) -> f64 {
+    3.0 * m / (m + n)
+}
+
+/// Eq (10): `RO_SCB = 1 / (2 * N * K^2)`.
+pub fn ro_scb(k: f64, n: f64) -> f64 {
+    1.0 / (2.0 * n * k * k)
+}
+
+/// Operational intensity proxy: MACs per FM element accessed. The paper's
+/// motivation (Fig 2) is that DSC/SCB have far lower intensity than STC.
+pub fn intensity_ratio_dsc_vs_stc(f: u64, k: u64, m: u64, n: u64) -> f64 {
+    let dsc = o_dsc(f, k, m, n) as f64 / a_dsc(f, m, n) as f64;
+    let stc = o_stc(f, k, m, n) as f64 / a_stc(f, m, n) as f64;
+    dsc / stc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_are_consistent_with_closed_forms() {
+        for &(f, k, m, n) in &[(56u64, 3u64, 64u64, 128u64), (14, 3, 160, 160), (7, 3, 320, 1280)] {
+            let ra = a_dsc(f, m, n) as f64 / a_stc(f, m, n) as f64;
+            assert!((ra - ra_dsc(m as f64, n as f64)).abs() < 1e-12);
+            let ro = o_dsc(f, k, m, n) as f64 / o_stc(f, k, m, n) as f64;
+            assert!((ro - ro_dsc(k as f64, n as f64)).abs() < 1e-12);
+            let ra_s = a_scb(f, m) as f64 / a_stc(f, m, n) as f64;
+            assert!((ra_s - ra_scb(m as f64, n as f64)).abs() < 1e-12);
+            let ro_s = o_scb(f, m) as f64 / o_stc(f, k, m, n) as f64;
+            assert!((ro_s - ro_scb(k as f64, n as f64)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dsc_reduces_ops_but_increases_access() {
+        // "DSC reduces operations by nearly K^2 times compared to STC but
+        // increases FM access by about one time."
+        let (f, k, m, n) = (56, 3, 128, 128);
+        let ro = ro_dsc(k as f64, n as f64);
+        assert!(ro < 1.2 / (k * k) as f64 + 0.01);
+        let ra = ra_dsc(m as f64, n as f64);
+        assert!(ra > 1.9 && ra <= 2.0);
+    }
+
+    #[test]
+    fn scb_is_access_dominated() {
+        // SCB: ~1.5x the FM access of an STC for ~1/(2NK^2) of its MACs.
+        let (k, m, n) = (3.0, 64.0, 64.0);
+        assert!(ra_scb(m, n) == 1.5);
+        assert!(ro_scb(k, n) < 0.001);
+    }
+
+    #[test]
+    fn intensity_collapse() {
+        // The DSC's ops/byte is at least ~5x lower than the STC's at typical
+        // LWCNN shapes — the paper's core motivation.
+        assert!(intensity_ratio_dsc_vs_stc(56, 3, 64, 128) < 0.2);
+    }
+}

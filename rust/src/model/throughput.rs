@@ -1,0 +1,209 @@
+//! Theoretical throughput model — Eq (14) of §V-B.
+//!
+//! In the streaming architecture every CE computes one frame concurrently,
+//! so frame throughput is set by the slowest CE ("barrel effect", §IV-A):
+//! `Throughput = 2 * O_total / max_i T(i)` with
+//! `T(i) = ceil(N_i / P_w) * ceil(F_i^2 / P_f) * depth_i` cycles.
+
+use crate::nets::{Layer, LayerKind, Network};
+use crate::CLOCK_HZ;
+
+/// Parallelism assigned to one CE: `P_w` across kernels/output-channels,
+/// `P_f` across FM positions (§III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerAlloc {
+    pub pw: usize,
+    pub pf: usize,
+}
+
+impl LayerAlloc {
+    pub const ONE: LayerAlloc = LayerAlloc { pw: 1, pf: 1 };
+
+    /// MAC units (PEs) this allocation instantiates.
+    pub fn pes(&self) -> usize {
+        self.pw * self.pf
+    }
+}
+
+/// Compute cycles of layer `l` under allocation `a` — the denominator term
+/// of Eq (14). Non-MAC layers stream at one pixel-vector per cycle and are
+/// handled by LUT logic.
+pub fn layer_cycles(l: &Layer, a: LayerAlloc) -> u64 {
+    if l.kind.is_mac() {
+        let rounds_w = div_ceil(l.max_pw() as u64, a.pw as u64);
+        let rounds_f = div_ceil(l.max_pf() as u64, a.pf as u64);
+        rounds_w * rounds_f * l.reduction_depth()
+    } else {
+        // Add / pool / shuffle / split / concat: one output position per
+        // cycle through LUT datapaths.
+        l.out_positions() as u64
+    }
+}
+
+/// MACs including FGPM dimension padding: the PE array always computes
+/// `P_w * ceil(N/P_w) * P_f * ceil(F^2/P_f)` positions worth of work, and
+/// the excess is discarded (§IV-A). This is the `O(i)` of Eq (14)'s note.
+pub fn padded_macs(l: &Layer, a: LayerAlloc) -> u64 {
+    if !l.kind.is_mac() {
+        return l.macs();
+    }
+    let n_pad = a.pw as u64 * div_ceil(l.max_pw() as u64, a.pw as u64);
+    let f_pad = a.pf as u64 * div_ceil(l.max_pf() as u64, a.pf as u64);
+    n_pad * f_pad * l.reduction_depth()
+}
+
+/// DSP48E1 slices consumed by an allocation (§VI-A): two 8x8 multipliers
+/// per DSP everywhere except DWC layers, whose independent channels cannot
+/// share the pre-adder trick. Non-MAC layers use LUTs only.
+pub fn layer_dsps(l: &Layer, a: LayerAlloc) -> usize {
+    if !l.kind.is_mac() {
+        return 0;
+    }
+    match l.kind {
+        LayerKind::Dwc => a.pes(),
+        _ => a.pes().div_ceil(2),
+    }
+}
+
+/// Whole-design theoretical performance summary.
+#[derive(Debug, Clone)]
+pub struct Performance {
+    /// Bottleneck CE cycles per frame.
+    pub t_max: u64,
+    /// Index of the bottleneck layer.
+    pub bottleneck: usize,
+    /// Frames per second at the 200 MHz design clock.
+    pub fps: f64,
+    /// Giga-operations per second (1 MAC = 2 ops).
+    pub gops: f64,
+    /// Total MAC units instantiated.
+    pub total_pes: usize,
+    /// Total DSP slices after 2x 8-bit decomposition.
+    pub total_dsps: usize,
+    /// Theoretical MAC efficiency: achieved MACs/cycle over peak
+    /// MACs/cycle (= total PEs).
+    pub mac_efficiency: f64,
+    /// Latency of a single frame through the whole pipeline (ms): the sum
+    /// of per-CE startup plus the bottleneck period — reported like Table
+    /// III's batch-mode latency as `sum T(i)` / clock.
+    pub latency_ms: f64,
+}
+
+/// Evaluate Eq (14) for a full per-layer allocation.
+pub fn evaluate(net: &Network, allocs: &[LayerAlloc]) -> Performance {
+    assert_eq!(allocs.len(), net.layers.len());
+    let mut t_max = 0u64;
+    let mut bottleneck = 0usize;
+    let mut total_pes = 0usize;
+    let mut total_dsps = 0usize;
+    let mut latency_cycles = 0u64;
+    for (i, (l, &a)) in net.layers.iter().zip(allocs).enumerate() {
+        let t = layer_cycles(l, a);
+        latency_cycles += pipeline_fill_cycles(l, a);
+        if l.kind.is_mac() {
+            total_pes += a.pes();
+            total_dsps += layer_dsps(l, a);
+            if t > t_max {
+                t_max = t;
+                bottleneck = i;
+            }
+        }
+    }
+    let o_total = net.total_macs();
+    // SCB additions (Eq 3) count toward throughput (the paper's O_total)
+    // but execute on LUT adders, not the PE array — exclude them from the
+    // MAC-efficiency numerator so efficiency is bounded by 1.
+    let o_pe: u64 = net.layers.iter().filter(|l| l.kind.is_mac()).map(|l| l.macs()).sum();
+    let fps = CLOCK_HZ / t_max as f64;
+    let gops = o_total as f64 * 2.0 * fps / 1e9;
+    let mac_efficiency = o_pe as f64 / (t_max as f64 * total_pes as f64);
+    let latency_ms = (latency_cycles + t_max) as f64 / CLOCK_HZ * 1e3;
+    Performance { t_max, bottleneck, fps, gops, total_pes, total_dsps, mac_efficiency, latency_ms }
+}
+
+/// Cycles before a CE can forward its first outputs — used for the
+/// single-frame latency estimate. FRCE-style overlap means a windowed layer
+/// only waits for its first window; WRCE STC/PWC layers buffer their whole
+/// input FM, which dominates Table III's latency gap between the min-SRAM
+/// and ZC706 configurations.
+fn pipeline_fill_cycles(l: &Layer, _a: LayerAlloc) -> u64 {
+    if l.kind.needs_line_buffer() && l.k > 1 {
+        ((l.k - 1) * l.in_size + l.k) as u64
+    } else {
+        1
+    }
+}
+
+/// Peak GOPS of a PE budget at the design clock.
+pub fn peak_gops(total_pes: usize) -> f64 {
+    total_pes as f64 * 2.0 * CLOCK_HZ / 1e9
+}
+
+pub(crate) fn div_ceil(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::mobilenet_v2;
+
+    #[test]
+    fn unit_alloc_cycles_equal_macs() {
+        // With P_w = P_f = 1 and no padding, T(i) == O(i) for MAC layers
+        // (Alg 2's initialization: "making the initial computing time equal
+        // to the number of operations").
+        let net = mobilenet_v2();
+        for l in net.layers.iter().filter(|l| l.kind.is_mac() && l.groups == 1) {
+            assert_eq!(layer_cycles(l, LayerAlloc::ONE), l.macs());
+        }
+    }
+
+    #[test]
+    fn padding_never_reduces_work() {
+        let net = mobilenet_v2();
+        for l in net.layers.iter().filter(|l| l.kind.is_mac()) {
+            for &a in &[LayerAlloc { pw: 3, pf: 1 }, LayerAlloc { pw: 7, pf: 2 }, LayerAlloc { pw: 13, pf: 5 }] {
+                assert!(padded_macs(l, a) >= l.macs());
+                // Work/cycle never exceeds the PE count.
+                let t = layer_cycles(l, a);
+                assert!(padded_macs(l, a) <= t * a.pes() as u64 * l.groups as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn dwc_layers_get_no_dsp_decomposition() {
+        let net = mobilenet_v2();
+        let dwc = net.layers.iter().find(|l| l.kind == LayerKind::Dwc).unwrap();
+        let pwc = net.layers.iter().find(|l| l.kind == LayerKind::Pwc).unwrap();
+        let a = LayerAlloc { pw: 8, pf: 1 };
+        assert_eq!(layer_dsps(dwc, a), 8);
+        assert_eq!(layer_dsps(pwc, a), 4);
+    }
+
+    #[test]
+    fn efficiency_is_unity_for_perfectly_divisible_alloc() {
+        // A single-layer toy: allocate a divisor of every dimension ->
+        // efficiency exactly 1 for that layer.
+        let net = mobilenet_v2();
+        let l = &net.layers[0]; // stem STC: N=32, F=112^2
+        let a = LayerAlloc { pw: 32, pf: 16 };
+        let t = layer_cycles(l, a);
+        assert_eq!(t * a.pes() as u64, l.macs());
+    }
+
+    #[test]
+    fn evaluate_reports_consistent_totals() {
+        let net = mobilenet_v2();
+        let allocs = vec![LayerAlloc::ONE; net.layers.len()];
+        let p = evaluate(&net, &allocs);
+        assert!(p.mac_efficiency > 0.0 && p.mac_efficiency <= 1.0);
+        assert_eq!(
+            p.total_pes,
+            net.layers.iter().filter(|l| l.kind.is_mac()).count()
+        );
+        assert!(p.fps > 0.0);
+        assert!(p.latency_ms * 1e-3 >= 1.0 / p.fps);
+    }
+}

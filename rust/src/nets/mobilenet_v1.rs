@@ -1,0 +1,57 @@
+//! MobileNetV1 (1.0x, 224x224) — Howard et al. 2017.
+//!
+//! Stem STC + 13 depthwise-separable pairs + avgpool + FC. No SCBs: the
+//! network is the pure-DSC member of the zoo (Fig 1's DSC-only bar).
+
+use super::{NetBuilder, Network};
+
+pub fn mobilenet_v1() -> Network {
+    let mut b = NetBuilder::new("mobilenet_v1", 224, 3);
+
+    b.block("stem");
+    b.stc(32, 3, 2, 1); // 224 -> 112
+
+    // (pwc_out_channels, dwc_stride) for the 13 DSC pairs.
+    let pairs: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, (out, s)) in pairs.iter().enumerate() {
+        b.block(&format!("dsc{}", i + 1));
+        b.dwc(3, *s, 1);
+        b.pwc(*out);
+    }
+
+    b.block("head");
+    b.avgpool();
+    b.fc(1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::LayerKind;
+
+    #[test]
+    fn structure() {
+        let net = mobilenet_v1();
+        assert_eq!(net.layers.iter().filter(|l| l.kind == LayerKind::Dwc).count(), 13);
+        assert_eq!(net.layers.iter().filter(|l| l.kind == LayerKind::Pwc).count(), 13);
+        assert!(net.scbs.is_empty());
+        // Final spatial size before pooling is 7x7 x 1024.
+        let last_pwc = net.layers.iter().filter(|l| l.kind == LayerKind::Pwc).last().unwrap();
+        assert_eq!((last_pwc.out_size, last_pwc.out_ch), (7, 1024));
+    }
+}

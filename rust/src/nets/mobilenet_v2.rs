@@ -1,0 +1,81 @@
+//! MobileNetV2 (1.0x, 224x224) — Sandler et al. 2018.
+//!
+//! Stem STC + 17 inverted-residual bottlenecks (expansion t, output c,
+//! repeats n, stride s) + head PWC + avgpool + FC. Stride-1 repeats carry
+//! an identity SCB over the (expand, dwc, project) main branch — exactly
+//! the pw/dw/pw SCB the paper's Fig 6 timing analysis uses.
+
+use super::{NetBuilder, Network};
+
+/// Inverted-residual settings (t, c, n, s) from Table 2 of the paper.
+pub const BOTTLENECKS: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+pub fn mobilenet_v2() -> Network {
+    let mut b = NetBuilder::new("mobilenet_v2", 224, 3);
+
+    b.block("stem");
+    b.stc(32, 3, 2, 1); // 224 -> 112
+
+    let mut stage = 0;
+    for (t, c, n, s) in BOTTLENECKS {
+        stage += 1;
+        for rep in 0..n {
+            b.block(&format!("bneck{}_{}", stage, rep + 1));
+            let stride = if rep == 0 { s } else { 1 };
+            let in_ch = b.cur_ch();
+            let residual = stride == 1 && in_ch == c;
+            let branch_start = b.len();
+            if t != 1 {
+                b.pwc(in_ch * t);
+            }
+            b.dwc(3, stride, 1);
+            b.pwc(c);
+            if residual {
+                b.add_scb(branch_start);
+            }
+        }
+    }
+
+    b.block("head");
+    b.pwc(1280);
+    b.avgpool();
+    b.fc(1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::LayerKind;
+
+    #[test]
+    fn structure() {
+        let net = mobilenet_v2();
+        assert_eq!(net.layers.iter().filter(|l| l.kind == LayerKind::Dwc).count(), 17);
+        // 10 stride-1 repeats carry residual SCBs: (n-1) per stage with n>1
+        // and c unchanged: 1+2+3+2+2 = 10.
+        assert_eq!(net.scbs.len(), 10);
+        let last_pwc = net.layers.iter().filter(|l| l.kind == LayerKind::Pwc).last().unwrap();
+        assert_eq!((last_pwc.out_size, last_pwc.out_ch), (7, 1280));
+        // 7x7x320 -> 1280 head: input FM 15.7KB, weights 409.6KB (the "~26x"
+        // observation of Fig 3a).
+        assert_eq!(last_pwc.weight_bytes(), 320 * 1280);
+    }
+
+    #[test]
+    fn scb_branches_are_pw_dw_pw() {
+        let net = mobilenet_v2();
+        for scb in &net.scbs {
+            let kinds: Vec<_> = net.layers[scb.from_layer..scb.join_layer].iter().map(|l| l.kind).collect();
+            assert_eq!(kinds, vec![LayerKind::Pwc, LayerKind::Dwc, LayerKind::Pwc]);
+        }
+    }
+}

@@ -1,0 +1,649 @@
+//! Network zoo: layer-graph descriptions of the four LWCNNs the paper
+//! evaluates (MobileNetV1/V2, ShuffleNetV1/V2, all at 224x224 input,
+//! 8-bit weights/activations).
+//!
+//! These descriptions are the substrate every other subsystem consumes:
+//! the analytical performance model (Eqs 1-14), the allocation algorithms
+//! (Alg 1/2), the cycle-level streaming simulator, and the AOT stage plan.
+//!
+//! A [`Network`] is a linear streaming order of [`Layer`]s (one CE per
+//! layer, exactly as the paper's multi-CE architecture) plus a list of
+//! skip-connection blocks ([`Scb`]) expressed as (branch point -> join
+//! point) edges over layer indices.
+
+mod mobilenet_v1;
+mod mobilenet_v2;
+mod shufflenet_v1;
+mod shufflenet_v2;
+
+pub use mobilenet_v1::mobilenet_v1;
+pub use mobilenet_v2::mobilenet_v2;
+pub use shufflenet_v1::shufflenet_v1;
+pub use shufflenet_v2::shufflenet_v2;
+
+
+
+/// The kind of computation a layer (and therefore its dedicated CE) performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution, kernel `k`x`k` (paper: STC).
+    Stc,
+    /// Depthwise convolution (paper: DWC). `in_ch == out_ch`, no cross-channel
+    /// reduction.
+    Dwc,
+    /// Pointwise (1x1) convolution (paper: PWC). `groups > 1` models the
+    /// grouped 1x1 convolutions of ShuffleNetV1.
+    Pwc,
+    /// Element-wise shortcut addition closing an SCB (paper counts these as
+    /// half-MACs, Eq 3).
+    Add,
+    /// Max pooling (LUT-based on the FPGA: consumes no DSPs).
+    MaxPool,
+    /// Global average pooling.
+    AvgPool,
+    /// Fully connected layer (executed as a 1x1 PWC on a 1x1 FM; the paper
+    /// excludes FC weights from the on-chip memory comparison of Fig 13).
+    Fc,
+    /// Channel shuffle (ShuffleNet): pure data movement, no MACs, no DSPs.
+    Shuffle,
+    /// Channel split (ShuffleNetV2 stride-1 unit): routes half the channels
+    /// to the shortcut branch. Pure data movement.
+    Split,
+    /// Channel concatenation (ShuffleNet unit join). Pure data movement.
+    Concat,
+}
+
+impl LayerKind {
+    /// Layers that perform multiply-accumulates on the PE array.
+    pub fn is_mac(self) -> bool {
+        matches!(self, LayerKind::Stc | LayerKind::Dwc | LayerKind::Pwc | LayerKind::Fc)
+    }
+
+    /// Layers that hold trainable weights.
+    pub fn has_weights(self) -> bool {
+        matches!(self, LayerKind::Stc | LayerKind::Dwc | LayerKind::Pwc | LayerKind::Fc)
+    }
+
+    /// Whether the layer's window spans multiple spatial positions and thus
+    /// needs a line buffer in an FRCE (PWC/FC/Add do not: "the line buffer is
+    /// not required in PWC layers since they do not involve inter-pixel
+    /// correlation operations", Sec. V-A).
+    pub fn needs_line_buffer(self) -> bool {
+        matches!(self, LayerKind::Stc | LayerKind::Dwc | LayerKind::MaxPool | LayerKind::AvgPool)
+    }
+}
+
+/// Where a layer's input stream comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSrc {
+    /// The output of the previous layer in streaming order (the common case).
+    Prev,
+    /// A tee of the *input* of layer `i` — used for the second branch of
+    /// two-branch ShuffleNet units, whose both branches consume the unit
+    /// input. The teed stream is buffered exactly like an SCB shortcut.
+    Tee(usize),
+}
+
+/// One layer of the streaming order == one CE of the accelerator.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Human-readable name, unique within the network.
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input stream source (almost always [`LayerSrc::Prev`]).
+    pub src: LayerSrc,
+    /// Input channels (M in the paper's notation).
+    pub in_ch: usize,
+    /// Output channels (N).
+    pub out_ch: usize,
+    /// Input spatial size (square FMs: `in_size` x `in_size`).
+    pub in_size: usize,
+    /// Output spatial size.
+    pub out_size: usize,
+    /// Kernel size K (1 for PWC/Add/Shuffle/...).
+    pub k: usize,
+    pub stride: usize,
+    /// Symmetric padding on all sides.
+    pub pad: usize,
+    /// Grouped convolution group count (ShuffleNetV1 grouped PWC); 1 otherwise.
+    pub groups: usize,
+    /// Index of the block this layer belongs to (Fig 3 aggregates per block;
+    /// the AOT plan compiles one HLO artifact per block).
+    pub block: usize,
+    /// Name of the block, e.g. `"bottleneck3_1"`.
+    pub block_name: String,
+}
+
+impl Layer {
+    /// Spatial output positions.
+    pub fn out_positions(&self) -> usize {
+        self.out_size * self.out_size
+    }
+
+    /// Number of MAC operations of this layer (Eqs 1-3).
+    ///
+    /// * STC: `F_out^2 * K^2 * M * N` (Eq 1)
+    /// * DWC: `F_out^2 * K^2 * M`
+    /// * PWC (grouped): `F_out^2 * M/g * N`
+    /// * Add: `M * F^2 / 2` — additions count as half MACs (Eq 3)
+    /// * pooling/shuffle/split/concat: 0 (no PE array involvement)
+    pub fn macs(&self) -> u64 {
+        let f2 = self.out_positions() as u64;
+        let (m, n, k2) = (self.in_ch as u64, self.out_ch as u64, (self.k * self.k) as u64);
+        match self.kind {
+            LayerKind::Stc => f2 * k2 * m * n,
+            LayerKind::Dwc => f2 * k2 * m,
+            LayerKind::Pwc | LayerKind::Fc => f2 * m / self.groups as u64 * n,
+            LayerKind::Add => m * f2 / 2,
+            _ => 0,
+        }
+    }
+
+    /// Weight parameter count (bytes at 8-bit precision).
+    pub fn weight_bytes(&self) -> u64 {
+        let (m, n, k2) = (self.in_ch as u64, self.out_ch as u64, (self.k * self.k) as u64);
+        match self.kind {
+            LayerKind::Stc => k2 * m * n,
+            LayerKind::Dwc => k2 * m,
+            LayerKind::Pwc | LayerKind::Fc => k2 * m / self.groups as u64 * n,
+            _ => 0,
+        }
+    }
+
+    /// Input FM bytes (8-bit).
+    pub fn in_fm_bytes(&self) -> u64 {
+        (self.in_size * self.in_size * self.in_ch) as u64
+    }
+
+    /// Output FM bytes (8-bit).
+    pub fn out_fm_bytes(&self) -> u64 {
+        (self.out_size * self.out_size * self.out_ch) as u64
+    }
+
+    /// The reduction depth of one output activation: MACs a single PE chain
+    /// must accumulate (K^2*M for STC, K^2 for DWC, M/g for PWC).
+    pub fn reduction_depth(&self) -> u64 {
+        let k2 = (self.k * self.k) as u64;
+        match self.kind {
+            LayerKind::Stc => k2 * self.in_ch as u64,
+            LayerKind::Dwc => k2,
+            LayerKind::Pwc | LayerKind::Fc => self.in_ch as u64 / self.groups as u64,
+            LayerKind::Add => 1,
+            _ => 0,
+        }
+    }
+
+    /// Maximum kernel-dimension parallelism P_w (output channels; channels
+    /// for DWC).
+    pub fn max_pw(&self) -> usize {
+        match self.kind {
+            LayerKind::Dwc => self.in_ch,
+            _ => self.out_ch,
+        }
+    }
+
+    /// Maximum FM-dimension parallelism P_f (spatial output positions).
+    pub fn max_pf(&self) -> usize {
+        self.out_positions()
+    }
+}
+
+/// A skip-connection block: the FM snapshot buffered on the shortcut branch
+/// is the *output of layer `from_layer - 1`* (the stream entering the branch
+/// region; the network input when `from_layer == 0`), joined by the
+/// `Add`/`Concat` layer at index `join_layer`.
+#[derive(Debug, Clone)]
+pub struct Scb {
+    pub from_layer: usize,
+    pub join_layer: usize,
+}
+
+impl Scb {
+    /// Bytes of one frame's shortcut snapshot (8-bit activations).
+    pub fn snapshot_bytes(&self, net: &Network) -> u64 {
+        if self.from_layer == 0 {
+            (net.input_size * net.input_size * net.input_ch) as u64
+        } else {
+            net.layers[self.from_layer - 1].out_fm_bytes()
+        }
+    }
+
+    /// Spatial size / channels of the snapshot.
+    pub fn snapshot_shape(&self, net: &Network) -> (usize, usize) {
+        if self.from_layer == 0 {
+            (net.input_size, net.input_ch)
+        } else {
+            let l = &net.layers[self.from_layer - 1];
+            (l.out_size, l.out_ch)
+        }
+    }
+}
+
+/// A full network description in streaming (CE) order.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub input_size: usize,
+    pub input_ch: usize,
+    pub layers: Vec<Layer>,
+    pub scbs: Vec<Scb>,
+}
+
+impl Network {
+    /// Total MAC operations for one frame (the paper's `O_total`).
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Total weight bytes (8-bit), FC included.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(Layer::weight_bytes).sum()
+    }
+
+    /// MACs spent inside DSC structures (DWC + the PWC that follows) — used
+    /// by the Fig 1 structure-share report.
+    pub fn dsc_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(i, l)| {
+                l.kind == LayerKind::Dwc
+                    || (l.kind == LayerKind::Pwc
+                        && self.layers[..*i].iter().rev().find(|p| p.kind.is_mac() || p.kind == LayerKind::Add)
+                            .is_some_and(|p| p.kind == LayerKind::Dwc))
+            })
+            .map(|(_, l)| l.macs())
+            .sum()
+    }
+
+    /// Number of layers participating in DSC or SCB structures, as a
+    /// fraction of weight-bearing + Add layers (Fig 1 reports a structure
+    /// percentage).
+    pub fn dsc_scb_layer_fraction(&self) -> f64 {
+        let total = self.layers.iter().filter(|l| l.kind.is_mac() || l.kind == LayerKind::Add).count();
+        let mut in_structure = vec![false; self.layers.len()];
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.kind == LayerKind::Dwc {
+                in_structure[i] = true;
+                // The PWC following a DWC forms the DSC pair.
+                if let Some(j) = (i + 1..self.layers.len()).find(|&j| self.layers[j].kind.is_mac()) {
+                    if self.layers[j].kind == LayerKind::Pwc {
+                        in_structure[j] = true;
+                    }
+                }
+            }
+        }
+        for scb in &self.scbs {
+            for s in in_structure[scb.from_layer..=scb.join_layer].iter_mut() {
+                *s = true;
+            }
+        }
+        let hits = self
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(i, l)| (l.kind.is_mac() || l.kind == LayerKind::Add) && in_structure[*i])
+            .count();
+        hits as f64 / total as f64
+    }
+
+    /// Block count.
+    pub fn num_blocks(&self) -> usize {
+        self.layers.iter().map(|l| l.block + 1).max().unwrap_or(0)
+    }
+
+    /// Per-block (fm_bytes, weight_bytes) sums — Fig 3's series. The FM size
+    /// of a block is the output FM bytes of its last layer.
+    pub fn block_memory_profile(&self) -> Vec<(String, u64, u64)> {
+        let mut out: Vec<(String, u64, u64)> = Vec::new();
+        for l in &self.layers {
+            if out.len() <= l.block {
+                out.push((l.block_name.clone(), 0, 0));
+            }
+            let e = &mut out[l.block];
+            e.1 = l.out_fm_bytes(); // last layer of the block wins
+            e.2 += l.weight_bytes();
+        }
+        out
+    }
+
+    /// Find the SCB (if any) whose join layer is `idx`.
+    pub fn scb_joining_at(&self, idx: usize) -> Option<&Scb> {
+        self.scbs.iter().find(|s| s.join_layer == idx)
+    }
+
+    /// Validate structural invariants; used by tests and the builders.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.layers.iter().enumerate() {
+            let expect_out = match l.kind {
+                LayerKind::Fc | LayerKind::AvgPool => l.out_size,
+                _ => (l.in_size + 2 * l.pad - l.k) / l.stride + 1,
+            };
+            if l.kind != LayerKind::AvgPool && l.kind != LayerKind::Fc && l.out_size != expect_out {
+                return Err(format!(
+                    "{} layer {i} ({}): out_size {} != computed {}",
+                    self.name, l.name, l.out_size, expect_out
+                ));
+            }
+            if l.kind == LayerKind::Dwc && l.in_ch != l.out_ch {
+                return Err(format!("{}: DWC layer {} has in_ch != out_ch", self.name, l.name));
+            }
+            match l.src {
+                LayerSrc::Tee(j) => {
+                    if j >= i {
+                        return Err(format!("{}: layer {} tees forward layer {j}", self.name, l.name));
+                    }
+                    if self.layers[j].in_ch != l.in_ch {
+                        return Err(format!(
+                            "{}: tee channel mismatch {} ({}) -> {} ({})",
+                            self.name, self.layers[j].name, self.layers[j].in_ch, l.name, l.in_ch
+                        ));
+                    }
+                }
+                LayerSrc::Prev => {
+                    if i > 0 && !matches!(l.kind, LayerKind::Concat | LayerKind::Add) {
+                        let prev = &self.layers[i - 1];
+                        if prev.out_ch != l.in_ch {
+                            return Err(format!(
+                                "{}: channel mismatch {} ({}) -> {} ({})",
+                                self.name, prev.name, prev.out_ch, l.name, l.in_ch
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for scb in &self.scbs {
+            if scb.from_layer >= scb.join_layer || scb.join_layer >= self.layers.len() {
+                return Err(format!("{}: bad SCB {:?}", self.name, scb));
+            }
+            let join = &self.layers[scb.join_layer];
+            if !matches!(join.kind, LayerKind::Add | LayerKind::Concat) {
+                return Err(format!("{}: SCB join {} is not Add/Concat", self.name, join.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder used by the per-network constructors.
+pub(crate) struct NetBuilder {
+    name: String,
+    layers: Vec<Layer>,
+    scbs: Vec<Scb>,
+    cur_ch: usize,
+    cur_size: usize,
+    input_size: usize,
+    input_ch: usize,
+    block: usize,
+    block_name: String,
+    pending_src: Option<LayerSrc>,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str, input_size: usize, input_ch: usize) -> Self {
+        NetBuilder {
+            name: name.to_string(),
+            layers: Vec::new(),
+            scbs: Vec::new(),
+            cur_ch: input_ch,
+            cur_size: input_size,
+            input_size,
+            input_ch,
+            block: 0,
+            block_name: String::new(),
+            pending_src: None,
+        }
+    }
+
+    pub fn block(&mut self, name: &str) -> &mut Self {
+        if !self.layers.is_empty() || !self.block_name.is_empty() {
+            self.block += if self.block_name.is_empty() { 0 } else { 1 };
+        }
+        self.block_name = name.to_string();
+        self
+    }
+
+    pub fn cur_ch(&self) -> usize {
+        self.cur_ch
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Redirect the next pushed layer's input to the tee of layer `i`'s
+    /// input (second branch of a two-branch unit). The builder's current
+    /// channel/size state is rewound to that tee point.
+    pub fn from_tee(&mut self, i: usize) -> &mut Self {
+        self.pending_src = Some(LayerSrc::Tee(i));
+        self.cur_ch = self.layers[i].in_ch;
+        self.cur_size = self.layers[i].in_size;
+        self
+    }
+
+    fn push(&mut self, kind: LayerKind, out_ch: usize, k: usize, stride: usize, pad: usize, groups: usize) -> usize {
+        let out_size = match kind {
+            LayerKind::AvgPool => 1,
+            LayerKind::Fc => 1,
+            _ => (self.cur_size + 2 * pad - k) / stride + 1,
+        };
+        let name = format!("{}{}_{}", self.block_name, "", self.layers.len());
+        let src = self.pending_src.take().unwrap_or(LayerSrc::Prev);
+        self.layers.push(Layer {
+            name,
+            kind,
+            src,
+            in_ch: self.cur_ch,
+            out_ch,
+            in_size: self.cur_size,
+            out_size,
+            k,
+            stride,
+            pad,
+            groups,
+            block: self.block,
+            block_name: self.block_name.clone(),
+        });
+        self.cur_ch = out_ch;
+        self.cur_size = out_size;
+        self.layers.len() - 1
+    }
+
+    pub fn stc(&mut self, out_ch: usize, k: usize, stride: usize, pad: usize) -> usize {
+        self.push(LayerKind::Stc, out_ch, k, stride, pad, 1)
+    }
+
+    pub fn dwc(&mut self, k: usize, stride: usize, pad: usize) -> usize {
+        let ch = self.cur_ch;
+        self.push(LayerKind::Dwc, ch, k, stride, pad, 1)
+    }
+
+    pub fn pwc(&mut self, out_ch: usize) -> usize {
+        self.push(LayerKind::Pwc, out_ch, 1, 1, 0, 1)
+    }
+
+    pub fn gpwc(&mut self, out_ch: usize, groups: usize) -> usize {
+        self.push(LayerKind::Pwc, out_ch, 1, 1, 0, groups)
+    }
+
+    pub fn maxpool(&mut self, k: usize, stride: usize, pad: usize) -> usize {
+        let ch = self.cur_ch;
+        self.push(LayerKind::MaxPool, ch, k, stride, pad, 1)
+    }
+
+    pub fn avgpool(&mut self) -> usize {
+        let ch = self.cur_ch;
+        let k = self.cur_size;
+        self.push(LayerKind::AvgPool, ch, k, 1, 0, 1)
+    }
+
+    /// Spatial average pooling with an explicit window (ShuffleNetV1
+    /// stride-2 shortcut branch).
+    pub fn avgpool_spatial(&mut self, k: usize, stride: usize, pad: usize) -> usize {
+        let ch = self.cur_ch;
+        let out_size = (self.cur_size + 2 * pad - k) / stride + 1;
+        let idx = self.push(LayerKind::MaxPool, ch, k, stride, pad, 1);
+        // Reuse the windowed-pool sizing but tag the kind correctly.
+        self.layers[idx].kind = LayerKind::AvgPool;
+        self.layers[idx].out_size = out_size;
+        self.cur_size = out_size;
+        idx
+    }
+
+    pub fn fc(&mut self, out: usize) -> usize {
+        self.push(LayerKind::Fc, out, 1, 1, 0, 1)
+    }
+
+    pub fn shuffle(&mut self) -> usize {
+        let ch = self.cur_ch;
+        self.push(LayerKind::Shuffle, ch, 1, 1, 0, 1)
+    }
+
+    /// Channel split: continues on `keep` channels (the branch that flows
+    /// through subsequent layers); the complementary half is re-joined by a
+    /// later `concat_scb`.
+    pub fn split(&mut self, keep: usize) -> usize {
+        self.push(LayerKind::Split, keep, 1, 1, 0, 1)
+    }
+
+    /// Element-wise SCB join with the FM snapshot taken at `from_layer`'s
+    /// input.
+    pub fn add_scb(&mut self, from_layer: usize) -> usize {
+        let ch = self.cur_ch;
+        let idx = self.push(LayerKind::Add, ch, 1, 1, 0, 1);
+        self.scbs.push(Scb { from_layer, join_layer: idx });
+        idx
+    }
+
+    /// Concat join (ShuffleNet): output channels = through + shortcut.
+    pub fn concat_scb(&mut self, from_layer: usize, shortcut_ch: usize) -> usize {
+        let ch = self.cur_ch + shortcut_ch;
+        let idx = self.push(LayerKind::Concat, ch, 1, 1, 0, 1);
+        self.scbs.push(Scb { from_layer, join_layer: idx });
+        idx
+    }
+
+    pub fn finish(self) -> Network {
+        let net = Network {
+            name: self.name,
+            input_size: self.input_size,
+            input_ch: self.input_ch,
+            layers: self.layers,
+            scbs: self.scbs,
+        };
+        if let Err(e) = net.validate() {
+            panic!("invalid network: {e}");
+        }
+        net
+    }
+}
+
+/// All four zoo networks, by canonical name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "mobilenet_v1" | "mbv1" => Some(mobilenet_v1()),
+        "mobilenet_v2" | "mbv2" => Some(mobilenet_v2()),
+        "shufflenet_v1" | "snv1" => Some(shufflenet_v1()),
+        "shufflenet_v2" | "snv2" => Some(shufflenet_v2()),
+        _ => None,
+    }
+}
+
+/// The four zoo networks in the paper's order.
+pub fn all_networks() -> Vec<Network> {
+    vec![mobilenet_v1(), mobilenet_v2(), shufflenet_v1(), shufflenet_v2()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_nets_validate() {
+        for net in all_networks() {
+            net.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn mac_totals_match_literature() {
+        // Published multiply-accumulate counts (224x224): MobileNetV1 ~569M,
+        // MobileNetV2 ~300M, ShuffleNetV1(g3) ~140M, ShuffleNetV2(1x) ~146M.
+        let tol = |macs: u64, expect: f64| {
+            let m = macs as f64 / 1e6;
+            assert!((m - expect).abs() / expect < 0.10, "got {m:.1}M expected {expect}M");
+        };
+        tol(mobilenet_v1().total_macs(), 569.0);
+        tol(mobilenet_v2().total_macs(), 300.0);
+        tol(shufflenet_v1().total_macs(), 140.0);
+        tol(shufflenet_v2().total_macs(), 146.0);
+    }
+
+    #[test]
+    fn param_totals_match_literature() {
+        // Parameters: MBv1 ~4.2M, MBv2 ~3.4M, SNv1(g3) ~1.9M (conv+fc, no BN),
+        // SNv2 1x ~2.3M.
+        let tol = |bytes: u64, expect: f64, rel: f64| {
+            let m = bytes as f64 / 1e6;
+            assert!((m - expect).abs() / expect < rel, "got {m:.2}M expected {expect}M");
+        };
+        tol(mobilenet_v1().total_weight_bytes(), 4.2, 0.08);
+        tol(mobilenet_v2().total_weight_bytes(), 3.4, 0.08);
+        tol(shufflenet_v1().total_weight_bytes(), 1.9, 0.25);
+        tol(shufflenet_v2().total_weight_bytes(), 2.3, 0.15);
+    }
+
+    #[test]
+    fn first_layer_fm_vs_weights_fig3() {
+        // Fig 3(a): the first STC layer of MobileNetV2 produces ~400KB of FMs
+        // while using merely 896 parameters (864 weights + bias; we count
+        // weights only).
+        let net = mobilenet_v2();
+        let first = &net.layers[0];
+        assert_eq!(first.kind, LayerKind::Stc);
+        assert_eq!(first.out_fm_bytes(), 112 * 112 * 32); // ~401KB
+        assert_eq!(first.weight_bytes(), 3 * 3 * 3 * 32); // 864
+        // "the weight size in the last PWC layer is almost 26x the input
+        // activations" — last PWC: 320->1280 at 7x7.
+        let last_pwc = net
+            .layers
+            .iter()
+            .rev()
+            .find(|l| l.kind == LayerKind::Pwc)
+            .unwrap();
+        let ratio = last_pwc.weight_bytes() as f64 / last_pwc.in_fm_bytes() as f64;
+        assert!(ratio > 20.0 && ratio < 30.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn dsc_scb_share_fig1() {
+        // Fig 1: DSC+SCB structures dominate LWCNN layer composition.
+        for net in all_networks() {
+            let frac = net.dsc_scb_layer_fraction();
+            assert!(frac > 0.6, "{}: structure fraction {frac}", net.name);
+        }
+    }
+
+    #[test]
+    fn scb_joins_have_matching_channels() {
+        for net in all_networks() {
+            for scb in &net.scbs {
+                let join = &net.layers[scb.join_layer];
+                let (size, ch) = scb.snapshot_shape(&net);
+                if join.kind == LayerKind::Add {
+                    assert_eq!(ch, join.out_ch, "{} scb {:?}", net.name, scb);
+                    assert_eq!(size, join.out_size, "{} scb {:?}", net.name, scb);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        for (a, b) in [("mbv1", "mobilenet_v1"), ("mbv2", "mobilenet_v2"), ("snv1", "shufflenet_v1"), ("snv2", "shufflenet_v2")] {
+            assert_eq!(by_name(a).unwrap().name, by_name(b).unwrap().name);
+        }
+        assert!(by_name("resnet50").is_none());
+    }
+}

@@ -1,0 +1,94 @@
+//! ShuffleNetV1 (1.0x, g = 3, 224x224) — Zhang et al. 2018.
+//!
+//! Stem STC + maxpool, then three stages of shuffle units built from
+//! grouped PWCs, channel shuffle, and a 3x3 DWC. Stride-1 units close with
+//! an element-wise Add SCB; stride-2 units concatenate the main branch
+//! with a 3x3/s2 average-pooled shortcut (modelled as a teed AvgPool layer
+//! feeding the Concat join).
+
+use super::{NetBuilder, Network};
+
+const GROUPS: usize = 3;
+/// (output channels, repeats) per stage for g = 3.
+const STAGES: [(usize, usize); 3] = [(240, 4), (480, 8), (960, 4)];
+
+pub fn shufflenet_v1() -> Network {
+    let mut b = NetBuilder::new("shufflenet_v1", 224, 3);
+
+    b.block("stem");
+    b.stc(24, 3, 2, 1); // 224 -> 112
+    b.maxpool(3, 2, 1); // 112 -> 56
+
+    for (stage_idx, (out_ch, repeats)) in STAGES.iter().enumerate() {
+        let stage = stage_idx + 2;
+        for rep in 0..*repeats {
+            b.block(&format!("stage{}_{}", stage, rep + 1));
+            let in_ch = b.cur_ch();
+            let mid = out_ch / 4;
+            if rep == 0 {
+                // Stride-2 unit: main branch narrows to out_ch - in_ch so the
+                // pooled shortcut concat restores out_ch.
+                let branch_start = b.len();
+                // First grouped PWC of stage2 unit1 operates on 24 input
+                // channels and is conventionally ungrouped.
+                let g1 = if stage == 2 { 1 } else { GROUPS };
+                b.gpwc(mid, g1);
+                b.shuffle();
+                b.dwc(3, 2, 1);
+                b.gpwc(out_ch - in_ch, GROUPS);
+                // Shortcut branch: 3x3/s2 avgpool on the unit input; the
+                // main branch output is buffered (snapshot) until the pooled
+                // stream joins it at the Concat.
+                b.from_tee(branch_start);
+                let ap = b.avgpool_spatial(3, 2, 1);
+                b.concat_scb(ap, out_ch - in_ch);
+            } else {
+                let branch_start = b.len();
+                b.gpwc(mid, GROUPS);
+                b.shuffle();
+                b.dwc(3, 1, 1);
+                b.gpwc(*out_ch, GROUPS);
+                b.add_scb(branch_start);
+            }
+        }
+    }
+
+    b.block("head");
+    b.avgpool();
+    b.fc(1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::LayerKind;
+
+    #[test]
+    fn structure() {
+        let net = shufflenet_v1();
+        let units: usize = STAGES.iter().map(|(_, r)| r).sum();
+        assert_eq!(units, 16);
+        assert_eq!(net.layers.iter().filter(|l| l.kind == LayerKind::Dwc).count(), units);
+        // 13 stride-1 Add SCBs + 3 stride-2 Concat SCBs.
+        assert_eq!(net.scbs.len(), 16);
+        assert_eq!(
+            net.layers.iter().filter(|l| l.kind == LayerKind::Concat).count(),
+            3
+        );
+        let last_mac = net.layers.iter().filter(|l| l.kind == LayerKind::Pwc).last().unwrap();
+        assert_eq!(last_mac.out_size, 7);
+    }
+
+    #[test]
+    fn grouped_pwc_reduces_macs() {
+        let net = shufflenet_v1();
+        let g = net
+            .layers
+            .iter()
+            .find(|l| l.kind == LayerKind::Pwc && l.groups == GROUPS)
+            .unwrap();
+        let full = g.out_positions() as u64 * g.in_ch as u64 * g.out_ch as u64;
+        assert_eq!(g.macs(), full / GROUPS as u64);
+    }
+}

@@ -1,0 +1,99 @@
+//! ShuffleNetV2 (1.0x, 224x224) — Ma et al. 2018.
+//!
+//! Stem STC + maxpool, three stages of units, head PWC + avgpool + FC.
+//!
+//! * Stride-1 unit: channel split (half to each branch); the through branch
+//!   runs pwc -> dwc3x3 -> pwc; Concat rejoins; channel shuffle follows.
+//! * Stride-2 unit: both branches consume the unit input — branch A
+//!   (shortcut-side) is dwc3x3/s2 -> pwc, branch B is pwc -> dwc3x3/s2 ->
+//!   pwc; Concat doubles the channels; shuffle follows. Branch B is
+//!   expressed with a [`LayerSrc::Tee`] back to the unit input, and branch
+//!   A's output is the buffered SCB snapshot.
+
+use super::{NetBuilder, Network};
+
+/// (output channels, repeats) per stage for the 1.0x model.
+const STAGES: [(usize, usize); 3] = [(116, 4), (232, 8), (464, 4)];
+
+pub fn shufflenet_v2() -> Network {
+    let mut b = NetBuilder::new("shufflenet_v2", 224, 3);
+
+    b.block("stem");
+    b.stc(24, 3, 2, 1); // 224 -> 112
+    b.maxpool(3, 2, 1); // 112 -> 56
+
+    for (stage_idx, (out_ch, repeats)) in STAGES.iter().enumerate() {
+        let stage = stage_idx + 2;
+        let half = out_ch / 2;
+        for rep in 0..*repeats {
+            b.block(&format!("stage{}_{}", stage, rep + 1));
+            if rep == 0 {
+                // Stride-2 unit. Branch A (shortcut side) first in stream
+                // order; its output is buffered while branch B computes.
+                let unit_start = b.len();
+                b.dwc(3, 2, 1);
+                b.pwc(half);
+                // Branch B re-reads the unit input through a tee. The SCB
+                // snapshot (buffered stream) is branch A's output, i.e. the
+                // output of the layer preceding the first tee layer.
+                b.from_tee(unit_start);
+                let b_first = b.pwc(half);
+                b.dwc(3, 2, 1);
+                b.pwc(half);
+                b.concat_scb(b_first, half);
+                b.shuffle();
+            } else {
+                // Stride-1 unit: split, through-branch, concat, shuffle.
+                b.split(half);
+                let branch_start = b.len();
+                b.pwc(half);
+                b.dwc(3, 1, 1);
+                b.pwc(half);
+                b.concat_scb(branch_start, half);
+                b.shuffle();
+            }
+        }
+    }
+
+    b.block("head");
+    b.pwc(1024);
+    b.avgpool();
+    b.fc(1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{LayerKind, LayerSrc};
+
+    #[test]
+    fn structure() {
+        let net = shufflenet_v2();
+        // 16 units: stride-2 units have 2 DWCs, stride-1 have 1 -> 3*2 + 13 = 19.
+        assert_eq!(net.layers.iter().filter(|l| l.kind == LayerKind::Dwc).count(), 19);
+        assert_eq!(net.layers.iter().filter(|l| l.kind == LayerKind::Concat).count(), 16);
+        assert_eq!(net.layers.iter().filter(|l| l.src != LayerSrc::Prev).count(), 3);
+        let head = net.layers.iter().filter(|l| l.kind == LayerKind::Pwc).last().unwrap();
+        assert_eq!((head.out_size, head.out_ch), (7, 1024));
+    }
+
+    #[test]
+    fn stage_channel_progression() {
+        let net = shufflenet_v2();
+        // After each stage's last shuffle the channel width matches STAGES.
+        let shuffles: Vec<_> = net.layers.iter().filter(|l| l.kind == LayerKind::Shuffle).collect();
+        assert_eq!(shuffles[3].out_ch, 116);
+        assert_eq!(shuffles[11].out_ch, 232);
+        assert_eq!(shuffles[15].out_ch, 464);
+    }
+
+    #[test]
+    fn concat_restores_width() {
+        let net = shufflenet_v2();
+        for l in net.layers.iter().filter(|l| l.kind == LayerKind::Concat) {
+            assert_eq!(l.out_ch % 2, 0);
+            assert_eq!(l.in_ch + l.out_ch / 2, l.out_ch);
+        }
+    }
+}

@@ -1,0 +1,761 @@
+//! Paper-style table/figure renderers.
+//!
+//! Each `figNN`/`tabN` function regenerates one table or figure of the
+//! paper's evaluation as text (rows of the same series the paper plots),
+//! printing the paper's reference numbers from [`paper_ref`] next to the
+//! measured values. `cargo run --release -- report <id>` renders one;
+//! `report all` renders everything (that output is the backbone of
+//! EXPERIMENTS.md).
+
+pub mod paper_ref;
+
+use std::fmt::Write as _;
+
+use crate::alloc::{
+    self,
+    parallelism::{dynamic_parallelism_tuning_with, BudgetKind},
+    Granularity,
+};
+use crate::model::memory::{self, CeKind, CePlan, FmScheme, MemoryModelCfg};
+use crate::model::{dram, throughput};
+use crate::nets::{self, LayerKind, Network};
+use crate::sim::{self, SimOptions};
+use crate::{zc706, CLOCK_HZ};
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn header(s: &mut String, title: &str) {
+    let _ = writeln!(s, "\n=== {title} ===");
+}
+
+/// Fig 1 — share of DSC/SCB structure in the zoo LWCNNs.
+pub fn fig1() -> String {
+    let mut s = String::new();
+    header(&mut s, "Fig 1: DSC/SCB structure share");
+    let _ = writeln!(s, "{:16} {:>14} {:>14} {:>14}", "network", "DSC+SCB layers", "DSC MACs", "SCB count");
+    for net in nets::all_networks() {
+        let frac = net.dsc_scb_layer_fraction();
+        let dsc_macs = net.dsc_macs() as f64 / net.total_macs() as f64;
+        let _ = writeln!(
+            s,
+            "{:16} {:>13.1}% {:>13.1}% {:>14}",
+            net.name,
+            frac * 100.0,
+            dsc_macs * 100.0,
+            net.scbs.len()
+        );
+    }
+    let _ = writeln!(s, "(paper: DSC+SCB dominate every LWCNN's structure)");
+    s
+}
+
+/// Fig 3 — per-block FM vs weight memory (KB, 8-bit, 224x224).
+pub fn fig3(net: &Network) -> String {
+    let mut s = String::new();
+    header(&mut s, &format!("Fig 3: FM vs weight distribution — {}", net.name));
+    let _ = writeln!(s, "{:16} {:>12} {:>12}", "block", "FM KB", "weight KB");
+    for (name, fm, w) in net.block_memory_profile() {
+        let _ = writeln!(s, "{:16} {:>12.1} {:>12.1}", name, fm as f64 / 1024.0, w as f64 / 1024.0);
+    }
+    s
+}
+
+/// Table I — FRCE vs WRCE analytical comparison on a representative layer.
+pub fn tab1() -> String {
+    let net = nets::mobilenet_v2();
+    let dwc = net.layers.iter().find(|l| l.kind == LayerKind::Dwc).unwrap();
+    let (k, f) = (dwc.k as u64, dwc.in_size as u64);
+    let mut s = String::new();
+    header(&mut s, "Table I: FRCE vs WRCE (3x3 DWC @112x112 example)");
+    let _ = writeln!(s, "{:28} {:>22} {:>22}", "feature", "FRCE", "WRCE");
+    let _ = writeln!(s, "{:28} {:>22} {:>22}", "reuse scheme", "fully FM reuse", "fully weight reuse");
+    let _ = writeln!(
+        s,
+        "{:28} {:>22} {:>22}",
+        "min FM buffer (px)",
+        format!("(K-1)F+K-1 = {}", (k - 1) * f + k - 1),
+        "2F^2M (GFM)".to_string(),
+    );
+    let _ = writeln!(s, "{:28} {:>22} {:>22}", "weight storage", "on-chip", "off-chip");
+    let _ = writeln!(s, "{:28} {:>22} {:>22}", "weight reads/frame", format!("F^2 = {}", f * f), "1");
+    let _ = writeln!(s, "{:28} {:>22} {:>22}", "shortcut", "delayed buffer", "off-chip");
+    let _ = writeln!(s, "{:28} {:>22} {:>22}", "off-chip access", "0", "weights+shortcuts");
+    s
+}
+
+/// Fig 10 — FGPM vs factorized granularity on the paper's toy example
+/// (three single-dimension layers sharing 9 PEs).
+pub fn fig10() -> String {
+    // Three layers with output-channel maxima chosen so factorized
+    // granularity over-allocates: the bottleneck is L2.
+    let dims = [12usize, 28, 7];
+    let budget = 9usize;
+    let mut s = String::new();
+    header(&mut s, "Fig 10: parallelism granularity toy (9 PEs, dims 12/28/7)");
+    let spaces_of: [(&str, fn(usize) -> Vec<usize>); 2] =
+        [("factorized", alloc::factor_space), ("FGPM", alloc::fgpm_space)];
+    for (label, space) in spaces_of {
+        // Greedy bottleneck-first allocation from each space.
+        let spaces: Vec<Vec<usize>> = dims.iter().map(|&m| space(m)).collect();
+        let mut level = vec![0usize; 3];
+        loop {
+            let t: Vec<usize> = (0..3).map(|i| dims[i].div_ceil(spaces[i][level[i]])).collect();
+            let tmax = *t.iter().max().unwrap();
+            let bott: Vec<usize> = (0..3).filter(|&i| t[i] == tmax).collect();
+            if bott.iter().any(|&i| level[i] + 1 >= spaces[i].len()) {
+                break;
+            }
+            for &i in &bott {
+                level[i] += 1;
+            }
+            let pes: usize = (0..3).map(|i| spaces[i][level[i]]).sum();
+            if pes > budget {
+                for &i in &bott {
+                    level[i] -= 1;
+                }
+                break;
+            }
+        }
+        let pes: Vec<usize> = (0..3).map(|i| spaces[i][level[i]]).collect();
+        let t: Vec<usize> = (0..3).map(|i| dims[i].div_ceil(pes[i])).collect();
+        let tmax = *t.iter().max().unwrap();
+        let eff: Vec<String> = (0..3)
+            .map(|i| format!("{:.2}", dims[i] as f64 / (tmax as f64 * pes[i] as f64)))
+            .collect();
+        let _ = writeln!(
+            s,
+            "{:11} PEs={:?} (total {:>2})  rounds={:?}  eff={:?}",
+            label,
+            pes,
+            pes.iter().sum::<usize>(),
+            t,
+            eff
+        );
+    }
+    let _ = writeln!(s, "(paper: FGPM conserves PEs on non-bottleneck layers and softens the staircase)");
+    s
+}
+
+/// Fig 12 — SRAM size & DRAM access vs group boundary.
+pub fn fig12(net: &Network) -> String {
+    let cfg = MemoryModelCfg::default();
+    let sweep = alloc::boundary_sweep(net, &cfg);
+    let plan = alloc::balanced_memory_allocation(net, zc706::SRAM_BYTES, &cfg);
+    let mut s = String::new();
+    header(&mut s, &format!("Fig 12: boundary sweep — {}", net.name));
+    let _ = writeln!(s, "{:>9} {:>11} {:>15}", "boundary", "SRAM MB", "DRAM MB/frame");
+    let step = (sweep.len() / 16).max(1);
+    for p in sweep.iter().step_by(step) {
+        let mark = if p.boundary == plan.boundary_min_sram {
+            " <- min-SRAM"
+        } else if p.boundary == plan.boundary {
+            " <- ZC706"
+        } else {
+            ""
+        };
+        let _ = writeln!(
+            s,
+            "{:>9} {:>11.3} {:>15.3}{}",
+            p.boundary,
+            p.sram_bytes as f64 / MB,
+            p.dram_bytes as f64 / MB,
+            mark
+        );
+    }
+    let _ = writeln!(
+        s,
+        "min-SRAM boundary={} ({:.2} MB, {:.2} MB/frame); ZC706 boundary={} ({:.2} MB, {:.2} MB/frame)",
+        plan.boundary_min_sram,
+        sweep[plan.boundary_min_sram].sram_bytes as f64 / MB,
+        sweep[plan.boundary_min_sram].dram_bytes as f64 / MB,
+        plan.boundary,
+        plan.sram_bytes as f64 / MB,
+        plan.dram_bytes as f64 / MB,
+    );
+    s
+}
+
+/// On-chip memory components of one scheme for Fig 13 (FC weights
+/// excluded, as in the paper).
+fn fig13_components(net: &Network, boundary: usize, scheme: FmScheme) -> (f64, f64, f64, f64) {
+    let cfg = MemoryModelCfg { fm_scheme: scheme, ..MemoryModelCfg::default() };
+    let plan = CePlan { boundary };
+    let rep = memory::sram_report(net, &plan, &cfg);
+    let fc_rom: u64 = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(i, l)| l.kind == LayerKind::Fc && plan.kind(*i) == CeKind::Frce)
+        .map(|(_, l)| l.weight_bytes())
+        .sum();
+    let line = rep.line_buffer_total as f64 / MB;
+    let scb = rep.scb_buffers as f64 / MB;
+    let weights = (rep.weight_rom_total - fc_rom) as f64 / MB;
+    let wrce = rep.wrce_total as f64 / MB;
+    (line, scb, weights, wrce)
+}
+
+/// Fig 13 — on-chip memory across streaming schemes.
+pub fn fig13() -> String {
+    let mut s = String::new();
+    header(&mut s, "Fig 13: on-chip memory, baseline vs specific vs proposed (MB, FC weights excluded)");
+    let _ = writeln!(
+        s,
+        "{:16} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "network", "scheme", "line", "SCB", "weights", "GFM+WB", "total"
+    );
+    for net in nets::all_networks() {
+        let full = net.layers.len();
+        let min_plan = alloc::balanced_memory_allocation(&net, 0, &MemoryModelCfg::default());
+        for (label, boundary, scheme) in [
+            ("baseline", full, FmScheme::LineBased),
+            ("specific", full, FmScheme::FullyReusedFm),
+            ("proposed", min_plan.boundary_min_sram, FmScheme::FullyReusedFm),
+        ] {
+            let (line, scb, w, wrce) = fig13_components(&net, boundary, scheme);
+            let _ = writeln!(
+                s,
+                "{:16} {:>10} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+                net.name,
+                label,
+                line,
+                scb,
+                w,
+                wrce,
+                line + scb + w + wrce
+            );
+        }
+    }
+    let _ = writeln!(
+        s,
+        "(paper: specific saves {:.1}%/{:.0}% line/SCB buffer vs baseline; hybrid cuts weight storage {:.1}%)",
+        paper_ref::claims::LINE_BUFFER_SAVING_PCT,
+        paper_ref::claims::SCB_BUFFER_SAVING_PCT,
+        paper_ref::claims::WEIGHT_STORAGE_SAVING_PCT
+    );
+    s
+}
+
+/// Fig 14 — off-chip traffic: UE vs SE vs proposed.
+pub fn fig14() -> String {
+    let mut s = String::new();
+    header(&mut s, "Fig 14: off-chip traffic per frame (MB): UE vs SE vs proposed");
+    let _ = writeln!(
+        s,
+        "{:16} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "network", "arch", "FM", "shortcut", "weights", "total"
+    );
+    let cfg = MemoryModelCfg::default();
+    let mut red_fm_ue = Vec::new();
+    let mut red_fm_se = Vec::new();
+    for net in nets::all_networks() {
+        let plan = CePlan { boundary: alloc::balanced_memory_allocation(&net, 0, &cfg).boundary_min_sram };
+        let rows = [
+            ("UE", dram::unified_ce(&net)),
+            ("SE", dram::separated_ce(&net)),
+            ("proposed", dram::proposed(&net, &plan)),
+        ];
+        for (label, t) in &rows {
+            let _ = writeln!(
+                s,
+                "{:16} {:>9} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+                net.name,
+                label,
+                t.fm as f64 / MB,
+                t.shortcut as f64 / MB,
+                t.weights as f64 / MB,
+                t.total() as f64 / MB
+            );
+        }
+        red_fm_ue.push(1.0 - rows[2].1.fm as f64 / rows[0].1.fm.max(1) as f64);
+        red_fm_se.push(1.0 - rows[2].1.fm as f64 / rows[1].1.fm.max(1) as f64);
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64 * 100.0;
+    let _ = writeln!(
+        s,
+        "avg FM reduction: vs UE {:.2}% (paper {:.2}%), vs SE {:.2}% (paper {:.2}%)",
+        avg(&red_fm_ue),
+        paper_ref::claims::FM_REDUCTION_VS_UE_PCT,
+        avg(&red_fm_se),
+        paper_ref::claims::FM_REDUCTION_VS_SE_PCT
+    );
+    s
+}
+
+/// One point of the Fig 15 sweep.
+pub struct SweepPoint {
+    pub pes: usize,
+    pub eff_fgpm: f64,
+    pub eff_fact: f64,
+    pub gops_fgpm: f64,
+    pub gops_fact: f64,
+}
+
+/// Fig 15 backing data: MAC-unit sweep (60..=4000), FGPM vs factorized.
+pub fn fig15_sweep(net: &Network, budgets: &[usize]) -> Vec<SweepPoint> {
+    let cfg = MemoryModelCfg::default();
+    let plan = CePlan { boundary: alloc::balanced_memory_allocation(net, zc706::SRAM_BYTES, &cfg).boundary };
+    budgets
+        .iter()
+        .map(|&b| {
+            let run = |g| {
+                let p = dynamic_parallelism_tuning_with(net, &plan, b, g, BudgetKind::Pes);
+                throughput::evaluate(net, &p.allocs)
+            };
+            let pf = run(Granularity::Fgpm);
+            let pb = run(Granularity::Factorized);
+            SweepPoint {
+                pes: b,
+                eff_fgpm: pf.mac_efficiency,
+                eff_fact: pb.mac_efficiency,
+                gops_fgpm: pf.gops,
+                gops_fact: pb.gops,
+            }
+        })
+        .collect()
+}
+
+/// Standard budget grid used by Figs 15/16 (60..4000 MAC units).
+pub fn fig15_budgets() -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut b = 60usize;
+    while b <= 4000 {
+        v.push(b);
+        b = (b as f64 * 1.22) as usize + 10;
+    }
+    v
+}
+
+/// Fig 15 — rendered sweep.
+pub fn fig15(net: &Network) -> String {
+    let budgets = fig15_budgets();
+    let pts = fig15_sweep(net, &budgets);
+    let mut s = String::new();
+    header(&mut s, &format!("Fig 15: FGPM vs factorized across MAC units — {} @200MHz", net.name));
+    let _ = writeln!(
+        s,
+        "{:>6} {:>10} {:>10} {:>12} {:>12}",
+        "MACs", "eff FGPM", "eff fact", "GOPS FGPM", "GOPS fact"
+    );
+    for p in &pts {
+        let _ = writeln!(
+            s,
+            "{:>6} {:>9.2}% {:>9.2}% {:>12.1} {:>12.1}",
+            p.pes,
+            p.eff_fgpm * 100.0,
+            p.eff_fact * 100.0,
+            p.gops_fgpm,
+            p.gops_fact
+        );
+    }
+    s
+}
+
+/// Fig 16 — average efficiency and standard deviation across the sweep.
+pub fn fig16() -> String {
+    let budgets = fig15_budgets();
+    let mut s = String::new();
+    header(&mut s, "Fig 16: sweep-average MAC efficiency +/- std (60-4000 MAC units)");
+    let _ = writeln!(
+        s,
+        "{:16} {:>11} {:>9} {:>11} {:>9} {:>8}",
+        "network", "FGPM avg", "std", "fact avg", "std", "gain"
+    );
+    for net in nets::all_networks() {
+        let pts = fig15_sweep(&net, &budgets);
+        let stats = |f: &dyn Fn(&SweepPoint) -> f64| {
+            let m = pts.iter().map(|p| f(p)).sum::<f64>() / pts.len() as f64;
+            let var = pts.iter().map(|p| (f(p) - m).powi(2)).sum::<f64>() / pts.len() as f64;
+            (m * 100.0, var.sqrt() * 100.0)
+        };
+        let (mf, sf) = stats(&|p: &SweepPoint| p.eff_fgpm);
+        let (mb, sb) = stats(&|p: &SweepPoint| p.eff_fact);
+        let _ = writeln!(
+            s,
+            "{:16} {:>10.2}% {:>8.2} {:>10.2}% {:>8.2} {:>7.2}%",
+            net.name,
+            mf,
+            sf,
+            mb,
+            sb,
+            mf - mb
+        );
+    }
+    let _ = writeln!(
+        s,
+        "(paper: FGPM average {:.2}%..{:.2}%, gains {:.2}%..{:.2}%)",
+        paper_ref::claims::FGPM_EFF_RANGE_PCT.0,
+        paper_ref::claims::FGPM_EFF_RANGE_PCT.1,
+        paper_ref::claims::FGPM_GAIN_RANGE_PCT.0,
+        paper_ref::claims::FGPM_GAIN_RANGE_PCT.1
+    );
+    s
+}
+
+/// Fig 17's three configurations for MobileNetV2 on the ZC706 DSP budget.
+pub struct Fig17Row {
+    pub label: &'static str,
+    pub actual_eff: f64,
+    pub theoretical_eff: f64,
+    pub fps: f64,
+}
+
+pub fn fig17_rows(frames: u64) -> Vec<Fig17Row> {
+    let net = nets::mobilenet_v2();
+    let cfg = MemoryModelCfg::default();
+    let plan = CePlan { boundary: alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary };
+    let fact = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Factorized);
+    let fgpm = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    let mut rows = Vec::new();
+    for (label, allocs, opts) in [
+        ("baseline", &fact.allocs, SimOptions::baseline()),
+        ("optimized", &fact.allocs, SimOptions::optimized()),
+        ("reallocation", &fgpm.allocs, SimOptions::optimized()),
+    ] {
+        let perf = throughput::evaluate(&net, allocs);
+        let stats = sim::simulate(&net, allocs, &plan, &opts, frames).expect("sim deadlock");
+        rows.push(Fig17Row {
+            label,
+            actual_eff: stats.mac_efficiency(),
+            theoretical_eff: perf.mac_efficiency,
+            fps: stats.fps(CLOCK_HZ),
+        });
+    }
+    rows
+}
+
+/// Fig 17 — balanced-dataflow ablation (cycle-accurate).
+pub fn fig17() -> String {
+    let rows = fig17_rows(10);
+    let mut s = String::new();
+    header(&mut s, "Fig 17: MobileNetV2 @ZC706 DSPs — dataflow optimization ablation");
+    let _ = writeln!(s, "{:>14} {:>12} {:>14} {:>10}", "scheme", "actual eff", "theoretical", "FPS");
+    for r in &rows {
+        let _ = writeln!(
+            s,
+            "{:>14} {:>11.2}% {:>13.2}% {:>10.1}",
+            r.label,
+            r.actual_eff * 100.0,
+            r.theoretical_eff * 100.0,
+            r.fps
+        );
+    }
+    let gain = (rows[2].fps / rows[1].fps - 1.0) * 100.0;
+    let _ = writeln!(
+        s,
+        "reallocation throughput gain {:.2}% (paper {:.2}%); paper actual eff: baseline {:.2}%, optimized {:.2}%",
+        gain,
+        paper_ref::claims::FIG17_REALLOC_GAIN_PCT,
+        paper_ref::claims::FIG17_BASELINE_EFF_PCT,
+        paper_ref::claims::FIG17_OPTIMIZED_EFF_PCT
+    );
+    s
+}
+
+/// A fully-evaluated implementation row for Tables II/III/IV/V.
+pub struct ImplRow {
+    pub net_name: String,
+    pub config: &'static str,
+    pub pes: usize,
+    pub dsps: usize,
+    pub sram_mb: f64,
+    pub dram_mb: f64,
+    pub fps_model: f64,
+    pub fps_sim: f64,
+    pub mac_eff_sim: f64,
+    pub latency_ms: f64,
+    pub brams: u64,
+}
+
+/// Evaluate one (network, SRAM budget) implementation like §VI-B.
+pub fn impl_row(net: &Network, config: &'static str, sram_budget: u64, frames: u64) -> ImplRow {
+    let cfg = MemoryModelCfg::default();
+    let mem = alloc::balanced_memory_allocation(net, sram_budget, &cfg);
+    let boundary = if sram_budget == 0 { mem.boundary_min_sram } else { mem.boundary };
+    let plan = CePlan { boundary };
+    let par = alloc::dynamic_parallelism_tuning(net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    let perf = throughput::evaluate(net, &par.allocs);
+    let stats = sim::simulate(net, &par.allocs, &plan, &SimOptions::optimized(), frames).expect("sim");
+    let sram = memory::sram_report(net, &plan, &cfg).total();
+    let dram = dram::proposed(net, &plan).total();
+    ImplRow {
+        net_name: net.name.clone(),
+        config,
+        pes: par.pes,
+        dsps: par.dsps,
+        sram_mb: sram as f64 / MB,
+        dram_mb: dram as f64 / MB,
+        fps_model: perf.fps,
+        fps_sim: stats.fps(CLOCK_HZ),
+        mac_eff_sim: stats.mac_efficiency(),
+        latency_ms: stats.latency_ms(CLOCK_HZ),
+        brams: crate::model::brams_for(sram),
+    }
+}
+
+/// The four implementation rows of Table III.
+pub fn tab3_rows(frames: u64) -> Vec<ImplRow> {
+    let mut rows = Vec::new();
+    for net in [nets::mobilenet_v2(), nets::shufflenet_v2()] {
+        rows.push(impl_row(&net, "min-SRAM", 0, frames));
+        rows.push(impl_row(&net, "ZC706", zc706::SRAM_BYTES, frames));
+    }
+    rows
+}
+
+/// Table III — performance summary.
+pub fn tab3() -> String {
+    let rows = tab3_rows(10);
+    let mut s = String::new();
+    header(&mut s, "Table III: performance summary (batch mode @200MHz)");
+    let _ = writeln!(
+        s,
+        "{:14} {:>9} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "network", "config", "MACs", "FPS(sim)", "FPS(mod)", "SRAM MB", "DRAM MB", "lat ms"
+    );
+    for r in &rows {
+        let _ = writeln!(
+            s,
+            "{:14} {:>9} {:>6} {:>9.1} {:>9.1} {:>9.2} {:>9.2} {:>9.2}",
+            r.net_name, r.config, r.pes, r.fps_sim, r.fps_model, r.sram_mb, r.dram_mb, r.latency_ms
+        );
+    }
+    let _ = writeln!(s, "paper:");
+    for (n, c, macs, fps, sram, off, lat) in paper_ref::TABLE3 {
+        let _ = writeln!(
+            s,
+            "{:14} {:>9} {:>6} {:>9.1} {:>9} {:>9.2} {:>9.2} {:>9.2}",
+            n, c, macs, fps, "-", sram, off, lat
+        );
+    }
+    s
+}
+
+/// Table II — resource utilization.
+pub fn tab2() -> String {
+    let rows = tab3_rows(6);
+    let mut s = String::new();
+    header(&mut s, "Table II: resource utilization (ZC706: 545 BRAM36K, 900 DSP)");
+    let _ = writeln!(s, "{:14} {:>10} {:>12} {:>10} {:>12}", "network", "BRAM36K", "BRAM util", "DSP", "DSP util");
+    for r in rows.iter().filter(|r| r.config == "ZC706") {
+        let _ = writeln!(
+            s,
+            "{:14} {:>10} {:>11.1}% {:>10} {:>11.1}%",
+            r.net_name,
+            r.brams,
+            r.brams as f64 / zc706::BRAM36K as f64 * 100.0,
+            r.dsps,
+            r.dsps as f64 / zc706::DSP as f64 * 100.0
+        );
+    }
+    let _ = writeln!(s, "paper (LUT/DFF are physical-design artefacts, cited not modelled):");
+    for (n, lut, dff, bram, dsp) in paper_ref::TABLE2 {
+        let _ = writeln!(s, "{:14} BRAM {:>6.1} DSP {:>4} LUT {:>7} DFF {:>7}", n, bram, dsp, lut, dff);
+    }
+    s
+}
+
+/// Table IV — comparison with prior LWCNN accelerators.
+pub fn tab4() -> String {
+    let rows = tab3_rows(10);
+    let mut s = String::new();
+    header(&mut s, "Table IV: comparison with prior LWCNN accelerators");
+    let _ = writeln!(
+        s,
+        "{:16} {:>20} {:>5} {:>6} {:>8} {:>9} {:>10}",
+        "work", "network", "DSP", "util%", "FPS", "Thr/DSP", "MAC eff%"
+    );
+    for (w, _p, _mhz, dsp, util, netn, fps, thr, eff) in paper_ref::TABLE4_PRIOR {
+        let _ = writeln!(
+            s,
+            "{:16} {:>20} {:>5} {:>6.0} {:>8.1} {:>9.2} {:>10.2}",
+            w, netn, dsp, util, fps, thr, eff
+        );
+    }
+    for r in rows.iter().filter(|r| r.config == "min-SRAM") {
+        let net = nets::by_name(&r.net_name).unwrap();
+        let gops_per_dsp = net.total_macs() as f64 * 2.0 * r.fps_sim / 1e9 / r.dsps as f64;
+        let _ = writeln!(
+            s,
+            "{:16} {:>20} {:>5} {:>6.1} {:>8.1} {:>9.2} {:>10.2}  <- ours (sim)",
+            "Ours",
+            r.net_name,
+            r.dsps,
+            r.dsps as f64 / zc706::DSP as f64 * 100.0,
+            r.fps_sim,
+            gops_per_dsp,
+            r.mac_eff_sim * 100.0
+        );
+    }
+    let _ = writeln!(s, "paper's own rows: MobileNetV2 985.8 FPS / 94.35%; ShuffleNetV2 2092.4 FPS / 94.58%");
+    s
+}
+
+/// Table V — memory comparison with prior MobileNetV2 accelerators.
+pub fn tab5() -> String {
+    let r = impl_row(&nets::mobilenet_v2(), "min-SRAM", 0, 8);
+    let mut s = String::new();
+    header(&mut s, "Table V: MobileNetV2 memory comparison");
+    let _ = writeln!(s, "{:16} {:>9} {:>18} {:>9}", "work", "SRAM MB", "off-chip MB/frame", "FPS");
+    for (w, sram, off, fps) in paper_ref::TABLE5 {
+        let _ = writeln!(s, "{:16} {:>9.1} {:>18.1} {:>9.1}", w, sram, off, fps);
+    }
+    let _ = writeln!(
+        s,
+        "{:16} {:>9.2} {:>18.2} {:>9.1}  <- ours (model+sim)",
+        "Ours (repro)", r.sram_mb, r.dram_mb, r.fps_sim
+    );
+    let (lo, hi) = paper_ref::claims::SRAM_SAVING_VS_16_PCT;
+    let saving = (1.0 - r.sram_mb / 3.0) * 100.0; // [16] uses 3.0 MB
+    let _ = writeln!(s, "SRAM saving vs [16]: {saving:.1}% (paper claims {lo}..{hi}%)");
+    s
+}
+
+/// Fig 17's per-layer breakdown: DSPs and actual MAC efficiency per CE
+/// under the reallocation configuration (the paper plots these as bars).
+pub fn fig17_layers() -> String {
+    let net = nets::mobilenet_v2();
+    let cfg = MemoryModelCfg::default();
+    let plan = CePlan { boundary: alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary };
+    let par = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    let stats = sim::simulate(&net, &par.allocs, &plan, &SimOptions::optimized(), 10).expect("sim");
+    let mut s = String::new();
+    header(&mut s, "Fig 17 (per-layer): MobileNetV2 reallocation config");
+    let _ = writeln!(
+        s,
+        "{:>3} {:18} {:>9} {:>5} {:>5} {:>6} {:>9} {:>10}",
+        "#", "layer", "kind", "Pw", "Pf", "DSPs", "CE", "actual eff"
+    );
+    for (i, l) in net.layers.iter().enumerate() {
+        if !l.kind.is_mac() {
+            continue;
+        }
+        let a = par.allocs[i];
+        let eff = stats.layer_efficiency(i).unwrap_or(0.0);
+        let _ = writeln!(
+            s,
+            "{:>3} {:18} {:>9} {:>5} {:>5} {:>6} {:>9} {:>9.1}%",
+            i,
+            l.name,
+            format!("{:?}", l.kind),
+            a.pw,
+            a.pf,
+            throughput::layer_dsps(l, a),
+            if i < plan.boundary { "FRCE" } else { "WRCE" },
+            eff * 100.0
+        );
+    }
+    let _ = writeln!(s, "overall actual MAC efficiency {:.2}%", stats.mac_efficiency() * 100.0);
+    s
+}
+
+/// Ablation matrix (DESIGN.md design-choice benches): every combination
+/// of the three dataflow options on MobileNetV2 at the ZC706 budget —
+/// isolating each mechanism's contribution to the Fig 17 gap.
+pub fn ablation() -> String {
+    use crate::sim::PaddingMode;
+    let net = nets::mobilenet_v2();
+    let cfg = MemoryModelCfg::default();
+    let plan = CePlan { boundary: alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary };
+    let par = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    let mut s = String::new();
+    header(&mut s, "Ablation: dataflow options (MBv2, FGPM alloc @ZC706 DSPs)");
+    let _ = writeln!(s, "{:>18} {:>16} {:>12} {:>12} {:>10}", "padding", "buffer scheme", "stride line", "actual eff", "FPS");
+    for padding in [PaddingMode::DirectInsert, PaddingMode::AddressGenerated] {
+        for scheme in [FmScheme::LineBased, FmScheme::FullyReusedFm] {
+            for extra in [false, true] {
+                let opts = sim::SimOptions { padding, scheme, stride_extra_line: extra };
+                let row = match sim::simulate(&net, &par.allocs, &plan, &opts, 8) {
+                    Ok(st) => format!("{:>11.2}% {:>10.1}", st.mac_efficiency() * 100.0, st.fps(CLOCK_HZ)),
+                    Err(_) => "   DEADLOCK        -".to_string(),
+                };
+                let _ = writeln!(
+                    s,
+                    "{:>18} {:>16} {:>12} {row}",
+                    format!("{padding:?}"),
+                    format!("{scheme:?}"),
+                    if extra { "yes" } else { "no" },
+                );
+            }
+        }
+    }
+    let _ = writeln!(s, "(address-generated padding and the stride line each close part of the Fig 17 gap;");
+    let _ = writeln!(s, " the fully-reused scheme also shrinks buffers — Fig 13 — at equal or better speed)");
+    s
+}
+
+/// Render every table and figure (the `report all` target).
+pub fn all() -> String {
+    let mut s = String::new();
+    s.push_str(&fig1());
+    for net in [nets::mobilenet_v2(), nets::shufflenet_v2()] {
+        s.push_str(&fig3(&net));
+    }
+    s.push_str(&tab1());
+    s.push_str(&fig10());
+    for net in nets::all_networks() {
+        s.push_str(&fig12(&net));
+    }
+    s.push_str(&fig13());
+    s.push_str(&fig14());
+    for net in nets::all_networks() {
+        s.push_str(&fig15(&net));
+    }
+    s.push_str(&fig16());
+    s.push_str(&fig17());
+    s.push_str(&ablation());
+    s.push_str(&tab2());
+    s.push_str(&tab3());
+    s.push_str(&tab4());
+    s.push_str(&tab5());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_reports_all_networks() {
+        let s = fig1();
+        for n in ["mobilenet_v1", "mobilenet_v2", "shufflenet_v1", "shufflenet_v2"] {
+            assert!(s.contains(n), "{s}");
+        }
+    }
+
+    #[test]
+    fn fig13_weight_saving_matches_claim_band() {
+        // Hybrid scheme weight storage should be dramatically below the
+        // fixed schemes (paper: 81.37% average saving).
+        let mut savings = Vec::new();
+        for net in nets::all_networks() {
+            let full = net.layers.len();
+            let min = alloc::balanced_memory_allocation(&net, 0, &MemoryModelCfg::default());
+            let (_, _, w_fixed, _) = fig13_components(&net, full, FmScheme::FullyReusedFm);
+            let (_, _, w_prop, _) = fig13_components(&net, min.boundary_min_sram, FmScheme::FullyReusedFm);
+            savings.push(1.0 - w_prop / w_fixed);
+        }
+        let avg = savings.iter().sum::<f64>() / savings.len() as f64 * 100.0;
+        assert!(avg > 65.0, "avg weight-storage saving {avg:.1}%");
+    }
+
+    #[test]
+    fn fig15_fgpm_dominates_factorized() {
+        let net = nets::shufflenet_v2();
+        let pts = fig15_sweep(&net, &[60, 240, 960, 2400]);
+        for p in &pts {
+            assert!(p.gops_fgpm >= p.gops_fact * 0.999, "pes {}", p.pes);
+        }
+        // And the average gain is substantial for ShuffleNetV2 (sparse
+        // factors; paper reports up to 31.29%).
+        let gain: f64 = pts.iter().map(|p| p.eff_fgpm - p.eff_fact).sum::<f64>() / pts.len() as f64;
+        assert!(gain > 0.05, "avg gain {gain}");
+    }
+
+    #[test]
+    fn tab1_and_fig10_render() {
+        assert!(tab1().contains("FRCE"));
+        let f = fig10();
+        assert!(f.contains("factorized") && f.contains("FGPM"));
+    }
+}

@@ -1,0 +1,86 @@
+//! The paper's reported numbers, kept verbatim so every renderer can print
+//! *paper vs measured* side by side (EXPERIMENTS.md consumes these).
+
+/// Table III — performance summary (batch mode, 200 MHz).
+/// (network, config, mac_units, fps, sram_mb, offchip_mb_per_frame, latency_ms)
+pub const TABLE3: [(&str, &str, u32, f64, f64, f64, f64); 4] = [
+    ("mobilenet_v2", "min-SRAM", 1567, 985.8, 1.27, 2.81, 10.63),
+    ("mobilenet_v2", "ZC706", 1569, 981.4, 1.75, 2.05, 5.46),
+    ("shufflenet_v2", "min-SRAM", 1604, 2092.4, 0.71, 1.96, 4.74),
+    ("shufflenet_v2", "ZC706", 1612, 2199.2, 1.34, 0.98, 1.33),
+];
+
+/// Table II — resource utilization on ZC706.
+/// (network, lut, dff, bram36k, dsp)
+pub const TABLE2: [(&str, u32, u32, f64, u32); 2] = [
+    ("mobilenet_v2", 163_087, 189_476, 329.5, 844),
+    ("shufflenet_v2", 117_554, 177_863, 209.0, 853),
+];
+
+/// Table IV — prior-work comparison rows (as published).
+/// (work, platform, mhz, dsp, dsp_util_pct, network, fps, thr_per_dsp_gops,
+///  mac_eff_pct)
+pub const TABLE4_PRIOR: [(&str, &str, u32, u32, f64, &str, f64, f64, f64); 11] = [
+    ("FPL'19 [3]", "ZYNQ XCZU9EG", 333, 2070, 82.0, "MobileNetV2", 809.8, 0.23, 17.62),
+    ("FPGA'20 [2]", "Kintex7 XC7K325T", 200, 704, 84.0, "MobileNetV2", 325.7, 0.28, 34.70),
+    ("FPGA'20 [2]", "Kintex7 XC7K325T", 200, 704, 84.0, "MobileNetV1", 264.6, 0.43, 53.46),
+    ("FPL'20 [5]", "Arria10 SOC", 200, 1220, 72.0, "MobileNetV2", 1050.0, 0.52, 64.55),
+    ("TCASII'20 [39]", "Virtex-7 XC7VX485T", 200, 1926, 68.0, "ShuffleNetV1", 787.4, 0.11, 28.00),
+    ("SMC'21 [40]", "ZYNQ XC7Z045", 100, 0, 0.0, "ShuffleNetV2", 291.5, 0.0, 0.0),
+    ("FPL'21 [11]", "Virtex-7 XC7V690T", 150, 2160, 60.0, "MobileNetV2", 302.3, 0.08, 14.00),
+    ("TCASI'21 [6]", "ZYNQ XCZU9EQ", 200, 576, 23.0, "MobileNetV2", 381.7, 0.40, 0.0),
+    ("TCAD'22 [16]", "ZYNQ XCZU9EG", 333, 1283, 51.0, "MobileNetV2", 1910.0, 0.89, 80.07),
+    ("TCASI'22 [23]", "AMD KCU1500", 200, 2240, 41.0, "EfficientNet-B1", 213.2, 0.15, 19.37),
+    ("TCASI'22 [4]", "Arria10 SOC", 200, 607, 36.0, "MobileNetV2", 222.2, 0.30, 44.46),
+];
+
+/// Table IV — the paper's own rows.
+pub const TABLE4_OURS: [(&str, u32, f64, f64, f64, f64); 2] = [
+    // (network, dsp, dsp_util, fps, thr/dsp, mac_eff)
+    ("MobileNetV2", 844, 94.0, 985.8, 0.70, 94.35),
+    ("ShuffleNetV2", 853, 95.0, 2092.4, 0.71, 94.58),
+];
+
+/// Table V — memory comparison for MobileNetV2 accelerators.
+/// (work, sram_mb, offchip_mb_per_frame, fps)
+pub const TABLE5: [(&str, f64, f64, f64); 5] = [
+    ("FPGA'20 [2]", 0.9, 16.9, 325.7),
+    ("TCASI'21 [6]", 1.0, 3.3, 381.7),
+    ("FPL'21 [11]", 4.1, 3.3, 302.3),
+    ("TCAD'22 [16]", 3.0, 1.4, 1910.0),
+    ("Our", 1.3, 2.8, 985.8),
+];
+
+/// Headline claims quoted in the abstract / §VI.
+pub mod claims {
+    /// On-chip memory saving vs the reference design [16].
+    pub const SRAM_SAVING_VS_16_PCT: (f64, f64) = (56.67, 68.29);
+    /// Peak FPS (ShuffleNetV2).
+    pub const PEAK_FPS: f64 = 2092.4;
+    /// Peak MAC efficiency (%).
+    pub const PEAK_MAC_EFF: f64 = 94.58;
+    /// DSP utilization (%).
+    pub const DSP_UTIL: f64 = 95.0;
+    /// Average FM-access reduction vs UE / SE (Fig 14).
+    pub const FM_REDUCTION_VS_UE_PCT: f64 = 98.07;
+    pub const FM_REDUCTION_VS_SE_PCT: f64 = 96.69;
+    /// Shortcut / weight access reductions (Fig 14).
+    pub const SHORTCUT_REDUCTION_PCT: f64 = 93.30;
+    pub const WEIGHT_REDUCTION_PCT: f64 = 12.56;
+    /// Fig 13: line-buffer / SCB-buffer savings of "specific" vs "baseline".
+    pub const LINE_BUFFER_SAVING_PCT: f64 = 53.71;
+    pub const SCB_BUFFER_SAVING_PCT: f64 = 60.0;
+    /// Weight-storage reduction of the hybrid scheme (Fig 13).
+    pub const WEIGHT_STORAGE_SAVING_PCT: f64 = 81.37;
+    /// Fig 16: theoretical MAC efficiency band with FGPM.
+    pub const FGPM_EFF_RANGE_PCT: (f64, f64) = (93.06, 95.68);
+    /// Fig 16: improvement over factorized baseline.
+    pub const FGPM_GAIN_RANGE_PCT: (f64, f64) = (6.46, 31.29);
+    /// Fig 17: baseline -> optimized actual efficiency.
+    pub const FIG17_BASELINE_EFF_PCT: f64 = 69.13;
+    pub const FIG17_OPTIMIZED_EFF_PCT: f64 = 84.79;
+    /// Fig 17: reallocation throughput gain.
+    pub const FIG17_REALLOC_GAIN_PCT: f64 = 11.29;
+    /// Fig 6: SCB FM-buffer reduction (fully-reused vs line-based).
+    pub const FIG6_SCB_BUFFER_REDUCTION_PCT: f64 = 69.23;
+}

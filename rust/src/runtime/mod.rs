@@ -1,0 +1,213 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — the HLO text is parsed and compiled by
+//! XLA through the `xla` crate (`PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`), exactly the
+//! pattern validated by /opt/xla-example/load_hlo.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// CE-group kind of a stage (mirrors the manifest's `kind` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Weights baked into the HLO as constants (on-chip ROM).
+    Frce,
+    /// Weights passed as leading runtime parameters (streamed from DRAM).
+    Wrce,
+}
+
+/// A weight tensor slice in the flat `<net>_weights.bin` blob.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset/length in f32 elements.
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// One stage of the compiled pipeline.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub kind: StageKind,
+    pub hlo_file: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    /// 8-bit byte counts from the memory model (for DRAM-traffic metrics).
+    pub weight_bytes_8bit: u64,
+    pub fm_bytes_8bit: u64,
+    /// Reference output checksum (mean, std) from the golden pass.
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Parsed `<net>_manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub network: String,
+    pub input_shape: Vec<usize>,
+    pub boundary: usize,
+    pub stages: Vec<StageSpec>,
+    pub weights_file: String,
+    pub golden_input: String,
+    pub golden_logits: String,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, short: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{short}_manifest.json"));
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let stages = j
+            .arr_field("stages")
+            .iter()
+            .map(|s| StageSpec {
+                name: s.str_field("name").to_string(),
+                kind: match s.str_field("kind") {
+                    "frce" => StageKind::Frce,
+                    _ => StageKind::Wrce,
+                },
+                hlo_file: s.str_field("hlo").to_string(),
+                in_shape: s.get("in_shape").unwrap().usize_vec(),
+                out_shape: s.get("out_shape").unwrap().usize_vec(),
+                params: s
+                    .arr_field("params")
+                    .iter()
+                    .map(|p| ParamSpec {
+                        name: p.str_field("name").to_string(),
+                        shape: p.get("shape").unwrap().usize_vec(),
+                        offset: p.usize_field("offset"),
+                        len: p.usize_field("len"),
+                    })
+                    .collect(),
+                weight_bytes_8bit: s.usize_field("weight_bytes_8bit") as u64,
+                fm_bytes_8bit: s.usize_field("fm_bytes_8bit") as u64,
+                mean: s.get("mean").and_then(Json::as_f64).unwrap_or(0.0),
+                std: s.get("std").and_then(Json::as_f64).unwrap_or(0.0),
+            })
+            .collect();
+        Ok(Manifest {
+            network: j.str_field("network").to_string(),
+            input_shape: j.get("input_shape").unwrap().usize_vec(),
+            boundary: j.usize_field("boundary"),
+            stages,
+            weights_file: j.str_field("weights_file").to_string(),
+            golden_input: j.str_field("golden_input").to_string(),
+            golden_logits: j.str_field("golden_logits").to_string(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load a little-endian f32 blob referenced by the manifest.
+    pub fn read_f32(&self, file: &str) -> Result<Vec<f32>> {
+        read_f32_file(&self.dir.join(file))
+    }
+}
+
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// A compiled, executable stage.
+pub struct StageExe {
+    pub spec: StageSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Pre-staged weight literals for WRCE stages, in parameter order. In
+    /// the accelerator these live in off-chip DRAM; the coordinator
+    /// "streams" them by passing them to every execution (the fully reused
+    /// weight scheme reads each exactly once per frame).
+    weights: Vec<xla::Literal>,
+}
+
+impl StageExe {
+    /// Execute on one frame: `(H, W, C) -> (H', W', C')` as flat vecs.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let dims = &self.spec.in_shape;
+        let expect: usize = dims.iter().product();
+        if input.len() != expect {
+            bail!("stage {}: input len {} != {:?}", self.spec.name, input.len(), dims);
+        }
+        let x = xla::Literal::vec1(input).reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&x);
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Bytes of weights streamed from "DRAM" per frame (f32 on this
+    /// substrate; the paper's 8-bit count is `spec.weight_bytes_8bit`).
+    pub fn streamed_bytes_per_frame(&self) -> u64 {
+        self.spec.params.iter().map(|p| p.len as u64 * 4).sum()
+    }
+}
+
+/// The PJRT engine owning the client and all compiled stages of one
+/// network.
+pub struct Engine {
+    pub manifest: Manifest,
+    pub stages: Vec<StageExe>,
+}
+
+impl Engine {
+    /// Load + compile every stage of `<short>` (e.g. `"mbv2"`) from `dir`.
+    pub fn load(dir: &Path, short: &str) -> Result<Engine> {
+        let manifest = Manifest::load(dir, short)?;
+        let client = xla::PjRtClient::cpu()?;
+        let weights_blob = manifest.read_f32(&manifest.weights_file)?;
+        let mut stages = Vec::with_capacity(manifest.stages.len());
+        for spec in &manifest.stages {
+            let proto = xla::HloModuleProto::from_text_file(
+                manifest.dir.join(&spec.hlo_file).to_str().unwrap(),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let mut weights = Vec::with_capacity(spec.params.len());
+            for p in &spec.params {
+                let slice = &weights_blob[p.offset..p.offset + p.len];
+                let lit = xla::Literal::vec1(slice)
+                    .reshape(&p.shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?;
+                weights.push(lit);
+            }
+            stages.push(StageExe { spec: spec.clone(), exe, weights });
+        }
+        Ok(Engine { manifest, stages })
+    }
+
+    /// Run a frame through all stages sequentially (the single-threaded
+    /// reference path; the coordinator pipelines stages across threads).
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut x = input.to_vec();
+        for s in &self.stages {
+            x = s.run(&x)?;
+        }
+        Ok(x)
+    }
+
+    /// Total per-frame DRAM weight traffic (8-bit model bytes), i.e. Eq 13's
+    /// weight term evaluated on the compiled plan.
+    pub fn dram_weight_bytes_8bit(&self) -> u64 {
+        self.stages
+            .iter()
+            .filter(|s| s.spec.kind == StageKind::Wrce)
+            .map(|s| s.spec.weight_bytes_8bit)
+            .sum()
+    }
+}
+
+/// Default artifacts directory: `$REPRO_ARTIFACTS` or `artifacts/`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("REPRO_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

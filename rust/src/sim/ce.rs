@@ -1,0 +1,287 @@
+//! Per-CE state machines of the cycle-level simulator.
+//!
+//! Every CE processes a continuous multi-frame pixel stream. A "pixel" is
+//! one spatial position across all channels at that point of the network
+//! (channel-first transfer order, §III-B); all FIFOs count pixels, since
+//! the simulator tracks timing, not values.
+
+use crate::model::memory::FmScheme;
+
+/// Padding implementation of the line-buffer (§IV-B, Fig 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaddingMode {
+    /// Zeros are written into the line buffer through the input port,
+    /// consuming write bandwidth (Fig 11(a) — the congestion baseline).
+    DirectInsert,
+    /// The address generator materializes padding on the fly while real
+    /// pixels stream to the PE array (Fig 11(b) — the proposed scheme).
+    AddressGenerated,
+}
+
+/// What kind of datapath a CE models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CeClass {
+    /// Windowed/MAC compute (STC/DWC/PWC/FC, pooling): consumes a window
+    /// from the line buffer, occupies the PE array `quantum_cycles` per
+    /// `pf` output positions.
+    Compute,
+    /// Pure data movement at one position per cycle (shuffle, split,
+    /// dataflow-order converter).
+    Passthrough,
+    /// Two-input join (SCB `Add`, shuffle-unit `Concat`): pairs one pixel
+    /// from the main stream with one from the side (shortcut) FIFO per
+    /// cycle.
+    Join,
+}
+
+/// Static configuration of one simulated CE.
+#[derive(Debug, Clone)]
+pub struct CeConfig {
+    pub name: String,
+    pub class: CeClass,
+    /// Input spatial size (pre-padding).
+    pub f_in: usize,
+    /// Output spatial size.
+    pub f_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Padding handling (only meaningful for windowed CEs with pad > 0).
+    pub padding: PaddingMode,
+    /// FM-buffer scheme: decides both line-buffer capacity and the pixel
+    /// release rule.
+    pub scheme: FmScheme,
+    /// Extra line of buffer for stride > 1 (§IV-B, Fig 11(d)).
+    pub stride_extra_line: bool,
+    /// PE-array occupancy per quantum: `ceil(N / P_w) * reduction_depth`
+    /// cycles produce `pf` output positions.
+    pub quantum_cycles: u64,
+    /// Output positions produced per quantum (the `P_f` of §III-C).
+    pub pf: usize,
+    /// MAC units in this CE's PE array (0 for LUT-only CEs).
+    pub pes: usize,
+    /// True MACs per output position (for efficiency accounting).
+    pub macs_per_opos: u64,
+    /// WRCE global-FM mode: the whole input frame must be buffered
+    /// (ping-pong) before computation starts; pixel release happens a
+    /// frame at a time.
+    pub full_frame_buffer: bool,
+    /// Extra buffer pixels beyond the scheme formula — sized by the
+    /// builder so that every `pf`-position quantum's window span fits
+    /// (a `P_f > 1` FRCE physically widens its buffer the same way).
+    pub extra_capacity_px: u64,
+    /// Minimum cycles between input-port accepts: the inter-CE bus is
+    /// provisioned to the CE's steady-state demand (compute time over
+    /// arrivals), so short-term demand peaks — padding writes, stride
+    /// rows, image switches — exceed supply exactly as in §IV-B unless
+    /// the optimized buffer scheme absorbs them.
+    pub in_interval: u64,
+}
+
+impl CeConfig {
+    /// Arrivals per frame as seen on the input port: the padded grid when
+    /// padding is written through the port, the real grid otherwise.
+    pub fn arrivals_per_frame(&self) -> u64 {
+        if self.uses_padded_stream() {
+            let fp = self.f_in + 2 * self.pad;
+            (fp * fp) as u64
+        } else {
+            (self.f_in * self.f_in) as u64
+        }
+    }
+
+    pub fn uses_padded_stream(&self) -> bool {
+        self.class == CeClass::Compute && self.pad > 0 && self.padding == PaddingMode::DirectInsert
+    }
+
+    /// Real (non-padding) pixels per frame.
+    pub fn real_per_frame(&self) -> u64 {
+        (self.f_in * self.f_in) as u64
+    }
+
+    pub fn outputs_per_frame(&self) -> u64 {
+        (self.f_out * self.f_out) as u64
+    }
+
+    /// Line-buffer capacity in pixels (§III-B / §IV-B), before the
+    /// builder's quantum-fit extension.
+    pub fn formula_capacity_px(&self) -> u64 {
+        if self.full_frame_buffer {
+            return 2 * self.arrivals_per_frame(); // ping-pong GFM
+        }
+        let f = if self.uses_padded_stream() { self.f_in + 2 * self.pad } else { self.f_in } as u64;
+        let k = self.k as u64;
+        if self.class != CeClass::Compute {
+            return 4; // small synchronizer FIFO
+        }
+        if self.k <= 1 {
+            return (2 * self.pf as u64).max(4); // PWC/FC: no inter-pixel correlation
+        }
+        // Fully-reused scheme: the Table-I minimum is (K-1) lines + K-1 px,
+        // "even if the buffer lines increased to k full lines to reserve
+        // extra space for overlapping computations between layers" (§III-B)
+        // — the extra line is what lets frame f+1's first rows stream in
+        // while frame f's tail windows are still live, so the simulator
+        // models the k-line variant.
+        let base = match self.scheme {
+            FmScheme::FullyReusedFm => k * f + k,
+            FmScheme::LineBased => (k + 1) * f,
+        };
+        if self.stride > 1 && self.stride_extra_line {
+            base + f
+        } else {
+            base
+        }
+    }
+
+    /// Effective line-buffer capacity in pixels.
+    pub fn capacity_px(&self) -> u64 {
+        self.formula_capacity_px() + self.extra_capacity_px
+    }
+
+    /// The largest window span (arrivals that must be co-resident) of any
+    /// quantum in a frame — the builder sizes `extra_capacity_px` so this
+    /// always fits.
+    pub fn max_quantum_span(&self) -> u64 {
+        if self.full_frame_buffer || self.class != CeClass::Compute {
+            return 0;
+        }
+        let of = self.outputs_per_frame();
+        let mut span = 0u64;
+        let mut o = 0u64;
+        while o < of {
+            let q = (self.pf as u64).min(of - o);
+            let end = o + q - 1;
+            let need = self.required_arrival(end) + 1 - self.oldest_needed(o);
+            span = span.max(need);
+            o += q;
+        }
+        span
+    }
+
+    /// Grid side length of the arrival stream.
+    fn fa(&self) -> usize {
+        if self.uses_padded_stream() {
+            self.f_in + 2 * self.pad
+        } else {
+            self.f_in
+        }
+    }
+
+    /// Index (within a frame's arrival stream) that must have arrived
+    /// before the output quantum *ending* at output position `opos` can be
+    /// computed.
+    pub fn required_arrival(&self, opos: u64) -> u64 {
+        let fa = self.fa() as u64;
+        if self.full_frame_buffer {
+            return self.arrivals_per_frame() - 1;
+        }
+        if self.class != CeClass::Compute || self.k <= 1 {
+            // 1:1 streaming (position o needs arrival o for stride 1;
+            // strided 1x1 layers need the strided source position).
+            let r = opos / self.f_out as u64 * self.stride as u64;
+            let c = opos % self.f_out as u64 * self.stride as u64;
+            return (r * fa + c).min(self.arrivals_per_frame() - 1);
+        }
+        let (r, c) = (opos / self.f_out as u64, opos % self.f_out as u64);
+        let (s, k) = (self.stride as u64, self.k as u64);
+        let (row, col) = if self.uses_padded_stream() {
+            (r * s + k - 1, c * s + k - 1)
+        } else {
+            let p = self.pad as u64;
+            (
+                (r * s + k - 1).saturating_sub(p).min(self.f_in as u64 - 1),
+                (c * s + k - 1).saturating_sub(p).min(self.f_in as u64 - 1),
+            )
+        };
+        row * fa + col
+    }
+
+    /// Index (within a frame's arrival stream) of the oldest pixel still
+    /// needed once the quantum ending at `opos` has been issued — arrivals
+    /// strictly before it can be overwritten (the pixel-lifetime rule of
+    /// Fig 5 for the fully-reused scheme, whole lines for line-based).
+    pub fn oldest_needed(&self, opos: u64) -> u64 {
+        let fa = self.fa() as u64;
+        if self.full_frame_buffer {
+            return 0; // released per frame by the engine
+        }
+        if self.class != CeClass::Compute || self.k <= 1 {
+            let r = opos / self.f_out as u64 * self.stride as u64;
+            let c = opos % self.f_out as u64 * self.stride as u64;
+            return r * fa + c;
+        }
+        let (r, c) = (opos / self.f_out as u64, opos % self.f_out as u64);
+        let s = self.stride as u64;
+        let (row0, col0) = if self.uses_padded_stream() {
+            (r * s, c * s)
+        } else {
+            let p = self.pad as u64;
+            ((r * s).saturating_sub(p), (c * s).saturating_sub(p))
+        };
+        match self.scheme {
+            FmScheme::FullyReusedFm => row0 * fa + col0,
+            FmScheme::LineBased => row0 * fa,
+        }
+    }
+}
+
+/// Mutable per-CE simulation state. All stream positions are *global*
+/// (monotone across frames): arrival `a` belongs to frame
+/// `a / arrivals_per_frame()`.
+#[derive(Debug, Clone)]
+pub struct CeState {
+    /// Total pixels accepted on the input port (real + self-inserted
+    /// padding).
+    pub recv: u64,
+    /// Pixels released from the line buffer.
+    pub freed: u64,
+    /// Next output position to issue (global).
+    pub next_out: u64,
+    /// Remaining busy cycles of the in-flight quantum (0 = idle).
+    pub busy: u64,
+    /// Output positions of the in-flight quantum, delivered on completion.
+    pub pending_out: u64,
+    /// Pixels sitting in the output FIFO awaiting transfer downstream.
+    pub out_fifo: u64,
+    /// Busy-cycle counter (PE array occupied).
+    pub busy_cycles: u64,
+    /// Stall taxonomy for reports: cycles idle awaiting input window.
+    pub stall_input: u64,
+    /// Cycles idle because the output FIFO / downstream is full.
+    pub stall_output: u64,
+    /// Completed output frames (for frame-latency stats).
+    pub frames_done: u64,
+    /// Cached global arrival index required by the pending quantum
+    /// (recomputed only when `next_out` advances).
+    pub cached_need: u64,
+    /// `next_out` value the cache was computed for (u64::MAX = stale).
+    pub cached_for: u64,
+}
+
+impl Default for CeState {
+    fn default() -> Self {
+        CeState {
+            recv: 0,
+            freed: 0,
+            next_out: 0,
+            busy: 0,
+            pending_out: 0,
+            out_fifo: 0,
+            busy_cycles: 0,
+            stall_input: 0,
+            stall_output: 0,
+            frames_done: 0,
+            cached_need: 0,
+            // Stale marker: next_out starts at 0, so 0 must not look cached.
+            cached_for: u64::MAX,
+        }
+    }
+}
+
+impl CeState {
+    /// Pixels currently resident in the input line buffer.
+    pub fn occupancy(&self) -> u64 {
+        self.recv - self.freed
+    }
+}

@@ -1,0 +1,418 @@
+//! The cycle-stepped pipeline engine.
+//!
+//! Entities: a source streaming frames at one pixel per cycle, one
+//! simulated CE per network layer (plus an optional order-converter CE at
+//! the group boundary), and *side FIFOs* carrying SCB shortcut snapshots
+//! and ShuffleNet tee streams. Inter-CE transfers move one pixel-vector
+//! per cycle with credit-based backpressure; a transfer out of a branch
+//! point commits to the main consumer and every attached side FIFO
+//! atomically.
+
+use super::ce::{CeClass, CeConfig, CeState};
+
+/// Where a CE's main input stream comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MainSrc {
+    Source,
+    Ce(usize),
+    /// Side FIFO index (tee branches).
+    Fifo(usize),
+}
+
+/// A side FIFO: shortcut snapshot or tee stream.
+#[derive(Debug, Clone)]
+pub struct SideFifo {
+    /// Producing CE (`None` = the network input source).
+    pub producer: Option<usize>,
+    /// `true`: filled when the producer CE *accepts* an input pixel (tee
+    /// of a layer's input); `false`: filled when the producer emits output
+    /// (SCB snapshot).
+    pub tap_input: bool,
+    pub capacity: u64,
+    pub occupancy: u64,
+    pub name: String,
+}
+
+/// A fully-assembled pipeline.
+pub struct Pipeline {
+    pub ces: Vec<CeConfig>,
+    pub main_src: Vec<MainSrc>,
+    /// Join CEs consume one pixel per quantum from this side FIFO.
+    pub join_side: Vec<Option<usize>>,
+    /// Side FIFOs a CE's *output* transfer must also fill.
+    pub out_taps: Vec<Vec<usize>>,
+    /// Side FIFO fed by a CE's accepted *input* pixels (tee), if any.
+    pub in_taps: Vec<Option<usize>>,
+    /// Side FIFOs fed directly by the source.
+    pub source_taps: Vec<usize>,
+    pub fifos: Vec<SideFifo>,
+    /// Whether CE i's output feeds CE i+1's input (false when the next CE
+    /// reads from a tee FIFO instead).
+    pub feeds_next: Vec<bool>,
+    /// Input pixels per frame at the source.
+    pub source_px_per_frame: u64,
+}
+
+/// Simulation outcome statistics.
+#[derive(Debug, Clone)]
+pub struct SimStats {
+    /// Steady-state cycles between consecutive frame completions.
+    pub period_cycles: f64,
+    /// Cycles until the first frame completed (pipeline fill + compute).
+    pub first_frame_cycles: u64,
+    pub total_cycles: u64,
+    pub frames: u64,
+    /// Per-CE busy cycles.
+    pub busy_cycles: Vec<u64>,
+    /// Per-CE stall-on-input / stall-on-output cycles.
+    pub stall_input: Vec<u64>,
+    pub stall_output: Vec<u64>,
+    /// Per-CE true MACs per frame.
+    pub macs_per_frame: Vec<u64>,
+    /// Per-CE PE counts.
+    pub pes: Vec<usize>,
+    /// Per-CE cycle at which each frame's last output completed
+    /// (`frame_done[ce][frame]`) — the pipeline-schedule trace.
+    pub frame_done: Vec<Vec<u64>>,
+}
+
+impl SimStats {
+    /// Actual whole-design MAC efficiency over the steady-state period:
+    /// true MACs per frame over (period x total PEs).
+    pub fn mac_efficiency(&self) -> f64 {
+        // Count only PE-array MACs (SCB adds run on LUT adders).
+        let total_macs: u64 = self
+            .macs_per_frame
+            .iter()
+            .zip(&self.pes)
+            .filter(|(_, &p)| p > 0)
+            .map(|(&m, _)| m)
+            .sum();
+        let total_pes: usize = self.pes.iter().sum();
+        total_macs as f64 / (self.period_cycles * total_pes as f64)
+    }
+
+    /// Per-CE actual efficiency (MAC CEs only; `None` for LUT datapaths).
+    pub fn layer_efficiency(&self, i: usize) -> Option<f64> {
+        if self.pes[i] == 0 {
+            return None;
+        }
+        Some(self.macs_per_frame[i] as f64 / (self.period_cycles * self.pes[i] as f64))
+    }
+
+    /// Frames per second at the design clock.
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.period_cycles
+    }
+
+    /// Single-frame latency in milliseconds.
+    pub fn latency_ms(&self, clock_hz: f64) -> f64 {
+        self.first_frame_cycles as f64 / clock_hz * 1e3
+    }
+}
+
+/// Error raised when the pipeline makes no progress (the deadlock the
+/// paper's delayed-buffer sizing is designed to prevent).
+#[derive(Debug)]
+pub struct Deadlock {
+    pub cycle: u64,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Deadlock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pipeline deadlock at cycle {}: {}", self.cycle, self.detail)
+    }
+}
+
+impl std::error::Error for Deadlock {}
+
+impl Pipeline {
+    /// Stream `frames` frames through the pipeline and collect stats.
+    /// `warmup` frames are excluded from the steady-state period estimate.
+    pub fn run(&self, frames: u64, warmup: u64) -> Result<SimStats, Deadlock> {
+        assert!(frames > warmup, "need at least one measured frame");
+        let n = self.ces.len();
+        let mut st: Vec<CeState> = vec![CeState::default(); n];
+        let mut fifo_occ: Vec<u64> = self.fifos.iter().map(|f| f.occupancy).collect();
+        let mut source_sent: u64 = 0;
+        let source_total = self.source_px_per_frame * frames;
+        let last = n - 1;
+        let mut completion: Vec<u64> = Vec::with_capacity(frames as usize);
+        let mut frame_done: Vec<Vec<u64>> = vec![Vec::with_capacity(frames as usize); n];
+        let mut next_accept: Vec<u64> = vec![0; n];
+        // Hot-loop hoists: these are pure functions of the static config.
+        let caps: Vec<u64> = self.ces.iter().map(|c| c.capacity_px()).collect();
+        let arrivals: Vec<u64> = self.ces.iter().map(|c| c.arrivals_per_frame()).collect();
+        let outs: Vec<u64> = self.ces.iter().map(|c| c.outputs_per_frame()).collect();
+        let mut cycle: u64 = 0;
+        let mut last_progress: u64 = 0;
+        // Deadlock horizon: a legitimate stall is bounded by one frame of
+        // source streaming plus one bottleneck period; anything much longer
+        // means a circular wait.
+        let horizon = 2 * self.source_px_per_frame + 400_000;
+
+        while (completion.len() as u64) < frames {
+            let mut progress = false;
+
+            // ---- Phase A: compute (issue, then tick, in one cycle so
+            // back-to-back quanta pipeline without bubble cycles) ----------
+            for i in 0..n {
+                let cfg = &self.ces[i];
+                let s = &mut st[i];
+                if s.busy == 0 {
+                    // Idle: try to issue the next quantum.
+                    let of = outs[i];
+                    if s.next_out + s.pending_out >= of * frames {
+                        continue; // all work done
+                    }
+                    let start = s.next_out;
+                    let in_frame = start % of;
+                    let q = (cfg.pf as u64).min(of - in_frame);
+                    // The required-arrival index is invariant while the CE
+                    // waits on this quantum; cache it across stall cycles.
+                    let need = if s.cached_for == start {
+                        s.cached_need
+                    } else {
+                        let frame = start / of;
+                        let end = in_frame + q - 1;
+                        let need = frame * arrivals[i] + cfg.required_arrival(end);
+                        s.cached_need = need;
+                        s.cached_for = start;
+                        need
+                    };
+                    let out_cap = (2 * cfg.pf as u64).max(4);
+                    if s.recv <= need {
+                        s.stall_input += 1;
+                        continue;
+                    }
+                    if s.out_fifo + q > out_cap {
+                        s.stall_output += 1;
+                        continue;
+                    }
+                    if cfg.class == CeClass::Join {
+                        let fi = self.join_side[i].expect("join without side fifo");
+                        if fifo_occ[fi] < q {
+                            s.stall_input += 1;
+                            continue;
+                        }
+                        fifo_occ[fi] -= q;
+                    }
+                    s.busy = cfg.quantum_cycles;
+                    s.pending_out = q;
+                    progress = true;
+                }
+                // Tick the in-flight quantum.
+                s.busy -= 1;
+                s.busy_cycles += 1;
+                if s.busy == 0 {
+                    s.out_fifo += s.pending_out;
+                    s.next_out += s.pending_out;
+                    s.pending_out = 0;
+                    progress = true;
+                    let of = outs[i];
+                    let done = s.next_out / of;
+                    if done > s.frames_done {
+                        for _ in s.frames_done..done.min(frames) {
+                            frame_done[i].push(cycle);
+                        }
+                        s.frames_done = done;
+                        if i == last {
+                            for _ in completion.len() as u64..done.min(frames) {
+                                completion.push(cycle);
+                            }
+                        }
+                    }
+                    // Release dead pixels (never beyond what has arrived).
+                    let a = arrivals[i];
+                    if cfg.full_frame_buffer {
+                        s.freed = ((s.next_out / of) * a).min(s.recv);
+                    } else if s.next_out < of * frames {
+                        let frame = s.next_out / of;
+                        s.freed = s.freed.max(frame * a + cfg.oldest_needed(s.next_out % of)).min(s.recv);
+                    }
+                }
+            }
+
+            // ---- Phase B: input acceptance + transfers --------------------
+            for i in 0..n {
+                let cfg = &self.ces[i];
+                // The inter-CE bus is provisioned to the CE's steady-state
+                // demand; accepts are paced accordingly.
+                let a = arrivals[i];
+                if cycle < next_accept[i] {
+                    continue;
+                }
+                if st[i].recv >= a * frames {
+                    continue;
+                }
+                if st[i].occupancy() >= caps[i] {
+                    continue;
+                }
+                // Padding slot? Self-insert without touching upstream (the
+                // write still occupies a bus/buffer-port slot — Fig 11(a)).
+                if cfg.uses_padded_stream() && is_padding_slot(cfg, st[i].recv % a) {
+                    st[i].recv += 1;
+                    next_accept[i] = cycle + cfg.in_interval;
+                    progress = true;
+                    continue;
+                }
+                // Need a real pixel from the main source.
+                let avail = match self.main_src[i] {
+                    MainSrc::Source => source_sent < source_total,
+                    MainSrc::Ce(p) => st[p].out_fifo > 0,
+                    MainSrc::Fifo(fi) => fifo_occ[fi] > 0,
+                };
+                if !avail {
+                    continue;
+                }
+                // The producing transfer must also fit every tap.
+                if let Some(ti) = self.in_taps[i] {
+                    if fifo_occ[ti] >= self.fifos[ti].capacity {
+                        continue;
+                    }
+                }
+                // Output taps gate the producer's emission (branch points).
+                let taps: &[usize] = match self.main_src[i] {
+                    MainSrc::Source => &self.source_taps,
+                    MainSrc::Ce(p) => &self.out_taps[p],
+                    MainSrc::Fifo(_) => &[],
+                };
+                if taps.iter().any(|&t| fifo_occ[t] >= self.fifos[t].capacity) {
+                    continue;
+                }
+                // Commit.
+                match self.main_src[i] {
+                    MainSrc::Source => source_sent += 1,
+                    MainSrc::Ce(p) => st[p].out_fifo -= 1,
+                    MainSrc::Fifo(fi) => fifo_occ[fi] -= 1,
+                }
+                for &t in taps {
+                    fifo_occ[t] += 1;
+                }
+                if let Some(ti) = self.in_taps[i] {
+                    fifo_occ[ti] += 1;
+                }
+                st[i].recv += 1;
+                next_accept[i] = cycle + cfg.in_interval;
+                progress = true;
+            }
+
+            // Producers not consumed by the next CE still need to drain:
+            // branch points whose output feeds only side FIFOs, and the
+            // final sink CE (results leave the accelerator).
+            for p in 0..n {
+                if self.feeds_next[p] || st[p].out_fifo == 0 {
+                    continue;
+                }
+                let taps = &self.out_taps[p];
+                if taps.is_empty() {
+                    // Sink: the host consumes results immediately.
+                    st[p].out_fifo = 0;
+                    progress = true;
+                    continue;
+                }
+                if taps.iter().any(|&t| fifo_occ[t] >= self.fifos[t].capacity) {
+                    continue;
+                }
+                st[p].out_fifo -= 1;
+                for &t in taps {
+                    fifo_occ[t] += 1;
+                }
+                progress = true;
+            }
+
+            if progress {
+                last_progress = cycle;
+            } else {
+                // Cycle-skipping: with no transfer/issue/completion this
+                // cycle, nothing can change until the nearest quantum
+                // completion or bus-pacing release. Jump there in one step
+                // (completions still land on their exact cycle because the
+                // skip is the minimum of all pending timers).
+                let mut skip = u64::MAX;
+                for s in st.iter() {
+                    if s.busy > 0 {
+                        skip = skip.min(s.busy);
+                    }
+                }
+                for &na in next_accept.iter() {
+                    if na > cycle {
+                        skip = skip.min(na - cycle);
+                    }
+                }
+                if skip != u64::MAX && skip > 1 {
+                    let adv = skip - 1; // the loop tail adds the final +1
+                    for s in st.iter_mut() {
+                        if s.busy > 0 {
+                            s.busy -= adv;
+                            s.busy_cycles += adv;
+                        }
+                    }
+                    cycle += adv;
+                }
+                if cycle - last_progress > horizon {
+                    let detail = self.deadlock_report(&st, &fifo_occ);
+                    return Err(Deadlock { cycle, detail });
+                }
+            }
+            cycle += 1;
+        }
+
+        // Steady-state period over the measured frames.
+        let w = warmup as usize;
+        let period = if completion.len() > w + 1 {
+            (completion[completion.len() - 1] - completion[w]) as f64 / (completion.len() - 1 - w) as f64
+        } else {
+            completion[completion.len() - 1] as f64
+        };
+        Ok(SimStats {
+            period_cycles: period,
+            first_frame_cycles: completion[0],
+            total_cycles: cycle,
+            frames,
+            busy_cycles: st.iter().map(|s| s.busy_cycles).collect(),
+            stall_input: st.iter().map(|s| s.stall_input).collect(),
+            stall_output: st.iter().map(|s| s.stall_output).collect(),
+            macs_per_frame: self
+                .ces
+                .iter()
+                .map(|c| c.macs_per_opos * c.outputs_per_frame())
+                .collect(),
+            pes: self.ces.iter().map(|c| c.pes).collect(),
+            frame_done,
+        })
+    }
+
+    fn deadlock_report(&self, st: &[CeState], fifo_occ: &[u64]) -> String {
+        let mut s = String::new();
+        for (i, (cfg, ce)) in self.ces.iter().zip(st).enumerate() {
+            if ce.busy > 0 || ce.out_fifo > 0 || ce.occupancy() >= cfg.capacity_px() {
+                s.push_str(&format!(
+                    "CE{i} {}: recv={} freed={} occ={}/{} out_fifo={} next_out={} busy={}\n",
+                    cfg.name,
+                    ce.recv,
+                    ce.freed,
+                    ce.occupancy(),
+                    cfg.capacity_px(),
+                    ce.out_fifo,
+                    ce.next_out,
+                    ce.busy
+                ));
+            }
+        }
+        for (fi, f) in self.fifos.iter().enumerate() {
+            s.push_str(&format!("FIFO{fi} {}: {}/{}\n", f.name, fifo_occ[fi], f.capacity));
+        }
+        s
+    }
+}
+
+/// Whether arrival slot `idx` of a padded frame stream is a padding
+/// position.
+fn is_padding_slot(cfg: &CeConfig, idx: u64) -> bool {
+    let fp = (cfg.f_in + 2 * cfg.pad) as u64;
+    let p = cfg.pad as u64;
+    let (r, c) = (idx / fp, idx % fp);
+    r < p || r >= fp - p || c < p || c >= fp - p
+}

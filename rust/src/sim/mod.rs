@@ -1,0 +1,326 @@
+//! Cycle-level simulator of the streaming multi-CE accelerator.
+//!
+//! This is the substitute for the paper's FPGA implementation (see
+//! DESIGN.md §Substitutions): a cycle-stepped model of the hybrid-CE
+//! pipeline that reproduces the *architectural* behaviours the paper
+//! evaluates — window availability under the fully-reused-FM vs line-based
+//! schemes, padding congestion under direct-insert vs address-generated
+//! padding (Fig 11), stride-induced bubbles, SCB delayed-buffer
+//! synchronization (Fig 6), WRCE ping-pong global buffers, and the
+//! resulting actual MAC efficiency / FPS (Fig 17, Table III).
+//!
+//! A pixel is one spatial position across all channels; FIFOs carry pixel
+//! counts (timing, not values — numerics live in the [`crate::runtime`]
+//! path).
+
+pub mod ce;
+pub mod converter;
+pub mod engine;
+
+pub use ce::{CeClass, CeConfig, PaddingMode};
+pub use converter::OrderConverter;
+pub use engine::{Deadlock, MainSrc, Pipeline, SideFifo, SimStats};
+
+use crate::model::memory::{scb_delay_buffer_bytes, startup_latency_px, CeKind, CePlan, FmScheme};
+use crate::model::throughput::LayerAlloc;
+use crate::nets::{LayerKind, LayerSrc, Network};
+
+/// Simulator options: the optimization toggles of Fig 17.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Padding handling (Fig 11(a) vs (b)).
+    pub padding: PaddingMode,
+    /// FRCE FM-buffer scheme (Fig 6 comparison).
+    pub scheme: FmScheme,
+    /// Extra line for stride > 1 (Fig 11(c) vs (d)).
+    pub stride_extra_line: bool,
+}
+
+impl SimOptions {
+    /// The paper's "baseline" dataflow (Fig 17 "original method without
+    /// any optimizations"): conventional line-granular buffers (pixels are
+    /// released a full line at a time), padding written through the input
+    /// port (Fig 11(a)), no stride slack line (Fig 11(c)).
+    pub fn baseline() -> Self {
+        SimOptions {
+            padding: PaddingMode::DirectInsert,
+            scheme: FmScheme::LineBased,
+            stride_extra_line: false,
+        }
+    }
+
+    /// The proposed dataflow-oriented line buffer scheme (§IV-B).
+    pub fn optimized() -> Self {
+        SimOptions {
+            padding: PaddingMode::AddressGenerated,
+            scheme: FmScheme::FullyReusedFm,
+            stride_extra_line: true,
+        }
+    }
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self::optimized()
+    }
+}
+
+/// Build a simulated pipeline for `net` with per-layer parallelism
+/// `allocs` and the FRCE/WRCE split of `plan`.
+pub fn build_pipeline(net: &Network, allocs: &[LayerAlloc], plan: &CePlan, opts: &SimOptions) -> Pipeline {
+    assert_eq!(allocs.len(), net.layers.len());
+    let n = net.layers.len();
+    let mut ces = Vec::with_capacity(n);
+    let mut main_src = Vec::with_capacity(n);
+    let mut join_side = vec![None; n];
+    let mut out_taps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut in_taps: Vec<Option<usize>> = vec![None; n];
+    let mut source_taps: Vec<usize> = Vec::new();
+    let mut fifos: Vec<SideFifo> = Vec::new();
+
+    for (i, l) in net.layers.iter().enumerate() {
+        let a = allocs[i];
+        let kind = plan.kind(i);
+        let class = match l.kind {
+            LayerKind::Add | LayerKind::Concat => CeClass::Join,
+            LayerKind::Shuffle | LayerKind::Split => CeClass::Passthrough,
+            _ => CeClass::Compute,
+        };
+        let (quantum, pf, pes, macs_per_opos) = if l.kind.is_mac() {
+            let rounds_w = (l.max_pw() as u64).div_ceil(a.pw as u64);
+            (
+                rounds_w * l.reduction_depth(),
+                a.pf,
+                a.pes(),
+                l.macs() / l.out_positions() as u64,
+            )
+        } else {
+            (1, 1, 0, l.macs() / l.out_positions() as u64)
+        };
+        // WRCE STC/PWC/FC buffer the whole input frame (ping-pong GFM);
+        // WRCE DWC/pool stream location-first through a small window.
+        let full_frame = kind == CeKind::Wrce
+            && matches!(l.kind, LayerKind::Stc | LayerKind::Pwc | LayerKind::Fc);
+        // The FM-scheme toggle applies to FRCE line buffers; WRCE windows
+        // always use the minimal fully-reused window.
+        let scheme = if kind == CeKind::Frce { opts.scheme } else { FmScheme::FullyReusedFm };
+        let mut cfg = CeConfig {
+            name: l.name.clone(),
+            class,
+            f_in: l.in_size,
+            f_out: l.out_size,
+            k: l.k,
+            stride: l.stride,
+            pad: l.pad,
+            padding: opts.padding,
+            scheme,
+            stride_extra_line: opts.stride_extra_line,
+            quantum_cycles: quantum,
+            pf,
+            pes,
+            macs_per_opos,
+            full_frame_buffer: full_frame,
+            extra_capacity_px: 0,
+            in_interval: 1,
+        };
+        // Provision the input bus to the CE's own steady-state demand:
+        // compute-cycles-per-frame over arrivals-per-frame. MAC CEs with
+        // long compute get narrow buses (floor >= 1); data-movement CEs
+        // stream at full rate.
+        if l.kind.is_mac() {
+            let t_frame = quantum * (cfg.outputs_per_frame().div_ceil(pf as u64));
+            // ~33% bus headroom over steady-state demand (a realistic
+            // provisioning margin); §IV-B's demand peaks are >= 2x, so the
+            // baseline congestion effects of Fig 11/17 still manifest.
+            cfg.in_interval = (t_frame * 3 / 4 / cfg.arrivals_per_frame()).max(1);
+        }
+        // Quantum-fit: a P_f-position quantum must fit its whole window
+        // span in the buffer (plus one slack pixel so the *next* arrival
+        // can land while the quantum issues).
+        let span = cfg.max_quantum_span() + 1;
+        let base = cfg.formula_capacity_px();
+        if span > base {
+            cfg.extra_capacity_px = span - base;
+        }
+        ces.push(cfg);
+        main_src.push(match l.src {
+            LayerSrc::Prev if i == 0 => MainSrc::Source,
+            LayerSrc::Prev => MainSrc::Ce(i - 1),
+            LayerSrc::Tee(_) => MainSrc::Fifo(usize::MAX), // patched below
+        });
+    }
+
+    // Tee FIFOs.
+    for (i, l) in net.layers.iter().enumerate() {
+        if let LayerSrc::Tee(j) = l.src {
+            let src = &net.layers[j];
+            let hold_px: u64 = net.layers[j..i].iter().map(|p| startup_latency_px(p, opts.scheme)).sum();
+            let frame_px = (src.in_size * src.in_size) as u64;
+            let capacity = if plan.kind(i) == CeKind::Frce {
+                (hold_px + src.in_size as u64 + 16).min(2 * frame_px)
+            } else {
+                2 * frame_px // off-chip DRAM hold
+            };
+            let fi = fifos.len();
+            fifos.push(SideFifo {
+                producer: Some(j),
+                tap_input: true,
+                capacity,
+                occupancy: 0,
+                name: format!("tee->{}", l.name),
+            });
+            in_taps[j] = Some(fi);
+            main_src[i] = MainSrc::Fifo(fi);
+        }
+    }
+
+    // SCB shortcut FIFOs.
+    for scb in &net.scbs {
+        let join = scb.join_layer;
+        let (f, _ch) = scb.snapshot_shape(net);
+        let frame_px = (f * f) as u64;
+        let capacity = if plan.kind(join) == CeKind::Frce {
+            let model_px = scb_delay_buffer_bytes(net, scb, opts.scheme)
+                / net.layers[scb.from_layer].in_ch.max(1) as u64;
+            (model_px + f as u64 + 16).min(2 * frame_px)
+        } else {
+            2 * frame_px // off-chip DRAM hold
+        };
+        let fi = fifos.len();
+        fifos.push(SideFifo {
+            producer: if scb.from_layer == 0 { None } else { Some(scb.from_layer - 1) },
+            tap_input: false,
+            capacity,
+            occupancy: 0,
+            name: format!("scb->{}", net.layers[join].name),
+        });
+        join_side[join] = Some(fi);
+        match scb.from_layer {
+            0 => source_taps.push(fi),
+            fl => out_taps[fl - 1].push(fi),
+        }
+    }
+
+    let feeds_next: Vec<bool> = (0..n)
+        .map(|i| i + 1 < n && net.layers[i + 1].src == LayerSrc::Prev)
+        .collect();
+
+    Pipeline {
+        ces,
+        main_src,
+        join_side,
+        out_taps,
+        in_taps,
+        source_taps,
+        fifos,
+        feeds_next,
+        source_px_per_frame: (net.input_size * net.input_size) as u64,
+    }
+}
+
+/// Convenience wrapper: build, run, return stats.
+pub fn simulate(
+    net: &Network,
+    allocs: &[LayerAlloc],
+    plan: &CePlan,
+    opts: &SimOptions,
+    frames: u64,
+) -> Result<SimStats, Deadlock> {
+    build_pipeline(net, allocs, plan, opts).run(frames, (frames / 2).max(1).min(frames - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{dynamic_parallelism_tuning, Granularity};
+    use crate::model::throughput;
+    use crate::nets::{mobilenet_v2, shufflenet_v2};
+    use crate::zc706;
+
+    fn mbv2_setup(dsp: usize) -> (crate::nets::Network, Vec<LayerAlloc>, CePlan) {
+        let net = mobilenet_v2();
+        let plan = CePlan { boundary: net.layers.len() / 2 };
+        let p = dynamic_parallelism_tuning(&net, &plan, dsp, Granularity::Fgpm);
+        (net, p.allocs, plan)
+    }
+
+    #[test]
+    fn completes_without_deadlock() {
+        let (net, allocs, plan) = mbv2_setup(zc706::DSP_BUDGET);
+        let stats = simulate(&net, &allocs, &plan, &SimOptions::optimized(), 4).unwrap();
+        assert_eq!(stats.frames, 4);
+        assert!(stats.period_cycles > 0.0);
+    }
+
+    #[test]
+    fn optimized_sim_close_to_theoretical_period() {
+        // With the dataflow-oriented buffer scheme the actual period should
+        // approach the Eq-14 bottleneck time (Fig 17: actual ~= theoretical
+        // after optimization).
+        // Use the implemented (ZC706) boundary: the deep-FRCE configuration
+        // the paper actually builds. Mid-boundary WRCE-heavy plans pay a
+        // few extra percent of full-frame hand-off (see EXPERIMENTS.md).
+        let net = mobilenet_v2();
+        let cfg = crate::model::memory::MemoryModelCfg::default();
+        let plan = CePlan {
+            boundary: crate::alloc::balanced_memory_allocation(&net, crate::zc706::SRAM_BYTES, &cfg).boundary,
+        };
+        let p = dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+        let allocs = p.allocs;
+        let perf = throughput::evaluate(&net, &allocs);
+        let stats = simulate(&net, &allocs, &plan, &SimOptions::optimized(), 12).unwrap();
+        // The asynchronous full-frame (WRCE) hand-off adds a few percent
+        // over the ideal frame-synchronous barrel pipeline; see
+        // EXPERIMENTS.md (Fig 17 discussion).
+        let ratio = stats.period_cycles / perf.t_max as f64;
+        assert!(ratio < 1.10, "period {} vs t_max {} (ratio {ratio})", stats.period_cycles, perf.t_max);
+        assert!(ratio >= 0.999, "sim faster than theory? ratio {ratio}");
+    }
+
+    #[test]
+    fn baseline_padding_slower_than_optimized() {
+        // Fig 17: direct-insert padding + missing stride line cost real
+        // efficiency.
+        let (net, allocs, plan) = mbv2_setup(zc706::DSP_BUDGET);
+        let base = simulate(&net, &allocs, &plan, &SimOptions::baseline(), 8).unwrap();
+        let opt = simulate(&net, &allocs, &plan, &SimOptions::optimized(), 8).unwrap();
+        assert!(
+            base.period_cycles > opt.period_cycles,
+            "baseline {} <= optimized {}",
+            base.period_cycles,
+            opt.period_cycles
+        );
+    }
+
+    #[test]
+    fn shufflenet_two_branch_units_stream() {
+        let net = shufflenet_v2();
+        let plan = CePlan { boundary: net.layers.len() / 2 };
+        let p = dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+        let stats = simulate(&net, &p.allocs, &plan, &SimOptions::optimized(), 4).unwrap();
+        assert!(stats.mac_efficiency() > 0.5, "eff {}", stats.mac_efficiency());
+    }
+
+    #[test]
+    fn all_wrce_plan_still_streams() {
+        let (net, allocs, _) = mbv2_setup(512);
+        let plan = CePlan { boundary: 0 };
+        let stats = simulate(&net, &allocs, &plan, &SimOptions::optimized(), 3).unwrap();
+        assert!(stats.period_cycles > 0.0);
+    }
+
+    #[test]
+    fn line_based_scheme_not_faster() {
+        let (net, allocs, plan) = mbv2_setup(855);
+        let fr = simulate(&net, &allocs, &plan, &SimOptions::optimized(), 8).unwrap();
+        let lb = simulate(
+            &net,
+            &allocs,
+            &plan,
+            &SimOptions { scheme: FmScheme::LineBased, ..SimOptions::optimized() },
+            8,
+        )
+        .unwrap();
+        assert!(lb.period_cycles >= fr.period_cycles * 0.999);
+    }
+}

@@ -1,0 +1,130 @@
+//! Self-contained utilities replacing unavailable third-party crates in
+//! this offline build: a JSON parser ([`json`]), a deterministic PRNG +
+//! property-test harness ([`prop`]), and a micro-bench timer ([`bench`]).
+
+pub mod json;
+
+/// Deterministic xorshift64* PRNG + tiny property-test harness (proptest
+/// is not vendored; invariant tests in `rust/tests/proptests.rs` use
+/// this).
+pub mod prop {
+    pub struct Rng(u64);
+
+    impl Rng {
+        pub fn new(seed: u64) -> Self {
+            Rng(seed.max(1))
+        }
+
+        pub fn next_u64(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            self.0 = x;
+            x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        }
+
+        /// Uniform in `[lo, hi]` (inclusive).
+        pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+            assert!(lo <= hi);
+            lo + (self.next_u64() as usize) % (hi - lo + 1)
+        }
+
+        pub fn f64(&mut self) -> f64 {
+            (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+        }
+
+        pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+            &xs[self.range(0, xs.len() - 1)]
+        }
+    }
+
+    /// Run `f` against `cases` generated inputs; on failure, report the
+    /// seed so the case can be replayed.
+    pub fn check<G, T, F>(name: &str, cases: usize, mut gen: G, mut f: F)
+    where
+        G: FnMut(&mut Rng) -> T,
+        T: std::fmt::Debug,
+        F: FnMut(&T) -> Result<(), String>,
+    {
+        for case in 0..cases {
+            let seed = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case as u64 + 1);
+            let mut rng = Rng::new(seed);
+            let input = gen(&mut rng);
+            if let Err(msg) = f(&input) {
+                panic!("property {name} failed on case {case} (seed {seed:#x}):\n  input: {input:?}\n  {msg}");
+            }
+        }
+    }
+}
+
+/// Micro-benchmark timing (criterion is not vendored). Benches under
+/// `rust/benches/` use this to print `name ... median_ms (min..max, N
+/// iters)` lines consumed by EXPERIMENTS.md.
+pub mod bench {
+    use std::time::Instant;
+
+    pub struct Sample {
+        pub name: String,
+        pub median_ms: f64,
+        pub min_ms: f64,
+        pub max_ms: f64,
+        pub iters: usize,
+    }
+
+    /// Time `f` adaptively: run until ~`budget_ms` of wall time or 50
+    /// iterations, whichever first (minimum 3 iterations).
+    pub fn time<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> Sample {
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while (times.len() < 3) || (start.elapsed().as_secs_f64() * 1e3 < budget_ms && times.len() < 50) {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = Sample {
+            name: name.to_string(),
+            median_ms: times[times.len() / 2],
+            min_ms: times[0],
+            max_ms: *times.last().unwrap(),
+            iters: times.len(),
+        };
+        println!(
+            "bench {:44} {:10.3} ms  (min {:.3}, max {:.3}, n={})",
+            s.name, s.median_ms, s.min_ms, s.max_ms, s.iters
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop::Rng;
+
+    #[test]
+    fn rng_is_deterministic_and_spread() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        let mut uniq = xs.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), xs.len());
+    }
+
+    #[test]
+    fn range_is_inclusive_and_bounded() {
+        let mut r = Rng::new(7);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = r.range(3, 6);
+            assert!((3..=6).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 6;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+}

@@ -1,0 +1,389 @@
+//! Property-based tests over the coordinator/allocator/model invariants
+//! (using the self-contained harness in `repro::util::prop`; proptest is
+//! not vendored in this offline build).
+
+use repro::alloc::{self, fgpm, parallelism::BudgetKind, Granularity};
+use repro::model::memory::{CePlan, MemoryModelCfg};
+use repro::model::{dram, memory, throughput};
+use repro::nets;
+use repro::sim::{self, SimOptions};
+use repro::util::json::Json;
+use repro::util::prop::{check, Rng};
+
+// ---------------------------------------------------------------------
+// FGPM space properties (Eq 11, §IV-A)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_fgpm_space_is_canonical() {
+    check("fgpm_space", 300, |r: &mut Rng| r.range(1, 5000), |&m| {
+        let space = fgpm::fgpm_space(m);
+        // Strictly ascending; starts at 1; ends at m.
+        if space.first() != Some(&1) || space.last() != Some(&m) {
+            return Err("endpoints".into());
+        }
+        if space.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("not ascending".into());
+        }
+        // Every distinct T is hit exactly once, by its cheapest P.
+        let mut all: Vec<usize> = (1..=m).map(|p| fgpm::rounds(m, p)).collect();
+        all.sort_unstable();
+        all.dedup();
+        if all.len() != space.len() {
+            return Err(format!("covers {} of {} T values", space.len(), all.len()));
+        }
+        for &p in &space {
+            if p > 1 && fgpm::rounds(m, p - 1) == fgpm::rounds(m, p) {
+                return Err(format!("p={p} not minimal for its T"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fgpm_size_tracks_closed_form() {
+    check("fgpm_size", 200, |r: &mut Rng| r.range(1, 100_000), |&m| {
+        let sz = fgpm::fgpm_space(m).len() as i64;
+        let formula = 2 * (m as f64).sqrt().floor() as i64;
+        if (sz - formula).abs() > 1 {
+            return Err(format!("{sz} vs 2*floor(sqrt) {formula}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_factor_space_subset_of_fgpm_times() {
+    check("factor_subset", 100, |r: &mut Rng| r.range(2, 2048), |&m| {
+        let gt: Vec<usize> = fgpm::fgpm_space(m).iter().map(|&p| fgpm::rounds(m, p)).collect();
+        for &p in &fgpm::factor_space(m) {
+            if !gt.contains(&fgpm::rounds(m, p)) {
+                return Err(format!("factor {p} time missing"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padded_dim_bounds() {
+    check(
+        "padded_dim",
+        200,
+        |r: &mut Rng| (r.range(1, 4096), r.range(1, 4096)),
+        |&(m, p)| {
+            let pad = fgpm::padded_dim(m, p);
+            if pad < m || pad >= m + p {
+                return Err(format!("padded {pad} outside [{m}, {})", m + p));
+            }
+            if pad % p != 0 {
+                return Err("padded dim not a multiple of p".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Algorithm 2 invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_tuner_respects_random_budgets_and_is_monotone() {
+    let net = nets::shufflenet_v2();
+    check(
+        "tuner_budget",
+        12,
+        |r: &mut Rng| (r.range(30, 3000), r.range(0, net.layers.len())),
+        |&(budget, boundary)| {
+            let plan = CePlan { boundary };
+            let p = alloc::dynamic_parallelism_tuning(&net, &plan, budget, Granularity::Fgpm);
+            if p.dsps > budget {
+                return Err(format!("used {} of {budget}", p.dsps));
+            }
+            let perf = throughput::evaluate(&net, &p.allocs);
+            let p2 = alloc::dynamic_parallelism_tuning(&net, &plan, budget * 2, Granularity::Fgpm);
+            let perf2 = throughput::evaluate(&net, &p2.allocs);
+            if perf2.t_max > perf.t_max {
+                return Err("more budget made it slower".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pe_budget_mode_counts_pes() {
+    let net = nets::mobilenet_v1();
+    check("pe_budget", 10, |r: &mut Rng| r.range(40, 4000), |&budget| {
+        let plan = CePlan { boundary: net.layers.len() / 2 };
+        let p = alloc::parallelism::dynamic_parallelism_tuning_with(
+            &net,
+            &plan,
+            budget,
+            Granularity::Fgpm,
+            BudgetKind::Pes,
+        );
+        if p.pes > budget {
+            return Err(format!("{} PEs > budget {budget}", p.pes));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Memory/DRAM model invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_dram_monotone_and_sram_bounded() {
+    check(
+        "mem_models",
+        40,
+        |r: &mut Rng| {
+            let nets_all = nets::all_networks();
+            let net = r.range(0, nets_all.len() - 1);
+            let b = r.range(0, nets_all[net].layers.len());
+            (net, b)
+        },
+        |&(ni, b)| {
+            let net = &nets::all_networks()[ni];
+            let cfg = MemoryModelCfg::default();
+            let d0 = dram::proposed(net, &CePlan { boundary: b }).total();
+            if b + 1 <= net.layers.len() {
+                let d1 = dram::proposed(net, &CePlan { boundary: b + 1 }).total();
+                if d1 > d0 {
+                    return Err("DRAM not monotone in boundary".into());
+                }
+            }
+            let s = memory::sram_report(net, &CePlan { boundary: b }, &cfg).total();
+            // Never exceeds all-weights + all-double-buffered-FMs.
+            let bound: u64 = net.total_weight_bytes()
+                + 2 * net.layers.iter().map(|l| l.in_fm_bytes()).sum::<u64>()
+                + (4 << 20);
+            if s > bound {
+                return Err(format!("SRAM {s} above bound {bound}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_line_buffer_scheme_ordering() {
+    // For every windowed layer: fully-reused buffer <= line-based buffer.
+    check(
+        "line_buffer",
+        40,
+        |r: &mut Rng| (r.range(0, 3), r.f64()),
+        |&(ni, frac)| {
+            let net = &nets::all_networks()[ni];
+            let idx = ((net.layers.len() - 1) as f64 * frac) as usize;
+            let l = &net.layers[idx];
+            if l.kind.needs_line_buffer() && l.k > 1 {
+                let fr = memory::line_buffer_px(l, memory::FmScheme::FullyReusedFm, false);
+                let lb = memory::line_buffer_px(l, memory::FmScheme::LineBased, false);
+                if fr > lb {
+                    return Err(format!("{}: {fr} > {lb}", l.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Simulator: deadlock freedom across random configurations — the paper's
+// delayed-buffer sizing claim (§III-B).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_sim_deadlock_free_on_random_configs() {
+    let nets_all = [nets::mobilenet_v2(), nets::shufflenet_v2()];
+    check(
+        "sim_deadlock_free",
+        6,
+        |r: &mut Rng| {
+            (
+                r.range(0, 1),
+                r.range(0, 64),
+                r.range(100, 1200),
+                r.range(0, 1) == 1,
+            )
+        },
+        |&(ni, bfrac, dsp, baseline)| {
+            let net = &nets_all[ni];
+            let boundary = bfrac.min(net.layers.len());
+            let plan = CePlan { boundary };
+            let p = alloc::dynamic_parallelism_tuning(net, &plan, dsp, Granularity::Fgpm);
+            let opts = if baseline { SimOptions::baseline() } else { SimOptions::optimized() };
+            match sim::simulate(net, &p.allocs, &plan, &opts, 3) {
+                Ok(stats) => {
+                    if stats.period_cycles <= 0.0 {
+                        return Err("non-positive period".into());
+                    }
+                    Ok(())
+                }
+                Err(e) => Err(format!("deadlock: {e}")),
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// JSON parser: print/parse round-trip on random documents.
+// ---------------------------------------------------------------------
+
+fn gen_json(r: &mut Rng, depth: usize) -> (String, Json) {
+    use std::collections::BTreeMap;
+    match if depth == 0 { r.range(0, 2) } else { r.range(0, 4) } {
+        0 => {
+            let n = (r.range(0, 2_000_000) as f64) / 16.0;
+            (format!("{n}"), Json::Num(n))
+        }
+        1 => {
+            let words = ["stem", "bneck", "a b", "x\\ny", "тест"];
+            let w = *r.pick(&words);
+            (format!("{:?}", w), Json::Str(w.to_string()))
+        }
+        2 => ("true".into(), Json::Bool(true)),
+        3 => {
+            let n = r.range(0, 3);
+            let mut parts = Vec::new();
+            let mut vals = Vec::new();
+            for _ in 0..n {
+                let (s, v) = gen_json(r, depth - 1);
+                parts.push(s);
+                vals.push(v);
+            }
+            (format!("[{}]", parts.join(",")), Json::Arr(vals))
+        }
+        _ => {
+            let n = r.range(0, 3);
+            let mut parts = Vec::new();
+            let mut map = BTreeMap::new();
+            for i in 0..n {
+                let key = format!("k{i}");
+                let (s, v) = gen_json(r, depth - 1);
+                parts.push(format!("{key:?}:{s}"));
+                map.insert(key, v);
+            }
+            (format!("{{{}}}", parts.join(",")), Json::Obj(map))
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json_roundtrip", 300, |r: &mut Rng| gen_json(r, 3), |(text, expect)| {
+        match Json::parse(text) {
+            Ok(v) if v == *expect => Ok(()),
+            Ok(v) => Err(format!("parsed {v:?}")),
+            Err(e) => Err(format!("{e}")),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Window geometry: the CE's closed-form required_arrival / oldest_needed
+// vs a brute-force window enumeration.
+// ---------------------------------------------------------------------
+
+fn brute_force_window(
+    f_in: usize,
+    k: usize,
+    s: usize,
+    pad: usize,
+    padded_stream: bool,
+    opos: u64,
+) -> (u64, u64) {
+    // Enumerate the input coordinates (in arrival-grid terms) that the
+    // output position's window touches; return (max raster index, min
+    // window start raster index).
+    let f_out = (f_in + 2 * pad - k) / s + 1;
+    let (r, c) = ((opos as usize) / f_out, (opos as usize) % f_out);
+    let fa = if padded_stream { f_in + 2 * pad } else { f_in };
+    let mut max_idx = 0u64;
+    let mut min_start = u64::MAX;
+    for dy in 0..k {
+        for dx in 0..k {
+            let (ry, rx) = (r * s + dy, c * s + dx);
+            let (gy, gx) = if padded_stream {
+                (ry as i64, rx as i64)
+            } else {
+                (ry as i64 - pad as i64, rx as i64 - pad as i64)
+            };
+            if gy < 0 || gx < 0 || gy >= fa as i64 || gx >= fa as i64 {
+                continue; // padding: not an arrival
+            }
+            let idx = gy as u64 * fa as u64 + gx as u64;
+            max_idx = max_idx.max(idx);
+            if dy == 0 && dx == 0 {
+                min_start = idx;
+            }
+        }
+    }
+    if min_start == u64::MAX {
+        // Window origin is padding: the live set starts at the clamped
+        // origin row/col.
+        let oy = (r * s).saturating_sub(if padded_stream { 0 } else { pad });
+        let ox = (c * s).saturating_sub(if padded_stream { 0 } else { pad });
+        min_start = (oy * fa + ox) as u64;
+    }
+    (max_idx, min_start)
+}
+
+#[test]
+fn prop_window_geometry_matches_brute_force() {
+    use repro::model::memory::FmScheme;
+    use repro::sim::{CeClass, CeConfig, PaddingMode};
+    check(
+        "window_geometry",
+        200,
+        |r: &mut Rng| {
+            let k = *r.pick(&[2usize, 3, 5]);
+            let s = *r.pick(&[1usize, 2]);
+            let pad = r.range(0, k / 2);
+            let f_in = r.range(k + s, 24);
+            let padded = r.range(0, 1) == 1 && pad > 0;
+            (f_in, k, s, pad, padded)
+        },
+        |&(f_in, k, s, pad, padded)| {
+            let f_out = (f_in + 2 * pad - k) / s + 1;
+            let cfg = CeConfig {
+                name: "t".into(),
+                class: CeClass::Compute,
+                f_in,
+                f_out,
+                k,
+                stride: s,
+                pad,
+                padding: if padded { PaddingMode::DirectInsert } else { PaddingMode::AddressGenerated },
+                scheme: FmScheme::FullyReusedFm,
+                stride_extra_line: false,
+                quantum_cycles: 1,
+                pf: 1,
+                pes: 1,
+                macs_per_opos: 1,
+                full_frame_buffer: false,
+                extra_capacity_px: 0,
+                in_interval: 1,
+            };
+            for opos in 0..(f_out * f_out) as u64 {
+                let (bf_req, bf_old) = brute_force_window(f_in, k, s, pad, padded, opos);
+                let req = cfg.required_arrival(opos);
+                if req != bf_req {
+                    return Err(format!("required({opos}) = {req}, brute force {bf_req} (cfg {f_in},{k},{s},{pad},{padded})"));
+                }
+                let old = cfg.oldest_needed(opos);
+                if old > bf_old {
+                    return Err(format!(
+                        "oldest({opos}) = {old} releases live pixel {bf_old} (cfg {f_in},{k},{s},{pad},{padded})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

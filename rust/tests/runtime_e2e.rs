@@ -1,0 +1,168 @@
+//! End-to-end runtime tests: AOT artifacts -> PJRT -> golden check.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! note) when the artifacts are absent so `cargo test` stays usable on a
+//! fresh checkout.
+
+use repro::coordinator;
+use repro::runtime::{artifacts_dir, Engine, StageKind};
+
+fn have(short: &str) -> bool {
+    let ok = artifacts_dir().join(format!("{short}_manifest.json")).exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first ({short})");
+    }
+    ok
+}
+
+#[test]
+fn mbv2_sequential_inference_matches_golden() {
+    if !have("mbv2") {
+        return;
+    }
+    let engine = Engine::load(&artifacts_dir(), "mbv2").unwrap();
+    let input = engine.manifest.read_f32(&engine.manifest.golden_input).unwrap();
+    let golden = engine.manifest.read_f32(&engine.manifest.golden_logits).unwrap();
+    let logits = engine.infer(&input).unwrap();
+    assert_eq!(logits.len(), golden.len());
+    let max_err = logits.iter().zip(&golden).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "max |err| = {max_err}");
+}
+
+#[test]
+fn mbv2_stagewise_shapes_and_checksums() {
+    if !have("mbv2") {
+        return;
+    }
+    let engine = Engine::load(&artifacts_dir(), "mbv2").unwrap();
+    let mut x = engine.manifest.read_f32(&engine.manifest.golden_input).unwrap();
+    for stage in &engine.stages {
+        x = stage.run(&x).unwrap();
+        let expect: usize = stage.spec.out_shape.iter().product();
+        assert_eq!(x.len(), expect, "stage {}", stage.spec.name);
+        let mean = x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64;
+        assert!(
+            (mean - stage.spec.mean).abs() < 1e-3 + stage.spec.mean.abs() * 1e-3,
+            "stage {}: mean {mean} vs manifest {}",
+            stage.spec.name,
+            stage.spec.mean
+        );
+    }
+}
+
+#[test]
+fn snv2_sequential_inference_matches_golden() {
+    if !have("snv2") {
+        return;
+    }
+    let engine = Engine::load(&artifacts_dir(), "snv2").unwrap();
+    let input = engine.manifest.read_f32(&engine.manifest.golden_input).unwrap();
+    let golden = engine.manifest.read_f32(&engine.manifest.golden_logits).unwrap();
+    let logits = engine.infer(&input).unwrap();
+    let max_err = logits.iter().zip(&golden).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "max |err| = {max_err}");
+}
+
+#[test]
+fn frce_wrce_split_matches_manifest_boundary() {
+    for short in ["mbv2", "snv2"] {
+        if !have(short) {
+            continue;
+        }
+        let engine = Engine::load(&artifacts_dir(), short).unwrap();
+        let b = engine.manifest.boundary;
+        for (i, s) in engine.stages.iter().enumerate() {
+            let expect = if i < b { StageKind::Frce } else { StageKind::Wrce };
+            assert_eq!(s.spec.kind, expect, "{short} stage {i}");
+            // FRCE stages stream no weights; WRCE stages stream all theirs.
+            if s.spec.kind == StageKind::Frce {
+                assert!(s.spec.params.is_empty());
+                assert_eq!(s.streamed_bytes_per_frame(), 0);
+            } else {
+                assert!(!s.spec.params.is_empty());
+            }
+        }
+        // Eq-13 weight term == sum over WRCE stages.
+        let dram = engine.dram_weight_bytes_8bit();
+        assert!(dram > 0);
+    }
+}
+
+#[test]
+fn streaming_coordinator_pipelines_and_verifies() {
+    if !have("mbv2") {
+        return;
+    }
+    let report = coordinator::run_streaming(artifacts_dir(), "mbv2", 6, 3).unwrap();
+    assert_eq!(report.frames, 6);
+    assert!(report.max_abs_err < 1e-3, "err {}", report.max_abs_err);
+    assert!(report.fps > 0.0);
+    assert_eq!(report.groups.len(), 3);
+    // The partition covers all stages contiguously.
+    assert_eq!(report.groups[0].stages.0, 0);
+    for w in report.groups.windows(2) {
+        assert_eq!(w[0].stages.1, w[1].stages.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection: the runtime must reject corrupted artifacts with
+// errors, never silently compute garbage.
+// ---------------------------------------------------------------------
+
+#[test]
+fn rejects_corrupt_manifest_json() {
+    let dir = std::env::temp_dir().join("repro_fail_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad_manifest.json"), "{ not json").unwrap();
+    let err = repro::runtime::Manifest::load(&dir, "bad").unwrap_err();
+    assert!(format!("{err}").contains("parse error"), "{err}");
+}
+
+#[test]
+fn rejects_missing_manifest() {
+    let dir = std::env::temp_dir().join("repro_fail_missing");
+    std::fs::create_dir_all(&dir).unwrap();
+    assert!(repro::runtime::Manifest::load(&dir, "nope").is_err());
+}
+
+#[test]
+fn rejects_truncated_weight_blob() {
+    if !have("mbv2") {
+        return;
+    }
+    // Copy the manifest + HLO files but truncate the weights blob: stage
+    // compilation must fail on the out-of-range slice, not fabricate data.
+    let src = artifacts_dir();
+    let dir = std::env::temp_dir().join("repro_fail_weights");
+    std::fs::create_dir_all(&dir).unwrap();
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let p = entry.unwrap().path();
+        let name = p.file_name().unwrap().to_str().unwrap().to_string();
+        if name.starts_with("mbv2") {
+            std::fs::copy(&p, dir.join(&name)).unwrap();
+        }
+    }
+    std::fs::write(dir.join("mbv2_weights.bin"), [0u8; 64]).unwrap();
+    let result = std::panic::catch_unwind(|| Engine::load(&dir, "mbv2"));
+    assert!(result.is_err() || result.unwrap().is_err(), "truncated weights accepted");
+}
+
+#[test]
+fn rejects_wrong_input_length() {
+    if !have("mbv2") {
+        return;
+    }
+    let engine = Engine::load(&artifacts_dir(), "mbv2").unwrap();
+    let err = engine.stages[0].run(&[0.0f32; 7]).unwrap_err();
+    assert!(format!("{err}").contains("input len"), "{err}");
+}
+
+#[test]
+fn odd_byte_f32_file_is_rejected() {
+    let dir = std::env::temp_dir().join("repro_fail_f32");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("odd.bin");
+    std::fs::write(&p, [1u8, 2, 3]).unwrap();
+    assert!(repro::runtime::read_f32_file(&p).is_err());
+}
