@@ -1,21 +1,21 @@
 //! Design-space exploration with the resource-aware methodology (§V):
-//! run Algorithm 1 + Algorithm 2 for every zoo network across a range of
-//! FPGA-like budgets, demonstrating the scalability claim of Fig 12/15.
+//! compile a [`Design`] for every zoo network across a range of
+//! [`Platform`] budgets, demonstrating the scalability claim of Fig 12/15.
+//! With the façade a multi-platform sweep is a one-liner per cell.
 //!
 //! ```sh
 //! cargo run --release --offline --example allocate_design
 //! ```
 
-use repro::alloc::{self, Granularity};
-use repro::{nets, zc706};
+use repro::{nets, Design, Platform};
 
 fn main() {
-    // (name, SRAM bytes, DSP budget) — small/edge, ZC706, and a larger
-    // mid-range part.
-    let budgets: [(&str, u64, usize); 3] = [
-        ("edge (0.9MB, 220 DSP)", 900 * 1024, 220),
-        ("ZC706 (1.8MB, 855 DSP)", zc706::SRAM_BYTES, zc706::DSP_BUDGET),
-        ("mid (4MB, 2520 DSP)", 4 * 1024 * 1024, 2520),
+    // Small/edge, the paper's ZC706, and a larger mid-range part — all
+    // expressed as named Platform budgets.
+    let platforms = [
+        Platform::custom("edge (0.9MB, 220 DSP)", 900 * 1024, 220),
+        Platform::zc706(),
+        Platform::custom("mid (4MB, 2520 DSP)", 4 * 1024 * 1024, 2520),
     ];
 
     for net in nets::all_networks() {
@@ -24,18 +24,18 @@ fn main() {
             "{:24} {:>8} {:>7} {:>7} {:>9} {:>9} {:>8} {:>8}",
             "platform", "boundary", "PEs", "DSPs", "SRAM MB", "DRAM MB", "FPS", "eff"
         );
-        for (label, sram, dsp) in budgets {
-            let d = alloc::design_point(&net, sram, dsp, Granularity::Fgpm);
+        for platform in &platforms {
+            let d = Design::builder(&net).platform(platform.clone()).build();
             println!(
                 "{:24} {:>8} {:>7} {:>7} {:>9.2} {:>9.2} {:>8.1} {:>7.2}%",
-                label,
-                d.memory.boundary,
-                d.parallelism.pes,
-                d.parallelism.dsps,
-                d.sram_bytes as f64 / 1048576.0,
-                d.dram_bytes as f64 / 1048576.0,
-                d.performance.fps,
-                d.performance.mac_efficiency * 100.0
+                platform.name,
+                d.ce_plan().boundary,
+                d.parallelism().pes,
+                d.parallelism().dsps,
+                d.sram_bytes() as f64 / 1048576.0,
+                d.dram_bytes() as f64 / 1048576.0,
+                d.predicted().fps,
+                d.predicted().mac_efficiency * 100.0
             );
         }
         println!();

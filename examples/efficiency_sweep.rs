@@ -3,11 +3,15 @@
 //! factorized-granularity baseline, and print the staircase effect that
 //! motivates §IV-A.
 //!
+//! The FRCE/WRCE boundary each sweep runs under is the ZC706
+//! [`Platform`]'s Algorithm-1 placement (Algorithm 2 is what the sweep
+//! itself varies, so no full `Design` build is needed here).
+//!
 //! ```sh
 //! cargo run --release --offline --example efficiency_sweep [net]
 //! ```
 
-use repro::{nets, report};
+use repro::{nets, report, Platform};
 
 fn main() {
     let filter = std::env::args().nth(1);
@@ -19,7 +23,9 @@ fn main() {
                 continue;
             }
         }
-        println!("=== {} ===", net.name);
+        // The same boundary fig15_sweep runs under (one source of truth).
+        let boundary = report::zc706_boundary(&net);
+        println!("=== {} (FRCE/WRCE boundary {} @ {}) ===", net.name, boundary, Platform::zc706().name);
         let pts = report::fig15_sweep(&net, &budgets);
         println!(
             "{:>6} {:>10} {:>10} {:>11} {:>11} {:>12}",

@@ -1,21 +1,22 @@
-//! Quickstart: the five-minute tour of the library.
+//! Quickstart: the five-minute tour of the library, organized around the
+//! `Design`/`Platform` façade.
 //!
 //! ```sh
 //! cargo run --release --offline --example quickstart
 //! ```
 //!
 //! 1. Load a network description from the zoo.
-//! 2. Run the paper's resource-aware methodology (Algorithm 1 + 2) for the
-//!    ZC706 budget.
-//! 3. Cycle-simulate the resulting accelerator and compare actual vs
+//! 2. Compile a [`Design`] for the ZC706 [`Platform`] — one builder call
+//!    runs the paper's whole resource-aware methodology (Algorithm 1
+//!    places the FRCE/WRCE boundary, Algorithm 2 tunes parallelism).
+//! 3. Cycle-simulate the design (`design.simulate`) and compare actual vs
 //!    theoretical MAC efficiency.
-//! 4. If `make artifacts` has been run, execute one real inference through
+//! 4. Round-trip the design through its stable JSON form — the artifact
+//!    benches and CI persist and diff.
+//! 5. If `make artifacts` has been run, execute one real inference through
 //!    the AOT-compiled PJRT pipeline and check it against the golden.
 
-use repro::alloc::{self, Granularity};
-use repro::model::memory::CePlan;
-use repro::sim::{self, SimOptions};
-use repro::{nets, runtime, zc706, CLOCK_HZ};
+use repro::{nets, runtime, Design, Platform};
 
 fn main() -> anyhow::Result<()> {
     // 1. A network from the zoo.
@@ -29,40 +30,45 @@ fn main() -> anyhow::Result<()> {
         net.scbs.len()
     );
 
-    // 2. Resource-aware allocation for the ZC706 budget.
-    let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
+    // 2. One builder call = the whole resource-aware methodology.
+    let design = Design::builder(&net).platform(Platform::zc706()).build();
     println!(
         "design point: boundary={} ({} FRCEs / {} WRCEs), {} PEs on {} DSPs, \
          SRAM {:.2} MB, DRAM {:.2} MB/frame",
-        d.memory.boundary,
-        d.memory.boundary,
-        net.layers.len() - d.memory.boundary,
-        d.parallelism.pes,
-        d.parallelism.dsps,
-        d.sram_bytes as f64 / 1048576.0,
-        d.dram_bytes as f64 / 1048576.0,
+        design.ce_plan().boundary,
+        design.ce_plan().boundary,
+        net.layers.len() - design.ce_plan().boundary,
+        design.parallelism().pes,
+        design.parallelism().dsps,
+        design.sram_bytes() as f64 / 1048576.0,
+        design.dram_bytes() as f64 / 1048576.0,
     );
     println!(
         "theoretical: {:.1} FPS @200MHz, MAC efficiency {:.2}%",
-        d.performance.fps,
-        d.performance.mac_efficiency * 100.0
+        design.predicted().fps,
+        design.predicted().mac_efficiency * 100.0
     );
 
     // 3. Cycle-level simulation of the streaming pipeline.
-    let plan = CePlan { boundary: d.memory.boundary };
-    let stats = sim::simulate(&net, &d.parallelism.allocs, &plan, &SimOptions::optimized(), 10)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let clock = design.platform().clock_hz;
+    let stats = design.simulate(10).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "simulated:   {:.1} FPS @200MHz, actual MAC efficiency {:.2}%, latency {:.2} ms",
-        stats.fps(CLOCK_HZ),
+        stats.fps(clock),
         stats.mac_efficiency() * 100.0,
-        stats.latency_ms(CLOCK_HZ)
+        stats.latency_ms(clock)
     );
 
-    // 4. Real numerics through the AOT artifacts (optional).
+    // 4. Designs persist as stable one-line JSON and reload bit-identically.
+    let json = design.to_json();
+    let reloaded = Design::from_json(&json).map_err(|e| anyhow::anyhow!(e))?;
+    assert_eq!(json, reloaded.to_json());
+    println!("design JSON round-trip OK ({} bytes)", json.len());
+
+    // 5. Real numerics through the AOT artifacts (optional).
     let dir = runtime::artifacts_dir();
     if dir.join("mbv2_manifest.json").exists() {
-        let engine = runtime::Engine::load(&dir, "mbv2")?;
+        let engine = runtime::Engine::load_for(&design, &dir)?;
         let input = engine.manifest.read_f32(&engine.manifest.golden_input)?;
         let golden = engine.manifest.read_f32(&engine.manifest.golden_logits)?;
         let logits = engine.infer(&input)?;

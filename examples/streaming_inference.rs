@@ -8,16 +8,15 @@
 //! via PJRT and chained by the threaded streaming coordinator — FRCE
 //! stages carry their weights as on-chip constants, WRCE stages receive
 //! their weights from the host-memory "DRAM" on every frame. Every output
-//! frame is checked against the golden logits.
+//! frame is checked against the golden logits. The projected hardware
+//! numbers come from the same [`Design`] artifact that drives the
+//! coordinator (`coordinator::run_streaming_design`).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --offline --example streaming_inference
 //! ```
 
-use repro::alloc::{self, Granularity};
-use repro::model::memory::CePlan;
-use repro::sim::{self, SimOptions};
-use repro::{coordinator, nets, runtime, zc706, CLOCK_HZ};
+use repro::{coordinator, nets, runtime, Design, Platform};
 
 fn main() -> anyhow::Result<()> {
     let dir = runtime::artifacts_dir();
@@ -32,8 +31,11 @@ fn main() -> anyhow::Result<()> {
             println!("{short}: artifacts missing — run `make artifacts`");
             continue;
         }
+        // One Design per network: it names the artifacts to stream AND the
+        // accelerator configuration whose performance we project.
+        let design = Design::builder(&net).platform(Platform::zc706()).build();
         println!("=== {} : streaming {} frames through {} CE groups ===", net.name, frames, workers);
-        let r = coordinator::run_streaming(dir.clone(), short, frames, workers)?;
+        let r = coordinator::run_streaming_design(&design, dir.clone(), frames, workers)?;
         println!(
             "functional: {:.2} FPS (XLA-CPU substrate), mean latency {:.1} ms, max |logits err| {:.2e}",
             r.fps,
@@ -52,14 +54,12 @@ fn main() -> anyhow::Result<()> {
 
         // Projected hardware performance of the same workload: the paper's
         // headline metric comes from the cycle-level simulator at 200 MHz.
-        let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
-        let plan = CePlan { boundary: d.memory.boundary };
-        let stats = sim::simulate(&net, &d.parallelism.allocs, &plan, &SimOptions::optimized(), 10)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let clock = design.platform().clock_hz;
+        let stats = design.simulate(10).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!(
             "projected accelerator: {:.1} FPS @200MHz, MAC efficiency {:.2}% \
              (paper: {:.1} FPS / {:.2}%)\n",
-            stats.fps(CLOCK_HZ),
+            stats.fps(clock),
             stats.mac_efficiency() * 100.0,
             if short == "mbv2" { 985.8 } else { 2092.4 },
             if short == "mbv2" { 94.35 } else { 94.58 },

@@ -2,56 +2,65 @@
 //!
 //! * cycle-level simulator throughput (wall ms per simulated frame) — the
 //!   L3 bottleneck for every sweep-style experiment;
-//! * allocation pipeline latency (Alg 1 + Alg 2 at ZC706 budgets);
-//! * FGPM space construction;
+//! * full `Design` compilation latency (Alg 1 + Alg 2 at the ZC706
+//!   platform) and its JSON persistence round-trip;
+//! * the individual Alg 1 / Alg 2 / FGPM-space stages;
 //! * streaming-coordinator overhead vs the busiest worker (only when
 //!   artifacts exist).
 
 use repro::alloc::{self, Granularity};
-use repro::model::memory::{CePlan, MemoryModelCfg};
+use repro::model::memory::MemoryModelCfg;
 use repro::sim::{self, SimOptions};
 use repro::util::bench::time;
-use repro::{coordinator, nets, runtime, zc706};
+use repro::{coordinator, nets, runtime, Design, Platform};
 
 fn main() {
     println!("== sim_hotpath: performance of the reproduction stack itself ==");
 
     let net = nets::mobilenet_v2();
-    let cfg = MemoryModelCfg::default();
-    let boundary = alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary;
-    let plan = CePlan { boundary };
-    let par = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    let design = Design::builder(&net).platform(Platform::zc706()).build();
 
     let frames = 10u64;
     let s = time("sim_mbv2_zc706_10frames", 15000.0, || {
-        sim::simulate(&net, &par.allocs, &plan, &SimOptions::optimized(), frames).unwrap();
+        design.simulate(frames).unwrap();
     });
     println!("  -> {:.2} ms per simulated frame", s.median_ms / frames as f64);
 
     time("pipeline_build_mbv2", 3000.0, || {
-        let _ = sim::build_pipeline(&net, &par.allocs, &plan, &SimOptions::optimized());
+        let _ = sim::build_pipeline(&net, design.allocs(), design.ce_plan(), &SimOptions::optimized());
     });
 
+    let cfg = MemoryModelCfg::default();
     time("alg1_balanced_memory_allocation", 3000.0, || {
-        let _ = alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg);
+        let _ = alloc::balanced_memory_allocation(&net, design.platform().sram_bytes, &cfg);
     });
 
     time("alg2_dynamic_parallelism_tuning", 5000.0, || {
-        let _ = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+        let _ = alloc::dynamic_parallelism_tuning(
+            &net,
+            design.ce_plan(),
+            design.platform().dsp_budget,
+            Granularity::Fgpm,
+        );
     });
 
     time("fgpm_space_1280", 1000.0, || {
         let _ = alloc::fgpm_space(1280);
     });
 
-    time("design_point_full_methodology", 8000.0, || {
-        let _ = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
+    time("design_build_full_methodology", 8000.0, || {
+        let _ = Design::builder(&net).platform(Platform::zc706()).build();
+    });
+
+    time("design_json_roundtrip", 2000.0, || {
+        let d = Design::from_json(&design.to_json()).expect("round trip");
+        let _ = d;
     });
 
     // Coordinator overhead (needs `make artifacts`).
     let dir = runtime::artifacts_dir();
     if dir.join("mbv2_manifest.json").exists() {
-        let report = coordinator::run_streaming(dir, "mbv2", 6, 3).expect("stream");
+        let report = coordinator::run_streaming_design(&design, dir, 6, 3).expect("stream");
         println!(
             "coordinator: {:.2} FPS, overhead {:.1}% (target <5% of wall; XLA-CPU compute dominates)",
             report.fps,

@@ -6,8 +6,10 @@
 //! * [`parallelism`] — Algorithm 2, the dynamic parallelism tuner, plus
 //!   the factorized-granularity baseline.
 //!
-//! [`design_point`] chains both algorithms into the full design-space
-//! exploration the paper performs per (network, FPGA) pair.
+//! The full design-space exploration the paper performs per
+//! (network, FPGA) pair lives behind the [`crate::design::Design`]
+//! builder; the [`design_point`] free function remains as a deprecated
+//! shim over it.
 
 pub mod fgpm;
 pub mod memory_alloc;
@@ -17,8 +19,7 @@ pub use fgpm::{factor_space, fgpm_space};
 pub use memory_alloc::{balanced_memory_allocation, boundary_sweep, MemoryPlan};
 pub use parallelism::{config_ladder, dynamic_parallelism_tuning, tune_and_evaluate, Granularity, ParallelismPlan};
 
-use crate::model::memory::{CePlan, MemoryModelCfg};
-use crate::model::throughput::{self, Performance};
+use crate::model::throughput::Performance;
 use crate::nets::Network;
 
 /// A fully-resolved design point: CE plan + parallelism + predicted
@@ -35,37 +36,27 @@ pub struct DesignPoint {
 /// Run the complete resource-aware methodology for a (network, budget)
 /// pair: Algorithm 1 then Algorithm 2, then re-cost the WRCE weight
 /// buffers with the chosen kernel parallelism.
+///
+/// Deprecated shim over the [`crate::design::Design`] builder — it
+/// produces the identical numbers; prefer
+/// `Design::builder(net).platform(Platform::custom(..)).build()`, which
+/// also carries the simulator options and persists to JSON.
+#[deprecated(note = "use `Design::builder(&net).platform(...).build()` (crate::design) instead")]
 pub fn design_point(
     net: &Network,
     sram_budget: u64,
     dsp_budget: usize,
     granularity: Granularity,
 ) -> DesignPoint {
-    let cfg = MemoryModelCfg::default();
-    let memory = balanced_memory_allocation(net, sram_budget, &cfg);
-    let ce_plan = CePlan { boundary: memory.boundary };
-    let parallelism = dynamic_parallelism_tuning(net, &ce_plan, dsp_budget, granularity);
-    let performance = throughput::evaluate(net, &parallelism.allocs);
-    // Re-evaluate SRAM with the actual kernel parallelism of each WRCE:
-    // the ping-pong weight buffer of CE i holds P_w(i) kernels (Alg 1 runs
-    // with P_w = 1, so add the per-layer delta here).
-    let base = crate::model::memory::sram_report(net, &ce_plan, &cfg).total();
-    let weight_buffer_delta: u64 = net
-        .layers
-        .iter()
-        .zip(&parallelism.allocs)
-        .enumerate()
-        .filter(|(i, (l, _))| *i >= memory.boundary && l.kind.has_weights())
-        .map(|(_, (l, a))| {
-            let kernel_bytes = (l.k * l.k * l.in_ch / l.groups) as u64;
-            2 * kernel_bytes * (a.pw as u64 - 1)
-        })
-        .sum();
-    let sram_bytes = base + weight_buffer_delta;
-    DesignPoint { dram_bytes: memory.dram_bytes, sram_bytes, memory, parallelism, performance }
+    crate::design::Design::builder(net)
+        .platform(crate::design::Platform::custom("custom", sram_budget, dsp_budget))
+        .granularity(granularity)
+        .build()
+        .to_design_point()
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shim's own regression tests
 mod tests {
     use super::*;
     use crate::nets::{mobilenet_v2, shufflenet_v2};

@@ -97,6 +97,19 @@ fn partition(manifest: &Manifest, workers: usize) -> Vec<(usize, usize)> {
     bounds
 }
 
+/// Façade entry point: stream a [`crate::design::Design`]'s network. The
+/// design resolves the AOT artifact short name; errors if the design's
+/// network has no compiled artifacts (non-zoo networks).
+pub fn run_streaming_design(
+    design: &crate::design::Design,
+    dir: PathBuf,
+    frames: u64,
+    workers: usize,
+) -> Result<RunReport> {
+    let short = design.network_short_or_err().map_err(|e| anyhow::anyhow!(e))?;
+    run_streaming(dir, short, frames, workers)
+}
+
 /// Streaming coordinator: run `frames` frames of the golden input through
 /// the `short` network's artifact pipeline with `workers` CE groups.
 pub fn run_streaming(dir: PathBuf, short: &str, frames: u64, workers: usize) -> Result<RunReport> {

@@ -1,0 +1,596 @@
+//! The `Design`/`Platform` façade: one builder API for the paper's whole
+//! methodology pipeline — network → balanced memory allocation (Alg 1) →
+//! dynamic parallelism tuning (Alg 2) → streaming simulation → reporting.
+//!
+//! A [`Platform`] names an FPGA resource budget ([`Platform::zc706`] is the
+//! paper's evaluation part; [`Platform::custom`] expresses anything else).
+//! A [`Design`] is the fully-resolved artifact for one (network, platform,
+//! granularity) triple: the FRCE/WRCE boundary, per-layer parallelism,
+//! predicted performance and memory figures, plus the simulator options it
+//! should be cycle-simulated with.
+//!
+//! ```no_run
+//! use repro::design::{Design, Platform};
+//! use repro::alloc::Granularity;
+//! use repro::sim::SimOptions;
+//!
+//! let net = repro::nets::mobilenet_v2();
+//! let design = Design::builder(&net)
+//!     .platform(Platform::zc706())
+//!     .granularity(Granularity::Fgpm)
+//!     .sim_options(SimOptions::optimized())
+//!     .build();
+//! println!("{:.1} FPS predicted", design.predicted().fps);
+//! let stats = design.simulate(10).unwrap();
+//! let json = design.to_json(); // persistable, diffable, reloadable
+//! ```
+//!
+//! Design points serialize to stable one-line JSON (sorted keys) via
+//! [`Design::to_json`] and reload via [`Design::from_json`], which re-runs
+//! the deterministic pipeline and cross-checks the stored figures — so
+//! saved design points double as regression baselines for benches and CI.
+
+use std::collections::BTreeMap;
+
+use crate::alloc::{
+    balanced_memory_allocation, dynamic_parallelism_tuning, DesignPoint, Granularity, MemoryPlan,
+    ParallelismPlan,
+};
+use crate::model::memory::{self, CePlan, FmScheme, MemoryModelCfg, SramReport};
+use crate::model::throughput::{self, Performance};
+use crate::nets::{self, Network};
+use crate::sim::{self, Deadlock, PaddingMode, SimOptions, SimStats};
+use crate::util::json::Json;
+use crate::{zc706, CLOCK_HZ};
+
+/// A named FPGA resource budget — the "(network, FPGA) pair" half of the
+/// paper's design-space exploration, replacing loose `sram`/`dsp`
+/// positional arguments and raw [`crate::zc706`] constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    /// Human-readable part name (`"zc706"`, or whatever `custom` is given).
+    pub name: String,
+    /// On-chip SRAM byte budget handed to Algorithm 1.
+    pub sram_bytes: u64,
+    /// DSP budget handed to Algorithm 2 (already below any utilization cap).
+    pub dsp_budget: usize,
+    /// Total DSP slices on the part (for utilization reporting only).
+    pub dsp_total: usize,
+    /// Total BRAM36K blocks on the part (for utilization reporting only).
+    pub bram36k: usize,
+    /// Design clock in Hz.
+    pub clock_hz: f64,
+}
+
+impl Platform {
+    /// The ZC706 (XC7Z045) budget used throughout the paper's evaluation:
+    /// 1.80 MB SRAM (75% of 545 BRAM36K), 855 DSPs (95% of 900), 200 MHz.
+    pub fn zc706() -> Platform {
+        Platform {
+            name: "zc706".to_string(),
+            sram_bytes: zc706::SRAM_BYTES,
+            dsp_budget: zc706::DSP_BUDGET,
+            dsp_total: zc706::DSP,
+            bram36k: zc706::BRAM36K,
+            clock_hz: CLOCK_HZ,
+        }
+    }
+
+    /// A custom budget. `dsp_total` defaults to `dsp_budget` and `bram36k`
+    /// to the blocks covering `sram_bytes`; refine with the `with_*`
+    /// setters when modelling a real part.
+    pub fn custom(name: &str, sram_bytes: u64, dsp_budget: usize) -> Platform {
+        Platform {
+            name: name.to_string(),
+            sram_bytes,
+            dsp_budget,
+            dsp_total: dsp_budget,
+            bram36k: crate::model::brams_for(sram_bytes) as usize,
+            clock_hz: CLOCK_HZ,
+        }
+    }
+
+    /// Resolve a platform by name (the CLI's `--platform` values).
+    pub fn by_name(name: &str) -> Option<Platform> {
+        match name.to_ascii_lowercase().as_str() {
+            "zc706" => Some(Platform::zc706()),
+            _ => None,
+        }
+    }
+
+    pub fn with_sram_bytes(mut self, bytes: u64) -> Platform {
+        self.sram_bytes = bytes;
+        self
+    }
+
+    pub fn with_dsp_budget(mut self, dsps: usize) -> Platform {
+        self.dsp_budget = dsps;
+        self
+    }
+
+    pub fn with_dsp_total(mut self, dsps: usize) -> Platform {
+        self.dsp_total = dsps;
+        self
+    }
+
+    pub fn with_bram36k(mut self, blocks: usize) -> Platform {
+        self.bram36k = blocks;
+        self
+    }
+
+    pub fn with_clock_hz(mut self, hz: f64) -> Platform {
+        self.clock_hz = hz;
+        self
+    }
+
+    fn to_json_value(&self) -> Json {
+        obj(vec![
+            ("bram36k", Json::Num(self.bram36k as f64)),
+            ("clock_hz", Json::Num(self.clock_hz)),
+            ("dsp_budget", Json::Num(self.dsp_budget as f64)),
+            ("dsp_total", Json::Num(self.dsp_total as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("sram_bytes", Json::Num(self.sram_bytes as f64)),
+        ])
+    }
+
+    fn from_json_value(j: &Json) -> Result<Platform, String> {
+        Ok(Platform {
+            name: str_field(j, "name")?,
+            sram_bytes: num_field(j, "sram_bytes")? as u64,
+            dsp_budget: num_field(j, "dsp_budget")? as usize,
+            dsp_total: num_field(j, "dsp_total")? as usize,
+            bram36k: num_field(j, "bram36k")? as usize,
+            clock_hz: num_field(j, "clock_hz")?,
+        })
+    }
+}
+
+/// Builder for [`Design`]; obtain via [`Design::builder`]. Defaults:
+/// [`Platform::zc706`], [`Granularity::Fgpm`], [`SimOptions::optimized`].
+#[derive(Debug, Clone)]
+pub struct DesignBuilder {
+    net: Network,
+    platform: Platform,
+    granularity: Granularity,
+    sim_options: SimOptions,
+}
+
+impl DesignBuilder {
+    pub fn platform(mut self, platform: Platform) -> DesignBuilder {
+        self.platform = platform;
+        self
+    }
+
+    pub fn granularity(mut self, granularity: Granularity) -> DesignBuilder {
+        self.granularity = granularity;
+        self
+    }
+
+    pub fn sim_options(mut self, opts: SimOptions) -> DesignBuilder {
+        self.sim_options = opts;
+        self
+    }
+
+    /// Run the complete resource-aware methodology: Algorithm 1 places the
+    /// FRCE/WRCE boundary within the platform's SRAM budget, Algorithm 2
+    /// tunes per-layer parallelism within its DSP budget, Eq 14 predicts
+    /// performance, and the WRCE ping-pong weight buffers are re-costed
+    /// with the chosen kernel parallelism (Alg 1 runs with `P_w = 1`).
+    pub fn build(self) -> Design {
+        let DesignBuilder { net, platform, granularity, sim_options } = self;
+        let cfg = MemoryModelCfg::default();
+        let memory = balanced_memory_allocation(&net, platform.sram_bytes, &cfg);
+        let ce_plan = CePlan { boundary: memory.boundary };
+        let parallelism = dynamic_parallelism_tuning(&net, &ce_plan, platform.dsp_budget, granularity);
+        // Predictions are evaluated at the platform's clock, so custom
+        // clocks give fps/gops/latency consistent with `simulate` results
+        // reported via `stats.fps(platform.clock_hz)`.
+        let performance = throughput::evaluate_at(&net, &parallelism.allocs, platform.clock_hz);
+        // Per-layer delta of the WRCE weight ping-pong buffers: CE i holds
+        // P_w(i) kernels, Alg 1 assumed one.
+        let base = memory::sram_report(&net, &ce_plan, &cfg).total();
+        let weight_buffer_delta: u64 = net
+            .layers
+            .iter()
+            .zip(&parallelism.allocs)
+            .enumerate()
+            .filter(|(i, (l, _))| *i >= memory.boundary && l.kind.has_weights())
+            .map(|(_, (l, a))| {
+                let kernel_bytes = (l.k * l.k * l.in_ch / l.groups) as u64;
+                2 * kernel_bytes * (a.pw as u64 - 1)
+            })
+            .sum();
+        let sram_bytes = base + weight_buffer_delta;
+        let dram_bytes = memory.dram_bytes;
+        Design {
+            net,
+            platform,
+            granularity,
+            sim_options,
+            ce_plan,
+            memory,
+            parallelism,
+            performance,
+            sram_bytes,
+            dram_bytes,
+        }
+    }
+}
+
+/// A fully-resolved design point: the compiled artifact of one
+/// (network, platform, granularity) triple, carrying everything the
+/// paper's per-design evaluation needs.
+#[derive(Debug, Clone)]
+pub struct Design {
+    net: Network,
+    platform: Platform,
+    granularity: Granularity,
+    sim_options: SimOptions,
+    ce_plan: CePlan,
+    memory: MemoryPlan,
+    parallelism: ParallelismPlan,
+    performance: Performance,
+    /// SRAM bytes after re-costing WRCE weight buffers with the tuned P_w.
+    sram_bytes: u64,
+    /// DRAM bytes per frame at the chosen boundary.
+    dram_bytes: u64,
+}
+
+impl Design {
+    /// Start building a design for `net` (the network is cloned: a design
+    /// is a self-contained artifact).
+    pub fn builder(net: &Network) -> DesignBuilder {
+        DesignBuilder {
+            net: net.clone(),
+            platform: Platform::zc706(),
+            granularity: Granularity::Fgpm,
+            sim_options: SimOptions::optimized(),
+        }
+    }
+
+    /// The network this design was compiled for.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// AOT-artifact short name of the network (`"mbv2"`, ...), if it is a
+    /// zoo network with compiled artifacts.
+    pub fn network_short(&self) -> Option<&'static str> {
+        nets::short_name(&self.net.name)
+    }
+
+    /// [`Design::network_short`] with the uniform error the runtime and
+    /// coordinator façade entry points report for non-zoo networks.
+    pub fn network_short_or_err(&self) -> Result<&'static str, String> {
+        self.network_short()
+            .ok_or_else(|| format!("no AOT artifacts for network {:?}", self.net.name))
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    pub fn granularity(&self) -> Granularity {
+        self.granularity
+    }
+
+    pub fn sim_options(&self) -> &SimOptions {
+        &self.sim_options
+    }
+
+    /// The FRCE/WRCE split chosen by Algorithm 1.
+    pub fn ce_plan(&self) -> &CePlan {
+        &self.ce_plan
+    }
+
+    /// Algorithm 1's full result (min-SRAM and budget boundaries).
+    pub fn memory(&self) -> &MemoryPlan {
+        &self.memory
+    }
+
+    /// Algorithm 2's full result (per-layer `P_w`/`P_f`, PE/DSP totals).
+    pub fn parallelism(&self) -> &ParallelismPlan {
+        &self.parallelism
+    }
+
+    /// Per-layer parallelism allocations.
+    pub fn allocs(&self) -> &[crate::model::throughput::LayerAlloc] {
+        &self.parallelism.allocs
+    }
+
+    /// Theoretical (Eq 14) performance of the design.
+    pub fn predicted(&self) -> &Performance {
+        &self.performance
+    }
+
+    /// SRAM bytes with the tuned kernel parallelism re-costed into the
+    /// WRCE weight buffers.
+    pub fn sram_bytes(&self) -> u64 {
+        self.sram_bytes
+    }
+
+    /// Off-chip traffic per frame (Eq 13) at the chosen boundary.
+    pub fn dram_bytes(&self) -> u64 {
+        self.dram_bytes
+    }
+
+    /// Per-layer SRAM breakdown (Eq 12) under this design's CE plan.
+    pub fn sram_report(&self) -> SramReport {
+        memory::sram_report(&self.net, &self.ce_plan, &MemoryModelCfg::default())
+    }
+
+    /// Cycle-simulate the design with its own [`SimOptions`].
+    pub fn simulate(&self, frames: u64) -> Result<SimStats, Deadlock> {
+        self.simulate_with(&self.sim_options, frames)
+    }
+
+    /// Cycle-simulate with explicit options (ablations, Fig 17).
+    pub fn simulate_with(&self, opts: &SimOptions, frames: u64) -> Result<SimStats, Deadlock> {
+        sim::simulate(&self.net, &self.parallelism.allocs, &self.ce_plan, opts, frames)
+    }
+
+    /// Convert into the legacy [`DesignPoint`] shape (the pre-façade API).
+    pub fn to_design_point(&self) -> DesignPoint {
+        DesignPoint {
+            memory: self.memory.clone(),
+            parallelism: self.parallelism.clone(),
+            performance: self.performance.clone(),
+            sram_bytes: self.sram_bytes,
+            dram_bytes: self.dram_bytes,
+        }
+    }
+
+    /// Full design artifact as stable one-line JSON (sorted keys): the
+    /// build inputs plus every derived figure, so saved designs are
+    /// diffable and [`Design::from_json`] can cross-check on reload.
+    pub fn to_json(&self) -> String {
+        let allocs = self
+            .parallelism
+            .allocs
+            .iter()
+            .map(|a| Json::Arr(vec![Json::Num(a.pw as f64), Json::Num(a.pf as f64)]))
+            .collect();
+        let p = &self.performance;
+        obj(vec![
+            ("allocs", Json::Arr(allocs)),
+            ("boundary", Json::Num(self.ce_plan.boundary as f64)),
+            ("boundary_min_sram", Json::Num(self.memory.boundary_min_sram as f64)),
+            ("dram_bytes", Json::Num(self.dram_bytes as f64)),
+            ("dsps", Json::Num(self.parallelism.dsps as f64)),
+            ("granularity", Json::Str(granularity_name(self.granularity).to_string())),
+            ("network", Json::Str(self.net.name.clone())),
+            (
+                "performance",
+                obj(vec![
+                    ("bottleneck", Json::Num(p.bottleneck as f64)),
+                    ("fps", Json::Num(p.fps)),
+                    ("gops", Json::Num(p.gops)),
+                    ("latency_ms", Json::Num(p.latency_ms)),
+                    ("mac_efficiency", Json::Num(p.mac_efficiency)),
+                    ("t_max", Json::Num(p.t_max as f64)),
+                    ("total_dsps", Json::Num(p.total_dsps as f64)),
+                    ("total_pes", Json::Num(p.total_pes as f64)),
+                ]),
+            ),
+            ("pes", Json::Num(self.parallelism.pes as f64)),
+            ("platform", self.platform.to_json_value()),
+            ("sim_options", sim_options_to_json(&self.sim_options)),
+            ("sram_bytes", Json::Num(self.sram_bytes as f64)),
+            ("sram_bytes_alg1", Json::Num(self.memory.sram_bytes as f64)),
+            ("version", Json::Num(1.0)),
+        ])
+        .to_string()
+    }
+
+    /// One-line machine-readable summary (stable sorted keys) — the
+    /// `repro allocate --json` output consumed by BENCH trajectories.
+    pub fn summary_json(&self) -> String {
+        obj(vec![
+            ("boundary", Json::Num(self.ce_plan.boundary as f64)),
+            ("dram_bytes", Json::Num(self.dram_bytes as f64)),
+            ("dsps", Json::Num(self.parallelism.dsps as f64)),
+            ("fps", Json::Num(self.performance.fps)),
+            ("gops", Json::Num(self.performance.gops)),
+            ("granularity", Json::Str(granularity_name(self.granularity).to_string())),
+            ("mac_efficiency", Json::Num(self.performance.mac_efficiency)),
+            ("network", Json::Str(self.net.name.clone())),
+            ("pes", Json::Num(self.parallelism.pes as f64)),
+            ("platform", Json::Str(self.platform.name.clone())),
+            ("sram_bytes", Json::Num(self.sram_bytes as f64)),
+            ("t_max", Json::Num(self.performance.t_max as f64)),
+        ])
+        .to_string()
+    }
+
+    /// Reload a design saved by [`Design::to_json`]: re-runs the
+    /// deterministic pipeline from the stored build inputs (network name,
+    /// platform, granularity, sim options) and cross-checks the stored
+    /// derived figures, so stale artifacts fail loudly instead of silently
+    /// drifting from the current algorithms.
+    pub fn from_json(text: &str) -> Result<Design, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        if let Some(v) = j.get("version").and_then(Json::as_f64) {
+            if v != 1.0 {
+                return Err(format!("design json: unsupported version {v} (this reader supports 1)"));
+            }
+        }
+        let net_name = str_field(&j, "network")?;
+        let net = nets::by_name(&net_name)
+            .ok_or_else(|| format!("design json: network {net_name:?} is not in the zoo"))?;
+        let platform = Platform::from_json_value(
+            j.get("platform").ok_or_else(|| "design json: missing \"platform\"".to_string())?,
+        )?;
+        let granularity = parse_granularity(&str_field(&j, "granularity")?)?;
+        let sim_options = sim_options_from_json(
+            j.get("sim_options").ok_or_else(|| "design json: missing \"sim_options\"".to_string())?,
+        )?;
+        let d = Design::builder(&net)
+            .platform(platform)
+            .granularity(granularity)
+            .sim_options(sim_options)
+            .build();
+        // Cross-check stored derived figures (when present) against the
+        // recomputed pipeline.
+        let checks: [(&str, f64); 5] = [
+            ("boundary", d.ce_plan.boundary as f64),
+            ("pes", d.parallelism.pes as f64),
+            ("dsps", d.parallelism.dsps as f64),
+            ("sram_bytes", d.sram_bytes as f64),
+            ("dram_bytes", d.dram_bytes as f64),
+        ];
+        for (key, recomputed) in checks {
+            if let Some(stored) = j.get(key).and_then(Json::as_f64) {
+                if stored != recomputed {
+                    return Err(format!(
+                        "design json: stored {key}={stored} disagrees with recomputed {recomputed} \
+                         (stale artifact? regenerate with `repro allocate --save`)"
+                    ));
+                }
+            }
+        }
+        if let Some(t) = j.get("performance").and_then(|p| p.get("t_max")).and_then(Json::as_f64) {
+            if t != d.performance.t_max as f64 {
+                return Err(format!(
+                    "design json: stored t_max={t} disagrees with recomputed {}",
+                    d.performance.t_max
+                ));
+            }
+        }
+        Ok(d)
+    }
+}
+
+/// Stable wire name of a [`Granularity`].
+pub fn granularity_name(g: Granularity) -> &'static str {
+    match g {
+        Granularity::Fgpm => "fgpm",
+        Granularity::Factorized => "factorized",
+    }
+}
+
+/// Parse the wire name produced by [`granularity_name`].
+pub fn parse_granularity(s: &str) -> Result<Granularity, String> {
+    match s {
+        "fgpm" => Ok(Granularity::Fgpm),
+        "factorized" => Ok(Granularity::Factorized),
+        _ => Err(format!("unknown granularity {s:?} (expected \"fgpm\" or \"factorized\")")),
+    }
+}
+
+fn sim_options_to_json(o: &SimOptions) -> Json {
+    let padding = match o.padding {
+        PaddingMode::DirectInsert => "direct_insert",
+        PaddingMode::AddressGenerated => "address_generated",
+    };
+    let scheme = match o.scheme {
+        FmScheme::FullyReusedFm => "fully_reused_fm",
+        FmScheme::LineBased => "line_based",
+    };
+    obj(vec![
+        ("padding", Json::Str(padding.to_string())),
+        ("scheme", Json::Str(scheme.to_string())),
+        ("stride_extra_line", Json::Bool(o.stride_extra_line)),
+    ])
+}
+
+fn sim_options_from_json(j: &Json) -> Result<SimOptions, String> {
+    let padding = match str_field(j, "padding")?.as_str() {
+        "direct_insert" => PaddingMode::DirectInsert,
+        "address_generated" => PaddingMode::AddressGenerated,
+        other => return Err(format!("unknown padding mode {other:?}")),
+    };
+    let scheme = match str_field(j, "scheme")?.as_str() {
+        "fully_reused_fm" => FmScheme::FullyReusedFm,
+        "line_based" => FmScheme::LineBased,
+        other => return Err(format!("unknown FM scheme {other:?}")),
+    };
+    let stride_extra_line = match j.get("stride_extra_line") {
+        Some(Json::Bool(b)) => *b,
+        _ => return Err("design json: missing bool \"stride_extra_line\"".to_string()),
+    };
+    Ok(SimOptions { padding, scheme, stride_extra_line })
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn num_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("design json: missing number {key:?}"))
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("design json: missing string {key:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_zc706_fgpm_optimized() {
+        let net = nets::mobilenet_v2();
+        let d = Design::builder(&net).build();
+        assert_eq!(d.platform().name, "zc706");
+        assert_eq!(d.platform().sram_bytes, zc706::SRAM_BYTES);
+        assert_eq!(d.granularity(), Granularity::Fgpm);
+        assert_eq!(*d.sim_options(), SimOptions::optimized());
+        assert_eq!(d.ce_plan().boundary, d.memory().boundary);
+        assert_eq!(d.allocs().len(), net.layers.len());
+        assert!(d.predicted().fps > 0.0);
+    }
+
+    #[test]
+    fn platform_by_name_and_custom() {
+        assert_eq!(Platform::by_name("zc706").unwrap(), Platform::zc706());
+        assert_eq!(Platform::by_name("ZC706").unwrap(), Platform::zc706());
+        assert!(Platform::by_name("zcu102").is_none());
+        let p = Platform::custom("edge", 900 * 1024, 220).with_clock_hz(150.0e6);
+        assert_eq!(p.dsp_total, 220);
+        assert_eq!(p.clock_hz, 150.0e6);
+    }
+
+    #[test]
+    fn summary_json_is_one_sorted_line() {
+        let net = nets::shufflenet_v2();
+        let d = Design::builder(&net).build();
+        let s = d.summary_json();
+        assert!(!s.contains('\n'));
+        assert!(s.starts_with("{\"boundary\":"));
+        // Parse back and spot-check.
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.str_field("network"), "shufflenet_v2");
+        assert_eq!(j.str_field("platform"), "zc706");
+        assert_eq!(j.usize_field("boundary"), d.ce_plan().boundary);
+    }
+
+    #[test]
+    fn from_json_rejects_tampered_figures() {
+        let net = nets::mobilenet_v2();
+        let d = Design::builder(&net).build();
+        let good = d.to_json();
+        assert!(Design::from_json(&good).is_ok());
+        let bad = good.replace(
+            &format!("\"pes\":{}", d.parallelism().pes),
+            &format!("\"pes\":{}", d.parallelism().pes + 1),
+        );
+        assert_ne!(good, bad, "replacement should have applied");
+        assert!(Design::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_network() {
+        let err = Design::from_json(r#"{"network":"resnet50"}"#).unwrap_err();
+        assert!(err.contains("not in the zoo"), "{err}");
+    }
+}

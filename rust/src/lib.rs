@@ -2,7 +2,30 @@
 //! CNNs With Balanced Dataflow"* (Zhao et al., 2024) as a three-layer
 //! Rust + JAX + Pallas system.
 //!
-//! The crate hosts every system the paper describes or depends on:
+//! # The `Design`/`Platform` flow
+//!
+//! The paper's contribution is a methodology pipeline — network →
+//! balanced memory allocation (Alg 1) → dynamic parallelism tuning
+//! (Alg 2) → streaming execution. The [`design`] module exposes that
+//! pipeline as one builder API, and every consumer (CLI, examples,
+//! benches, report renderers) goes through it:
+//!
+//! ```no_run
+//! use repro::{Design, Platform};
+//!
+//! let net = repro::nets::mobilenet_v2();
+//! let design = Design::builder(&net).platform(Platform::zc706()).build();
+//! println!("{:.1} FPS predicted, boundary {}", design.predicted().fps, design.ce_plan().boundary);
+//! let stats = design.simulate(10).unwrap();               // cycle-level sim
+//! std::fs::write("mbv2.design.json", design.to_json()).unwrap(); // persist
+//! ```
+//!
+//! [`Platform::zc706`] names the paper's evaluation budget;
+//! [`Platform::custom`] expresses any other part (edge-class SRAM,
+//! ZCU102-class DSP counts, ...), which makes multi-platform sweeps
+//! one-liners.
+//!
+//! # Subsystems
 //!
 //! * [`nets`] — the LWCNN zoo (MobileNetV1/V2, ShuffleNetV1/V2).
 //! * [`model`] — the analytical performance model (Eqs 1-14: MAC/access
@@ -10,6 +33,8 @@
 //! * [`alloc`] — FGPM parallel spaces, Algorithm 1 (balanced memory
 //!   allocation) and Algorithm 2 (dynamic parallelism tuning), plus the
 //!   factorized-granularity baseline.
+//! * [`design`] — the `Design`/`Platform` façade chaining the above into
+//!   one compiled, persistable artifact per (network, platform) pair.
 //! * [`sim`] — the cycle-level streaming simulator (hybrid CEs, line
 //!   buffers with both padding schemes, order converter, SCB joins).
 //! * [`runtime`] — PJRT wrapper loading AOT-compiled HLO artifacts.
@@ -20,6 +45,7 @@
 
 pub mod alloc;
 pub mod coordinator;
+pub mod design;
 pub mod model;
 pub mod nets;
 pub mod report;
@@ -27,12 +53,17 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
+pub use design::{Design, Platform};
+
 /// Clock frequency of the evaluated design (the paper implements at 200 MHz).
 pub const CLOCK_HZ: f64 = 200.0e6;
 
 /// ZC706 (XC7Z045) resource budget used throughout the paper's evaluation:
 /// 545 BRAM36K (75% of 545 -> the paper's 1.80 MB SRAM cap is 75% of the
 /// 545-BRAM budget), 900 DSP48E1 with a 95% empirical cap (855).
+///
+/// Prefer [`Platform::zc706`], which carries the same numbers as a named
+/// value; these constants remain as the single source of truth it reads.
 pub mod zc706 {
     /// Total BRAM36K blocks.
     pub const BRAM36K: usize = 545;

@@ -5,32 +5,193 @@
 //!
 //! * `report <id>` — regenerate a paper table/figure
 //!   (`fig1|fig3|tab1|fig10|fig12|fig13|fig14|fig15|fig16|fig17|tab2|tab3|tab4|tab5|all`).
-//! * `allocate <net> [--sram-mb F] [--dsp N] [--factorized]` — run the
-//!   resource-aware methodology (Alg 1 + Alg 2) and print the design point.
-//! * `simulate <net> [--frames N] [--baseline]` — cycle-level simulation.
+//! * `allocate <net>` — run the resource-aware methodology (Alg 1 + Alg 2)
+//!   through the [`Design`] builder and print the design point
+//!   (`--json` for a stable one-line summary, `--save FILE` to persist the
+//!   full design artifact).
+//! * `simulate <net>` — cycle-level simulation of the design point
+//!   (`--load FILE` re-simulates a saved design).
 //! * `infer <short> [--frames N]` — sequential PJRT inference vs golden.
 //! * `stream <short> [--frames N] [--workers N]` — the threaded streaming
 //!   coordinator (the end-to-end system path).
+//!
+//! Design points are constructed exclusively through
+//! [`Design::builder`]/[`Platform`]; `--platform` selects a named budget
+//! and `--sram-mb`/`--dsp` refine it into a custom one.
 
 use std::process::ExitCode;
 
-use repro::model::memory::CePlan;
-use repro::{alloc, coordinator, nets, report, runtime, sim, zc706, CLOCK_HZ};
+use repro::design::{Design, Platform};
+use repro::{alloc, coordinator, nets, report, runtime, sim};
 
 fn usage() -> ExitCode {
     eprintln!(
         "usage: repro <command>\n\
          \x20 report <fig1|fig3|tab1|fig10|fig12|fig13|fig14|fig15|fig16|fig17|tab2|tab3|tab4|tab5|ablation|all>\n\
-         \x20 allocate <mbv1|mbv2|snv1|snv2> [--sram-mb F] [--dsp N] [--factorized]\n\
-         \x20 simulate <mbv1|mbv2|snv1|snv2> [--frames N] [--baseline]\n\
+         \x20 allocate <mbv1|mbv2|snv1|snv2> [--platform zc706] [--sram-mb F] [--dsp N] [--factorized]\n\
+         \x20          [--json] [--save FILE] [--load FILE]\n\
+         \x20 simulate <mbv1|mbv2|snv1|snv2> [--platform zc706] [--sram-mb F] [--dsp N] [--factorized]\n\
+         \x20          [--frames N] [--baseline] [--save FILE] [--load FILE]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
     );
     ExitCode::from(2)
 }
 
-fn flag_val(args: &[String], name: &str) -> Option<String> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+fn fail(msg: &str) -> ExitCode {
+    eprintln!("repro: {msg}");
+    ExitCode::from(2)
+}
+
+/// Value of `--name VAL`. Unlike the old lookup this rejects a missing or
+/// flag-shaped value (`--frames --baseline`) instead of handing the next
+/// flag back as the value or silently falling through to a default.
+fn flag_val(args: &[String], name: &str) -> Result<Option<String>, String> {
+    match args.iter().position(|a| a == name) {
+        None => Ok(None),
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => Ok(Some(v.clone())),
+            Some(v) => Err(format!("{name}: expected a value, found flag {v:?}")),
+            None => Err(format!("{name}: expected a value")),
+        },
+    }
+}
+
+/// Parse `--name VAL` as `T`, reporting a per-flag error on bad input
+/// instead of silently using the default.
+fn parse_opt<T: std::str::FromStr>(args: &[String], name: &str) -> Result<Option<T>, String> {
+    match flag_val(args, name)? {
+        None => Ok(None),
+        Some(v) => v.parse().map(Some).map_err(|_| format!("{name}: cannot parse value {v:?}")),
+    }
+}
+
+fn parse_or<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Result<T, String> {
+    Ok(parse_opt(args, name)?.unwrap_or(default))
+}
+
+/// Resolve the platform: `--platform` names a known budget (default
+/// zc706); `--sram-mb` / `--dsp` refine it into a custom variant.
+fn platform_from_args(args: &[String]) -> Result<Platform, String> {
+    let mut p = match flag_val(args, "--platform")? {
+        None => Platform::zc706(),
+        Some(n) => Platform::by_name(&n).ok_or_else(|| {
+            format!("--platform: unknown platform {n:?} (known: zc706; use --sram-mb/--dsp for custom budgets)")
+        })?,
+    };
+    let mut custom = false;
+    if let Some(mb) = parse_opt::<f64>(args, "--sram-mb")? {
+        if !mb.is_finite() || mb < 0.0 {
+            return Err(format!("--sram-mb: must be a non-negative number, got {mb}"));
+        }
+        p = p.with_sram_bytes((mb * 1024.0 * 1024.0) as u64);
+        custom = true;
+    }
+    if let Some(dsp) = parse_opt::<usize>(args, "--dsp")? {
+        p = p.with_dsp_budget(dsp);
+        custom = true;
+    }
+    if custom {
+        p.name = format!("{}-custom", p.name);
+    }
+    Ok(p)
+}
+
+/// Flags that consume the following argument as their value.
+const VALUE_FLAGS: [&str; 7] = ["--platform", "--sram-mb", "--dsp", "--frames", "--workers", "--save", "--load"];
+
+/// First positional argument after the subcommand, skipping flags and the
+/// values consumed by value-taking flags (so `--load f.json mbv2` still
+/// sees `mbv2`).
+fn positional(args: &[String]) -> Option<&String> {
+    let mut i = 1; // args[0] is the subcommand
+    while i < args.len() {
+        let a = &args[i];
+        if !a.starts_with("--") {
+            return Some(a);
+        }
+        i += if VALUE_FLAGS.contains(&a.as_str()) { 2 } else { 1 };
+    }
+    None
+}
+
+/// Reject flags the subcommand does not know — a typo'd flag would
+/// otherwise be silently ignored and the run would use defaults.
+fn check_flags(args: &[String], value_flags: &[&str], bool_flags: &[&str]) -> Result<(), String> {
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if a.starts_with("--") {
+            if value_flags.contains(&a.as_str()) {
+                i += 2;
+                continue;
+            }
+            if bool_flags.contains(&a.as_str()) {
+                i += 1;
+                continue;
+            }
+            return Err(format!("unknown flag {a:?}"));
+        }
+        i += 1;
+    }
+    Ok(())
+}
+
+/// Build (or `--load`) the design point shared by `allocate`/`simulate`.
+fn design_from_args(args: &[String], opts: sim::SimOptions) -> Result<Design, String> {
+    if let Some(path) = flag_val(args, "--load")? {
+        // A loaded design carries its own platform/granularity; silently
+        // ignoring build flags next to --load would contradict the
+        // fail-loudly flag parsing, so reject the combination.
+        let conflicting: Vec<&str> = ["--platform", "--sram-mb", "--dsp", "--factorized"]
+            .into_iter()
+            .filter(|f| args.iter().any(|a| a == f))
+            .collect();
+        if !conflicting.is_empty() {
+            return Err(format!(
+                "--load: conflicts with {} (the loaded design already fixes them)",
+                conflicting.join(", ")
+            ));
+        }
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("--load {path}: {e}"))?;
+        let d = Design::from_json(&text)?;
+        // A positional <net> next to --load is a cross-check, not an input.
+        if let Some(name) = positional(args) {
+            let expect = nets::by_name(name).ok_or_else(|| format!("unknown network {name:?}"))?;
+            if expect.name != d.network().name {
+                return Err(format!(
+                    "--load {path}: design is for {:?}, not {:?}",
+                    d.network().name,
+                    expect.name
+                ));
+            }
+        }
+        return Ok(d);
+    }
+    let Some(name) = positional(args) else {
+        return Err("missing <net> (or --load FILE)".to_string());
+    };
+    let net = nets::by_name(name).ok_or_else(|| format!("unknown network {name:?}"))?;
+    let granularity = if args.iter().any(|a| a == "--factorized") {
+        alloc::Granularity::Factorized
+    } else {
+        alloc::Granularity::Fgpm
+    };
+    Ok(Design::builder(&net)
+        .platform(platform_from_args(args)?)
+        .granularity(granularity)
+        .sim_options(opts)
+        .build())
+}
+
+fn save_if_asked(args: &[String], d: &Design) -> Result<(), String> {
+    if let Some(path) = flag_val(args, "--save")? {
+        let mut text = d.to_json();
+        text.push('\n');
+        std::fs::write(&path, text).map_err(|e| format!("--save {path}: {e}"))?;
+        eprintln!("saved design to {path}");
+    }
+    Ok(())
 }
 
 fn main() -> ExitCode {
@@ -68,57 +229,84 @@ fn main() -> ExitCode {
             println!("{out}");
         }
         "allocate" => {
-            let Some(net) = args.get(1).and_then(|n| nets::by_name(n)) else { return usage() };
-            let sram = flag_val(&args, "--sram-mb")
-                .and_then(|v| v.parse::<f64>().ok())
-                .map(|mb| (mb * 1024.0 * 1024.0) as u64)
-                .unwrap_or(zc706::SRAM_BYTES);
-            let dsp = flag_val(&args, "--dsp").and_then(|v| v.parse().ok()).unwrap_or(zc706::DSP_BUDGET);
-            let g = if args.iter().any(|a| a == "--factorized") {
-                alloc::Granularity::Factorized
-            } else {
-                alloc::Granularity::Fgpm
+            if let Err(e) = check_flags(
+                &args,
+                &["--platform", "--sram-mb", "--dsp", "--save", "--load"],
+                &["--factorized", "--json"],
+            ) {
+                return fail(&e);
+            }
+            let d = match design_from_args(&args, sim::SimOptions::optimized()) {
+                Ok(d) => d,
+                Err(e) => return fail(&e),
             };
-            let d = alloc::design_point(&net, sram, dsp, g);
-            println!(
-                "{}: boundary={} (min-SRAM {}), SRAM {:.2} MB, DRAM {:.2} MB/frame",
-                net.name,
-                d.memory.boundary,
-                d.memory.boundary_min_sram,
-                d.sram_bytes as f64 / 1048576.0,
-                d.dram_bytes as f64 / 1048576.0
-            );
-            println!(
-                "PEs={} DSPs={} ({:.1}% of {}), T_max={} cyc, FPS={:.1}, GOPS={:.1}, theoretical MAC eff={:.2}%",
-                d.parallelism.pes,
-                d.parallelism.dsps,
-                d.parallelism.dsps as f64 / zc706::DSP as f64 * 100.0,
-                zc706::DSP,
-                d.performance.t_max,
-                d.performance.fps,
-                d.performance.gops,
-                d.performance.mac_efficiency * 100.0
-            );
+            if let Err(e) = save_if_asked(&args, &d) {
+                return fail(&e);
+            }
+            if args.iter().any(|a| a == "--json") {
+                println!("{}", d.summary_json());
+            } else {
+                let (p, perf) = (d.platform(), d.predicted());
+                println!(
+                    "{} @ {}: boundary={} (min-SRAM {}), SRAM {:.2} MB, DRAM {:.2} MB/frame",
+                    d.network().name,
+                    p.name,
+                    d.ce_plan().boundary,
+                    d.memory().boundary_min_sram,
+                    d.sram_bytes() as f64 / 1048576.0,
+                    d.dram_bytes() as f64 / 1048576.0
+                );
+                println!(
+                    "PEs={} DSPs={} ({:.1}% of {}), T_max={} cyc, FPS={:.1}, GOPS={:.1}, theoretical MAC eff={:.2}%",
+                    d.parallelism().pes,
+                    d.parallelism().dsps,
+                    d.parallelism().dsps as f64 / p.dsp_total as f64 * 100.0,
+                    p.dsp_total,
+                    perf.t_max,
+                    perf.fps,
+                    perf.gops,
+                    perf.mac_efficiency * 100.0
+                );
+            }
         }
         "simulate" => {
-            let Some(net) = args.get(1).and_then(|n| nets::by_name(n)) else { return usage() };
-            let frames = flag_val(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(10);
-            let opts = if args.iter().any(|a| a == "--baseline") {
-                sim::SimOptions::baseline()
-            } else {
-                sim::SimOptions::optimized()
+            if let Err(e) = check_flags(
+                &args,
+                &["--platform", "--sram-mb", "--dsp", "--frames", "--save", "--load"],
+                &["--factorized", "--baseline"],
+            ) {
+                return fail(&e);
+            }
+            let baseline = args.iter().any(|a| a == "--baseline");
+            let opts = if baseline { sim::SimOptions::baseline() } else { sim::SimOptions::optimized() };
+            let d = match design_from_args(&args, opts) {
+                Ok(d) => d,
+                Err(e) => return fail(&e),
             };
-            let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, alloc::Granularity::Fgpm);
-            let plan = CePlan { boundary: d.memory.boundary };
-            match sim::simulate(&net, &d.parallelism.allocs, &plan, &opts, frames) {
-                Ok(stats) => println!(
-                    "{}: period={:.0} cyc, FPS={:.1} @200MHz, actual MAC eff={:.2}%, latency={:.2} ms",
-                    net.name,
-                    stats.period_cycles,
-                    stats.fps(CLOCK_HZ),
-                    stats.mac_efficiency() * 100.0,
-                    stats.latency_ms(CLOCK_HZ)
-                ),
+            // Validate every flag before --save writes anything to disk.
+            let frames = match parse_or(&args, "--frames", 10u64) {
+                Ok(f) => f,
+                Err(e) => return fail(&e),
+            };
+            if let Err(e) = save_if_asked(&args, &d) {
+                return fail(&e);
+            }
+            // An explicit --baseline overrides whatever options a --load'ed
+            // design was saved with.
+            let sim_opts = if baseline { opts } else { *d.sim_options() };
+            match d.simulate_with(&sim_opts, frames) {
+                Ok(stats) => {
+                    let clock = d.platform().clock_hz;
+                    println!(
+                        "{}: period={:.0} cyc, FPS={:.1} @{:.0}MHz, actual MAC eff={:.2}%, latency={:.2} ms",
+                        d.network().name,
+                        stats.period_cycles,
+                        stats.fps(clock),
+                        clock / 1e6,
+                        stats.mac_efficiency() * 100.0,
+                        stats.latency_ms(clock)
+                    );
+                }
                 Err(e) => {
                     eprintln!("{e}");
                     return ExitCode::FAILURE;
@@ -126,8 +314,14 @@ fn main() -> ExitCode {
             }
         }
         "infer" => {
-            let Some(short) = args.get(1) else { return usage() };
-            let frames: u64 = flag_val(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(1);
+            if let Err(e) = check_flags(&args, &["--frames"], &[]) {
+                return fail(&e);
+            }
+            let Some(short) = positional(&args) else { return usage() };
+            let frames: u64 = match parse_or(&args, "--frames", 1u64) {
+                Ok(f) => f,
+                Err(e) => return fail(&e),
+            };
             let engine = match runtime::Engine::load(&runtime::artifacts_dir(), short) {
                 Ok(e) => e,
                 Err(e) => {
@@ -154,9 +348,14 @@ fn main() -> ExitCode {
             );
         }
         "stream" => {
-            let Some(short) = args.get(1) else { return usage() };
-            let frames: u64 = flag_val(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(8);
-            let workers: usize = flag_val(&args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(4);
+            if let Err(e) = check_flags(&args, &["--frames", "--workers"], &[]) {
+                return fail(&e);
+            }
+            let Some(short) = positional(&args) else { return usage() };
+            let (frames, workers) = match (parse_or(&args, "--frames", 8u64), parse_or(&args, "--workers", 4usize)) {
+                (Ok(f), Ok(w)) => (f, w),
+                (Err(e), _) | (_, Err(e)) => return fail(&e),
+            };
             match coordinator::run_streaming(runtime::artifacts_dir(), short, frames, workers) {
                 Ok(r) => {
                     println!(

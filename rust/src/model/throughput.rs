@@ -89,8 +89,15 @@ pub struct Performance {
     pub latency_ms: f64,
 }
 
-/// Evaluate Eq (14) for a full per-layer allocation.
+/// Evaluate Eq (14) for a full per-layer allocation at the paper's 200 MHz
+/// design clock.
 pub fn evaluate(net: &Network, allocs: &[LayerAlloc]) -> Performance {
+    evaluate_at(net, allocs, CLOCK_HZ)
+}
+
+/// Evaluate Eq (14) at an explicit design clock in Hz (the clock a
+/// [`crate::design::Platform`] carries).
+pub fn evaluate_at(net: &Network, allocs: &[LayerAlloc], clock_hz: f64) -> Performance {
     assert_eq!(allocs.len(), net.layers.len());
     let mut t_max = 0u64;
     let mut bottleneck = 0usize;
@@ -114,10 +121,10 @@ pub fn evaluate(net: &Network, allocs: &[LayerAlloc]) -> Performance {
     // but execute on LUT adders, not the PE array — exclude them from the
     // MAC-efficiency numerator so efficiency is bounded by 1.
     let o_pe: u64 = net.layers.iter().filter(|l| l.kind.is_mac()).map(|l| l.macs()).sum();
-    let fps = CLOCK_HZ / t_max as f64;
+    let fps = clock_hz / t_max as f64;
     let gops = o_total as f64 * 2.0 * fps / 1e9;
     let mac_efficiency = o_pe as f64 / (t_max as f64 * total_pes as f64);
-    let latency_ms = (latency_cycles + t_max) as f64 / CLOCK_HZ * 1e3;
+    let latency_ms = (latency_cycles + t_max) as f64 / clock_hz * 1e3;
     Performance { t_max, bottleneck, fps, gops, total_pes, total_dsps, mac_efficiency, latency_ms }
 }
 

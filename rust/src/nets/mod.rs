@@ -550,6 +550,18 @@ pub fn by_name(name: &str) -> Option<Network> {
     }
 }
 
+/// Canonical short name (the AOT artifact prefix) for a zoo network,
+/// accepting either the full name or the short alias.
+pub fn short_name(name: &str) -> Option<&'static str> {
+    match name {
+        "mobilenet_v1" | "mbv1" => Some("mbv1"),
+        "mobilenet_v2" | "mbv2" => Some("mbv2"),
+        "shufflenet_v1" | "snv1" => Some("snv1"),
+        "shufflenet_v2" | "snv2" => Some("snv2"),
+        _ => None,
+    }
+}
+
 /// The four zoo networks in the paper's order.
 pub fn all_networks() -> Vec<Network> {
     vec![mobilenet_v1(), mobilenet_v2(), shufflenet_v1(), shufflenet_v2()]
@@ -645,5 +657,15 @@ mod tests {
             assert_eq!(by_name(a).unwrap().name, by_name(b).unwrap().name);
         }
         assert!(by_name("resnet50").is_none());
+    }
+
+    #[test]
+    fn short_name_covers_the_zoo() {
+        for net in all_networks() {
+            let short = short_name(&net.name).unwrap();
+            assert_eq!(by_name(short).unwrap().name, net.name);
+            assert_eq!(short_name(short), Some(short));
+        }
+        assert!(short_name("resnet50").is_none());
     }
 }

@@ -16,6 +16,7 @@ use crate::alloc::{
     parallelism::{dynamic_parallelism_tuning_with, BudgetKind},
     Granularity,
 };
+use crate::design::{Design, Platform};
 use crate::model::memory::{self, CeKind, CePlan, FmScheme, MemoryModelCfg};
 use crate::model::{dram, throughput};
 use crate::nets::{self, LayerKind, Network};
@@ -140,7 +141,9 @@ pub fn fig10() -> String {
 pub fn fig12(net: &Network) -> String {
     let cfg = MemoryModelCfg::default();
     let sweep = alloc::boundary_sweep(net, &cfg);
-    let plan = alloc::balanced_memory_allocation(net, zc706::SRAM_BYTES, &cfg);
+    // Algorithm 1 alone decides this figure — no need to pay for the full
+    // Design build (Alg 2) per network here.
+    let plan = alloc::balanced_memory_allocation(net, Platform::zc706().sram_bytes, &cfg);
     let mut s = String::new();
     header(&mut s, &format!("Fig 12: boundary sweep — {}", net.name));
     let _ = writeln!(s, "{:>9} {:>11} {:>15}", "boundary", "SRAM MB", "DRAM MB/frame");
@@ -292,9 +295,12 @@ pub struct SweepPoint {
 }
 
 /// Fig 15 backing data: MAC-unit sweep (60..=4000), FGPM vs factorized.
+/// The FRCE/WRCE boundary is the ZC706 one (Algorithm 1 only); the sweep
+/// then budgets raw MAC units (the paper's 60-4000 x-axis), which is why
+/// it drives Algorithm 2 directly rather than through a DSP-budgeted
+/// [`Design`].
 pub fn fig15_sweep(net: &Network, budgets: &[usize]) -> Vec<SweepPoint> {
-    let cfg = MemoryModelCfg::default();
-    let plan = CePlan { boundary: alloc::balanced_memory_allocation(net, zc706::SRAM_BYTES, &cfg).boundary };
+    let plan = CePlan { boundary: zc706_boundary(net) };
     budgets
         .iter()
         .map(|&b| {
@@ -313,6 +319,12 @@ pub fn fig15_sweep(net: &Network, budgets: &[usize]) -> Vec<SweepPoint> {
             }
         })
         .collect()
+}
+
+/// The ZC706 Algorithm-1 boundary the Fig 15/16 sweeps run under — the
+/// single source of truth shared with `examples/efficiency_sweep.rs`.
+pub fn zc706_boundary(net: &Network) -> usize {
+    alloc::balanced_memory_allocation(net, Platform::zc706().sram_bytes, &MemoryModelCfg::default()).boundary
 }
 
 /// Standard budget grid used by Figs 15/16 (60..4000 MAC units).
@@ -402,22 +414,19 @@ pub struct Fig17Row {
 
 pub fn fig17_rows(frames: u64) -> Vec<Fig17Row> {
     let net = nets::mobilenet_v2();
-    let cfg = MemoryModelCfg::default();
-    let plan = CePlan { boundary: alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary };
-    let fact = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Factorized);
-    let fgpm = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    let fact = Design::builder(&net).platform(Platform::zc706()).granularity(Granularity::Factorized).build();
+    let fgpm = Design::builder(&net).platform(Platform::zc706()).granularity(Granularity::Fgpm).build();
     let mut rows = Vec::new();
-    for (label, allocs, opts) in [
-        ("baseline", &fact.allocs, SimOptions::baseline()),
-        ("optimized", &fact.allocs, SimOptions::optimized()),
-        ("reallocation", &fgpm.allocs, SimOptions::optimized()),
+    for (label, design, opts) in [
+        ("baseline", &fact, SimOptions::baseline()),
+        ("optimized", &fact, SimOptions::optimized()),
+        ("reallocation", &fgpm, SimOptions::optimized()),
     ] {
-        let perf = throughput::evaluate(&net, allocs);
-        let stats = sim::simulate(&net, allocs, &plan, &opts, frames).expect("sim deadlock");
+        let stats = design.simulate_with(&opts, frames).expect("sim deadlock");
         rows.push(Fig17Row {
             label,
             actual_eff: stats.mac_efficiency(),
-            theoretical_eff: perf.mac_efficiency,
+            theoretical_eff: design.predicted().mac_efficiency,
             fps: stats.fps(CLOCK_HZ),
         });
     }
@@ -467,25 +476,28 @@ pub struct ImplRow {
     pub brams: u64,
 }
 
-/// Evaluate one (network, SRAM budget) implementation like §VI-B.
+/// Evaluate one (network, SRAM budget) implementation like §VI-B. The
+/// budget is expressed as a [`Platform`]: `sram_budget == 0` is the
+/// paper's min-SRAM configuration (Alg 1 stops at its first-iteration
+/// boundary), anything else a ZC706-DSP part with that SRAM cap.
 pub fn impl_row(net: &Network, config: &'static str, sram_budget: u64, frames: u64) -> ImplRow {
-    let cfg = MemoryModelCfg::default();
-    let mem = alloc::balanced_memory_allocation(net, sram_budget, &cfg);
-    let boundary = if sram_budget == 0 { mem.boundary_min_sram } else { mem.boundary };
-    let plan = CePlan { boundary };
-    let par = alloc::dynamic_parallelism_tuning(net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
-    let perf = throughput::evaluate(net, &par.allocs);
-    let stats = sim::simulate(net, &par.allocs, &plan, &SimOptions::optimized(), frames).expect("sim");
-    let sram = memory::sram_report(net, &plan, &cfg).total();
-    let dram = dram::proposed(net, &plan).total();
+    // Every §VI-B configuration uses the ZC706 DSP budget; only the SRAM
+    // cap varies between the min-SRAM and ZC706 rows.
+    let d = Design::builder(net)
+        .platform(Platform::custom(config, sram_budget, zc706::DSP_BUDGET))
+        .build();
+    let stats = d.simulate(frames).expect("sim");
+    // Table rows report the Alg-1 SRAM figure (weight buffers at P_w = 1),
+    // exactly as the pre-façade renderer did.
+    let sram = d.memory().sram_bytes;
     ImplRow {
         net_name: net.name.clone(),
         config,
-        pes: par.pes,
-        dsps: par.dsps,
+        pes: d.parallelism().pes,
+        dsps: d.parallelism().dsps,
         sram_mb: sram as f64 / MB,
-        dram_mb: dram as f64 / MB,
-        fps_model: perf.fps,
+        dram_mb: d.dram_bytes() as f64 / MB,
+        fps_model: d.predicted().fps,
         fps_sim: stats.fps(CLOCK_HZ),
         mac_eff_sim: stats.mac_efficiency(),
         latency_ms: stats.latency_ms(CLOCK_HZ),
@@ -615,10 +627,8 @@ pub fn tab5() -> String {
 /// under the reallocation configuration (the paper plots these as bars).
 pub fn fig17_layers() -> String {
     let net = nets::mobilenet_v2();
-    let cfg = MemoryModelCfg::default();
-    let plan = CePlan { boundary: alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary };
-    let par = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
-    let stats = sim::simulate(&net, &par.allocs, &plan, &SimOptions::optimized(), 10).expect("sim");
+    let d = Design::builder(&net).platform(Platform::zc706()).build();
+    let stats = d.simulate(10).expect("sim");
     let mut s = String::new();
     header(&mut s, "Fig 17 (per-layer): MobileNetV2 reallocation config");
     let _ = writeln!(
@@ -630,7 +640,7 @@ pub fn fig17_layers() -> String {
         if !l.kind.is_mac() {
             continue;
         }
-        let a = par.allocs[i];
+        let a = d.allocs()[i];
         let eff = stats.layer_efficiency(i).unwrap_or(0.0);
         let _ = writeln!(
             s,
@@ -641,7 +651,7 @@ pub fn fig17_layers() -> String {
             a.pw,
             a.pf,
             throughput::layer_dsps(l, a),
-            if i < plan.boundary { "FRCE" } else { "WRCE" },
+            if i < d.ce_plan().boundary { "FRCE" } else { "WRCE" },
             eff * 100.0
         );
     }
@@ -655,9 +665,7 @@ pub fn fig17_layers() -> String {
 pub fn ablation() -> String {
     use crate::sim::PaddingMode;
     let net = nets::mobilenet_v2();
-    let cfg = MemoryModelCfg::default();
-    let plan = CePlan { boundary: alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary };
-    let par = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+    let d = Design::builder(&net).platform(Platform::zc706()).build();
     let mut s = String::new();
     header(&mut s, "Ablation: dataflow options (MBv2, FGPM alloc @ZC706 DSPs)");
     let _ = writeln!(s, "{:>18} {:>16} {:>12} {:>12} {:>10}", "padding", "buffer scheme", "stride line", "actual eff", "FPS");
@@ -665,7 +673,7 @@ pub fn ablation() -> String {
         for scheme in [FmScheme::LineBased, FmScheme::FullyReusedFm] {
             for extra in [false, true] {
                 let opts = sim::SimOptions { padding, scheme, stride_extra_line: extra };
-                let row = match sim::simulate(&net, &par.allocs, &plan, &opts, 8) {
+                let row = match d.simulate_with(&opts, 8) {
                     Ok(st) => format!("{:>11.2}% {:>10.1}", st.mac_efficiency() * 100.0, st.fps(CLOCK_HZ)),
                     Err(_) => "   DEADLOCK        -".to_string(),
                 };

@@ -162,6 +162,14 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Façade entry point: load the engine for a
+    /// [`crate::design::Design`]'s network (resolves the AOT artifact
+    /// short name from the design).
+    pub fn load_for(design: &crate::design::Design, dir: &Path) -> Result<Engine> {
+        let short = design.network_short_or_err().map_err(|e| anyhow::anyhow!(e))?;
+        Engine::load(dir, short)
+    }
+
     /// Load + compile every stage of `<short>` (e.g. `"mbv2"`) from `dir`.
     pub fn load(dir: &Path, short: &str) -> Result<Engine> {
         let manifest = Manifest::load(dir, short)?;

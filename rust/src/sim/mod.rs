@@ -26,7 +26,7 @@ use crate::model::throughput::LayerAlloc;
 use crate::nets::{LayerKind, LayerSrc, Network};
 
 /// Simulator options: the optimization toggles of Fig 17.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SimOptions {
     /// Padding handling (Fig 11(a) vs (b)).
     pub padding: PaddingMode,

@@ -1,11 +1,18 @@
-//! Minimal JSON parser for the AOT artifact manifests.
+//! Minimal JSON parser + stable serializer.
 //!
 //! The offline build vendors only the `xla` crate's dependency closure, so
 //! serde is unavailable; this covers the JSON subset `aot.py` emits
 //! (objects, arrays, strings, f64 numbers, bools, null) plus escapes.
+//!
+//! Serialization ([`Json`]'s `Display` impl) is *stable*: objects print
+//! their keys in sorted order (`Json::Obj` is a `BTreeMap`), numbers with
+//! an integral value print as integers, and everything fits on one line —
+//! so two serializations of equal values are byte-identical and design
+//! artifacts ([`crate::design::Design::to_json`]) stay diffable.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fmt::Write as _;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -93,6 +100,68 @@ impl Json {
         self.as_arr()
             .map(|a| a.iter().filter_map(Json::as_usize).collect())
             .unwrap_or_default()
+    }
+}
+
+fn write_json_str(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_char('"')?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => f.write_char(c)?,
+        }
+    }
+    f.write_char('"')
+}
+
+impl fmt::Display for Json {
+    /// Compact, stable serialization: sorted object keys, integral numbers
+    /// as integers, shortest round-tripping form for the rest.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) if !n.is_finite() => f.write_str("null"),
+            Json::Num(n) => {
+                // 2^53-bounded integral values print without a fraction and
+                // re-parse to the identical f64.
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_json_str(f, s),
+            Json::Arr(a) => {
+                f.write_char('[')?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        f.write_char(',')?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_char(']')
+            }
+            Json::Obj(m) => {
+                f.write_char('{')?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_char(',')?;
+                    }
+                    write_json_str(f, k)?;
+                    f.write_char(':')?;
+                    write!(f, "{v}")?;
+                }
+                f.write_char('}')
+            }
+        }
     }
 }
 
@@ -301,6 +370,25 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12x").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn serializer_is_stable_and_roundtrips() {
+        let doc = r#"{"b": [1, 2.5, -3], "a": "x\n\"y\"", "c": {"k": true, "j": null}}"#;
+        let j = Json::parse(doc).unwrap();
+        let s1 = j.to_string();
+        // Keys sorted, one line, integral numbers printed as integers.
+        assert_eq!(s1, r#"{"a":"x\n\"y\"","b":[1,2.5,-3],"c":{"j":null,"k":true}}"#);
+        // Parse -> print is a fixed point.
+        assert_eq!(Json::parse(&s1).unwrap().to_string(), s1);
+    }
+
+    #[test]
+    fn serializer_escapes_control_chars() {
+        let j = Json::Str("a\u{1}b\\c".to_string());
+        let s = j.to_string();
+        assert_eq!(s, "\"a\\u0001b\\\\c\"");
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 
     #[test]

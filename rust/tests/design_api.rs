@@ -1,0 +1,112 @@
+//! Tests of the `Design`/`Platform` façade: JSON persistence round-trips,
+//! platform budgets steering Algorithm 1, and the deprecated
+//! `alloc::design_point` shim agreeing with the builder path.
+
+use repro::alloc::Granularity;
+use repro::sim::SimOptions;
+use repro::{nets, zc706, Design, Platform};
+
+#[test]
+fn design_json_roundtrips_bit_identically() {
+    for net in [nets::mobilenet_v2(), nets::shufflenet_v2()] {
+        let d = Design::builder(&net).platform(Platform::zc706()).build();
+        let json = d.to_json();
+        let reloaded = Design::from_json(&json).expect("reload");
+        assert_eq!(json, reloaded.to_json(), "{}: to_json not a fixed point", net.name);
+        // And a second round trip stays fixed.
+        assert_eq!(reloaded.to_json(), Design::from_json(&reloaded.to_json()).unwrap().to_json());
+    }
+}
+
+#[test]
+fn design_json_roundtrips_for_non_default_build_inputs() {
+    let net = nets::shufflenet_v1();
+    let d = Design::builder(&net)
+        .platform(Platform::custom("edge", 700 * 1024, 320).with_clock_hz(150.0e6))
+        .granularity(Granularity::Factorized)
+        .sim_options(SimOptions::baseline())
+        .build();
+    let json = d.to_json();
+    let reloaded = Design::from_json(&json).expect("reload");
+    assert_eq!(json, reloaded.to_json());
+    assert_eq!(reloaded.platform().name, "edge");
+    assert_eq!(reloaded.platform().clock_hz, 150.0e6);
+    assert_eq!(reloaded.granularity(), Granularity::Factorized);
+    assert_eq!(*reloaded.sim_options(), SimOptions::baseline());
+}
+
+#[test]
+fn json_is_one_line_with_sorted_keys() {
+    let net = nets::mobilenet_v1();
+    let d = Design::builder(&net).build();
+    for text in [d.to_json(), d.summary_json()] {
+        assert!(!text.contains('\n'), "not one line: {text}");
+        // Top-level keys appear in sorted order.
+        let keys: Vec<usize> = ["\"boundary\"", "\"network\"", "\"platform\"", "\"sram_bytes\""]
+            .iter()
+            .map(|k| text.find(k).unwrap_or_else(|| panic!("missing {k} in {text}")))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "keys out of order: {text}");
+    }
+}
+
+#[test]
+fn tiny_sram_platform_pushes_boundary_earlier_than_zc706() {
+    let net = nets::mobilenet_v2();
+    let tiny = Design::builder(&net)
+        .platform(Platform::custom("tiny-sram", 256 * 1024, zc706::DSP_BUDGET))
+        .build();
+    let zc = Design::builder(&net).platform(Platform::zc706()).build();
+    // Algorithm 1's second iteration trades spare SRAM for a deeper FRCE
+    // region; with almost no SRAM headroom the FRCE/WRCE boundary must sit
+    // strictly earlier than the ZC706 design's.
+    assert!(
+        tiny.ce_plan().boundary < zc.ce_plan().boundary,
+        "tiny boundary {} not earlier than zc706 {}",
+        tiny.ce_plan().boundary,
+        zc.ce_plan().boundary
+    );
+    // Less on-chip buffering => more off-chip traffic.
+    assert!(tiny.dram_bytes() >= zc.dram_bytes());
+    assert!(tiny.memory().sram_bytes <= zc.memory().sram_bytes);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_design_point_shim_matches_builder() {
+    for (net, granularity) in [
+        (nets::mobilenet_v2(), Granularity::Fgpm),
+        (nets::shufflenet_v2(), Granularity::Factorized),
+    ] {
+        let shim = repro::alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, granularity);
+        let d = Design::builder(&net)
+            .platform(Platform::zc706())
+            .granularity(granularity)
+            .build();
+        assert_eq!(shim.memory.boundary, d.ce_plan().boundary, "{}", net.name);
+        assert_eq!(shim.memory.boundary_min_sram, d.memory().boundary_min_sram);
+        assert_eq!(shim.sram_bytes, d.sram_bytes());
+        assert_eq!(shim.dram_bytes, d.dram_bytes());
+        assert_eq!(shim.parallelism.pes, d.parallelism().pes);
+        assert_eq!(shim.parallelism.dsps, d.parallelism().dsps);
+        assert_eq!(shim.parallelism.allocs, d.allocs());
+        assert_eq!(shim.performance.t_max, d.predicted().t_max);
+        assert_eq!(shim.performance.fps, d.predicted().fps);
+    }
+}
+
+#[test]
+fn saved_design_file_reloads_and_resimulates() {
+    let net = nets::shufflenet_v2();
+    let d = Design::builder(&net).platform(Platform::zc706()).build();
+    let path = std::env::temp_dir().join("repro_design_roundtrip.json");
+    std::fs::write(&path, d.to_json()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let reloaded = Design::from_json(&text).unwrap();
+    let a = d.simulate(4).unwrap();
+    let b = reloaded.simulate(4).unwrap();
+    assert_eq!(a.period_cycles, b.period_cycles);
+    assert_eq!(a.total_cycles, b.total_cycles);
+}

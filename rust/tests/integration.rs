@@ -2,14 +2,13 @@
 //! algorithms, the cycle-level simulator, and the AOT stage plan must all
 //! tell one consistent story.
 
-use repro::alloc::{self, Granularity};
+use repro::alloc;
+use repro::model::dram;
 use repro::model::memory::{CePlan, MemoryModelCfg};
-use repro::model::{dram, throughput};
 use repro::nets::{self, LayerKind};
 use repro::report;
-use repro::sim::{self, SimOptions};
 use repro::util::json::Json;
-use repro::{zc706, CLOCK_HZ};
+use repro::{zc706, Design, Platform, CLOCK_HZ};
 
 // ---------------------------------------------------------------------
 // Model <-> simulator consistency
@@ -18,14 +17,9 @@ use repro::{zc706, CLOCK_HZ};
 #[test]
 fn sim_never_beats_theory_and_stays_close_on_implemented_configs() {
     for net in [nets::mobilenet_v2(), nets::shufflenet_v2()] {
-        let cfg = MemoryModelCfg::default();
-        let plan = CePlan {
-            boundary: alloc::balanced_memory_allocation(&net, zc706::SRAM_BYTES, &cfg).boundary,
-        };
-        let p = alloc::dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
-        let perf = throughput::evaluate(&net, &p.allocs);
-        let stats = sim::simulate(&net, &p.allocs, &plan, &SimOptions::optimized(), 10).unwrap();
-        let ratio = stats.period_cycles / perf.t_max as f64;
+        let d = Design::builder(&net).platform(Platform::zc706()).build();
+        let stats = d.simulate(10).unwrap();
+        let ratio = stats.period_cycles / d.predicted().t_max as f64;
         assert!(ratio >= 0.999, "{}: sim beat theory ({ratio})", net.name);
         assert!(ratio < 1.10, "{}: ratio {ratio}", net.name);
     }
@@ -167,22 +161,23 @@ fn manifest_boundary_agrees_with_distribution_criterion() {
 #[test]
 fn design_points_all_networks_reasonable() {
     for net in nets::all_networks() {
-        let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
-        assert!(d.performance.mac_efficiency > 0.85, "{}: eff {}", net.name, d.performance.mac_efficiency);
-        assert!(d.parallelism.dsps <= zc706::DSP_BUDGET);
-        assert!(d.sram_bytes < zc706::SRAM_BYTES * 3 / 2, "{}", net.name);
-        let fps = d.performance.fps;
+        let d = Design::builder(&net).platform(Platform::zc706()).build();
+        let perf = d.predicted();
+        assert!(perf.mac_efficiency > 0.85, "{}: eff {}", net.name, perf.mac_efficiency);
+        assert!(d.parallelism().dsps <= zc706::DSP_BUDGET);
+        assert!(d.sram_bytes() < zc706::SRAM_BYTES * 3 / 2, "{}", net.name);
+        let fps = perf.fps;
         assert!(fps > 300.0 && fps < 10_000.0, "{}: {fps}", net.name);
         // Throughput sanity vs the clock: GOPS <= 2 * PEs * f.
-        assert!(d.performance.gops <= d.parallelism.pes as f64 * 2.0 * CLOCK_HZ / 1e9 + 1e-6);
+        assert!(perf.gops <= d.parallelism().pes as f64 * 2.0 * CLOCK_HZ / 1e9 + 1e-6);
     }
 }
 
 #[test]
 fn pool_and_movement_layers_never_bottleneck() {
     for net in nets::all_networks() {
-        let d = alloc::design_point(&net, zc706::SRAM_BYTES, zc706::DSP_BUDGET, Granularity::Fgpm);
-        let b = &net.layers[d.performance.bottleneck];
+        let d = Design::builder(&net).platform(Platform::zc706()).build();
+        let b = &net.layers[d.predicted().bottleneck];
         assert!(
             b.kind.is_mac(),
             "{}: bottleneck is {:?}",

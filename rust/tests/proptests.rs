@@ -285,6 +285,23 @@ fn prop_json_roundtrip() {
     });
 }
 
+#[test]
+fn prop_json_serializer_roundtrip() {
+    // print -> parse recovers the value, and a second print is
+    // byte-identical (the stability the Design JSON artifacts rely on).
+    check("json_serializer", 300, |r: &mut Rng| gen_json(r, 3).1, |v| {
+        let s = v.to_string();
+        let back = Json::parse(&s).map_err(|e| format!("reparse of {s:?}: {e}"))?;
+        if back != *v {
+            return Err(format!("value changed: {v:?} -> {s} -> {back:?}"));
+        }
+        if back.to_string() != s {
+            return Err(format!("print not a fixed point: {s}"));
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------
 // Window geometry: the CE's closed-form required_arrival / oldest_needed
 // vs a brute-force window enumeration.
