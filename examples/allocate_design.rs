@@ -3,6 +3,10 @@
 //! [`Platform`] budgets, demonstrating the scalability claim of Fig 12/15.
 //! With the façade a multi-platform sweep is a one-liner per cell.
 //!
+//! For whole-matrix sweeps (the catalog x the zoo, with JSON output and
+//! per-cell artifacts) see the "Design-space sweeps" example,
+//! `examples/platform_sweep.rs`, and the `repro sweep` subcommand.
+//!
 //! ```sh
 //! cargo run --release --offline --example allocate_design
 //! ```

@@ -1,0 +1,65 @@
+//! # Design-space sweeps
+//!
+//! The whole platform catalog x the whole network zoo in one call: a
+//! [`SweepSpec`] names the matrix axes, [`SweepSpec::run`] compiles a
+//! `Design` per cell (Algorithm 1 boundary, Algorithm 2 parallelism,
+//! clock-aware Eq-14 prediction at each platform's own MHz), and the
+//! report renders as an aligned table ([`report::sweep_matrix`]) or the
+//! stable sorted-key JSON that BENCH trajectories record.
+//!
+//! The CLI twin of this example is:
+//!
+//! ```sh
+//! repro sweep --nets mobilenet_v2,shufflenet_v2 \
+//!             --platforms zc706,zcu102,edge --json
+//! ```
+//!
+//! Pass a directory argument to also persist one `Design` artifact per
+//! cell (the same artifact format committed as golden baselines under
+//! `rust/tests/baselines/`):
+//!
+//! ```sh
+//! cargo run --release --offline --example platform_sweep [save-dir]
+//! ```
+
+use repro::alloc::Granularity;
+use repro::sweep::SweepSpec;
+use repro::{report, Platform};
+
+fn main() {
+    // Default axes: all four zoo networks x the whole catalog. Add the
+    // factorized baseline as a second granularity so every cell pair
+    // shows the FGPM gain platform by platform.
+    let spec = SweepSpec {
+        granularities: vec![Granularity::Fgpm, Granularity::Factorized],
+        ..SweepSpec::default()
+    };
+    println!(
+        "sweeping {} cells ({} networks x {} platforms x {} granularities)",
+        spec.cell_count(),
+        spec.nets.len(),
+        spec.platforms.len(),
+        spec.granularities.len()
+    );
+    for p in Platform::list() {
+        println!(
+            "  {:8} {:>5} DSPs (budget {:>4}), {:>5.2} MB SRAM, {:>3.0} MHz",
+            p.name,
+            p.dsp_total,
+            p.dsp_budget,
+            p.sram_bytes as f64 / 1048576.0,
+            p.clock_hz / 1e6
+        );
+    }
+
+    let sweep_report = spec.run();
+    println!("{}", report::sweep_matrix(&sweep_report));
+
+    let json = sweep_report.to_json();
+    println!("JSON document: {} bytes, stable sorted keys (`repro sweep --json`)", json.len());
+
+    if let Some(dir) = std::env::args().nth(1) {
+        let paths = sweep_report.save_designs(std::path::Path::new(&dir)).expect("save designs");
+        println!("saved {} design artifacts to {dir}", paths.len());
+    }
+}

@@ -57,6 +57,14 @@ fn main() {
         let _ = d;
     });
 
+    // The design-space sweep: one full catalog row (every platform, model
+    // only) for MobileNetV2 — the per-cell cost every BENCH sweep pays.
+    let sweep_spec = repro::sweep::SweepSpec::from_csv(Some("mobilenet_v2"), None, None).unwrap();
+    time("sweep_mbv2_full_catalog_model_only", 20000.0, || {
+        let rep = sweep_spec.run();
+        let _ = rep.to_json();
+    });
+
     // Coordinator overhead (needs `make artifacts`).
     let dir = runtime::artifacts_dir();
     if dir.join("mbv2_manifest.json").exists() {

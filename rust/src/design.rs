@@ -2,8 +2,32 @@
 //! methodology pipeline — network → balanced memory allocation (Alg 1) →
 //! dynamic parallelism tuning (Alg 2) → streaming simulation → reporting.
 //!
-//! A [`Platform`] names an FPGA resource budget ([`Platform::zc706`] is the
-//! paper's evaluation part; [`Platform::custom`] expresses anything else).
+//! # The platform catalog
+//!
+//! A [`Platform`] names an FPGA resource budget — the "(network, FPGA)
+//! pair" half of the paper's design-space methodology. The catalog ships
+//! three named parts, enumerable via [`Platform::list`] and resolvable by
+//! name via [`Platform::by_name`] / [`Platform::resolve`] (the CLI's
+//! `--platform` / `--platforms` values):
+//!
+//! * [`Platform::zc706`] — the paper's evaluation part (855-DSP budget,
+//!   1.80 MB SRAM, 200 MHz);
+//! * [`Platform::zcu102`] — a ZCU102-class UltraScale+ budget (2520
+//!   DSP48E2 at a 95% cap, ~4.7 MB SRAM, 300 MHz — the platform clock
+//!   flows through [`crate::model::throughput::evaluate_at`], so
+//!   predictions are clock-aware);
+//! * [`Platform::edge`] — an edge-class part (220 DSPs, <1 MB SRAM,
+//!   150 MHz) small enough that some networks' min-SRAM configurations
+//!   do not fit, exercising the sweep report's `fits_sram` column.
+//!
+//! [`Platform::custom`] expresses anything else, refined by the `with_*`
+//! setters. Whole {network} x {platform} x {granularity} matrices are
+//! evaluated in one call by [`crate::sweep`], rendered via
+//! [`crate::report::sweep_matrix`], and locked down by the golden
+//! baselines in `rust/tests/baselines/`.
+//!
+//! # Designs
+//!
 //! A [`Design`] is the fully-resolved artifact for one (network, platform,
 //! granularity) triple: the FRCE/WRCE boundary, per-layer parallelism,
 //! predicted performance and memory figures, plus the simulator options it
@@ -41,7 +65,7 @@ use crate::model::throughput::{self, Performance};
 use crate::nets::{self, Network};
 use crate::sim::{self, Deadlock, PaddingMode, SimOptions, SimStats};
 use crate::util::json::Json;
-use crate::{zc706, CLOCK_HZ};
+use crate::{edge, zc706, zcu102, CLOCK_HZ};
 
 /// A named FPGA resource budget — the "(network, FPGA) pair" half of the
 /// paper's design-space exploration, replacing loose `sram`/`dsp`
@@ -76,6 +100,43 @@ impl Platform {
         }
     }
 
+    /// A ZCU102-class (XCZU9EG) budget — the catalog's mid-range part:
+    /// ~4.7 MB SRAM, 2520 DSP48E2 capped at 95% (2394), 300 MHz.
+    pub fn zcu102() -> Platform {
+        Platform {
+            name: "zcu102".to_string(),
+            sram_bytes: zcu102::SRAM_BYTES,
+            dsp_budget: zcu102::DSP_BUDGET,
+            dsp_total: zcu102::DSP,
+            bram36k: zcu102::BRAM36K,
+            clock_hz: zcu102::CLOCK_HZ,
+        }
+    }
+
+    /// An edge-class budget — the catalog's small part: 960 KB SRAM
+    /// (<1 MB), 220 DSPs, 150 MHz.
+    pub fn edge() -> Platform {
+        Platform {
+            name: "edge".to_string(),
+            sram_bytes: edge::SRAM_BYTES,
+            dsp_budget: edge::DSP_BUDGET,
+            dsp_total: edge::DSP,
+            bram36k: edge::BRAM36K,
+            clock_hz: edge::CLOCK_HZ,
+        }
+    }
+
+    /// Every named platform in the catalog, in canonical order — the axis
+    /// a default [`crate::sweep::SweepSpec`] runs over.
+    pub fn list() -> Vec<Platform> {
+        vec![Platform::zc706(), Platform::zcu102(), Platform::edge()]
+    }
+
+    /// Comma-separated catalog names, for CLI error messages.
+    pub fn known_names() -> String {
+        Platform::list().iter().map(|p| p.name.as_str()).collect::<Vec<_>>().join(", ")
+    }
+
     /// A custom budget. `dsp_total` defaults to `dsp_budget` and `bram36k`
     /// to the blocks covering `sram_bytes`; refine with the `with_*`
     /// setters when modelling a real part.
@@ -90,12 +151,20 @@ impl Platform {
         }
     }
 
-    /// Resolve a platform by name (the CLI's `--platform` values).
+    /// Resolve a catalog platform by name, case-folded (the CLI's
+    /// `--platform` / `--platforms` values).
     pub fn by_name(name: &str) -> Option<Platform> {
-        match name.to_ascii_lowercase().as_str() {
-            "zc706" => Some(Platform::zc706()),
-            _ => None,
-        }
+        let name = name.to_ascii_lowercase();
+        Platform::list().into_iter().find(|p| p.name == name)
+    }
+
+    /// [`Platform::by_name`] with the uniform "known platforms: ..."
+    /// error the CLI and sweep parser report for unknown names, instead
+    /// of a silent `None`.
+    pub fn resolve(name: &str) -> Result<Platform, String> {
+        Platform::by_name(name).ok_or_else(|| {
+            format!("unknown platform {name:?} (known platforms: {})", Platform::known_names())
+        })
     }
 
     pub fn with_sram_bytes(mut self, bytes: u64) -> Platform {
@@ -554,10 +623,27 @@ mod tests {
     fn platform_by_name_and_custom() {
         assert_eq!(Platform::by_name("zc706").unwrap(), Platform::zc706());
         assert_eq!(Platform::by_name("ZC706").unwrap(), Platform::zc706());
-        assert!(Platform::by_name("zcu102").is_none());
-        let p = Platform::custom("edge", 900 * 1024, 220).with_clock_hz(150.0e6);
+        assert_eq!(Platform::by_name("zcu102").unwrap(), Platform::zcu102());
+        assert_eq!(Platform::by_name("EDGE").unwrap(), Platform::edge());
+        assert!(Platform::by_name("vu9p").is_none());
+        let p = Platform::custom("pico", 900 * 1024, 220).with_clock_hz(150.0e6);
         assert_eq!(p.dsp_total, 220);
         assert_eq!(p.clock_hz, 150.0e6);
+    }
+
+    #[test]
+    fn platform_catalog_lists_and_resolves() {
+        let names: Vec<&str> = Platform::list().iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["zc706", "zcu102", "edge"]);
+        for p in Platform::list() {
+            assert_eq!(Platform::by_name(&p.name).unwrap(), p);
+            assert!(p.dsp_budget <= p.dsp_total, "{}", p.name);
+            assert!(p.sram_bytes > 0 && p.clock_hz > 0.0, "{}", p.name);
+        }
+        assert_eq!(Platform::zcu102().clock_hz, 300.0e6);
+        assert!(Platform::edge().sram_bytes < 1 << 20, "edge must stay under 1 MB");
+        let err = Platform::resolve("vu9p").unwrap_err();
+        assert!(err.contains("known platforms: zc706, zcu102, edge"), "{err}");
     }
 
     #[test]

@@ -20,10 +20,14 @@
 //! std::fs::write("mbv2.design.json", design.to_json()).unwrap(); // persist
 //! ```
 //!
-//! [`Platform::zc706`] names the paper's evaluation budget;
-//! [`Platform::custom`] expresses any other part (edge-class SRAM,
-//! ZCU102-class DSP counts, ...), which makes multi-platform sweeps
-//! one-liners.
+//! [`Platform::zc706`] names the paper's evaluation budget; the catalog
+//! ([`Platform::list`]) also ships [`Platform::zcu102`] (UltraScale+
+//! class: 2520 DSP48E2, ~4.7 MB SRAM, 300 MHz) and [`Platform::edge`]
+//! (220 DSPs, <1 MB SRAM), and [`Platform::custom`] expresses any other
+//! part. Whole {network} x {platform} x {granularity} matrices are
+//! evaluated in one call by the [`sweep`] module (`repro sweep` on the
+//! CLI), whose per-cell `Design` artifacts double as the golden
+//! regression baselines under `rust/tests/baselines/`.
 //!
 //! # Subsystems
 //!
@@ -34,7 +38,11 @@
 //!   allocation) and Algorithm 2 (dynamic parallelism tuning), plus the
 //!   factorized-granularity baseline.
 //! * [`design`] — the `Design`/`Platform` façade chaining the above into
-//!   one compiled, persistable artifact per (network, platform) pair.
+//!   one compiled, persistable artifact per (network, platform) pair,
+//!   plus the named platform catalog.
+//! * [`sweep`] — the design-space sweep subsystem: the full pipeline over
+//!   a {networks} x {platforms} x {granularities} matrix, rendered as a
+//!   text table ([`report::sweep_matrix`]) or stable sorted-key JSON.
 //! * [`sim`] — the cycle-level streaming simulator (hybrid CEs, line
 //!   buffers with both padding schemes, order converter, SCB joins).
 //! * [`runtime`] — PJRT wrapper loading AOT-compiled HLO artifacts.
@@ -51,9 +59,11 @@ pub mod nets;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 
 pub use design::{Design, Platform};
+pub use sweep::{SweepReport, SweepSpec};
 
 /// Clock frequency of the evaluated design (the paper implements at 200 MHz).
 pub const CLOCK_HZ: f64 = 200.0e6;
@@ -76,4 +86,47 @@ pub mod zc706 {
     /// LUT / DFF totals (reported, not modelled).
     pub const LUT: usize = 218_600;
     pub const DFF: usize = 437_200;
+}
+
+/// ZCU102-class (XCZU9EG, UltraScale+) resource budget — the ROADMAP's
+/// mid-range follow-on part: 2520 DSP48E2 with the same empirical 95%
+/// utilization cap as the ZC706, ~4.7 MB of on-chip SRAM (BRAM plus
+/// UltraRAM-class headroom), and a 300 MHz-class design clock.
+///
+/// Prefer [`crate::Platform::zcu102`], which carries the same numbers as
+/// a named catalog value; these constants are the single source of truth
+/// it reads.
+pub mod zcu102 {
+    /// Total BRAM36K blocks on the part.
+    pub const BRAM36K: usize = 912;
+    /// On-chip SRAM byte budget (~4.7 MB: 4800 KB).
+    pub const SRAM_BYTES: u64 = 4800 * 1024;
+    /// Total DSP48E2 slices.
+    pub const DSP: usize = 2520;
+    /// DSP cap at the 95% empirical utilization target (ZC706 convention).
+    pub const DSP_BUDGET: usize = 2394;
+    /// UltraScale+ parts close timing at 300 MHz-class clocks.
+    pub const CLOCK_HZ: f64 = 300.0e6;
+}
+
+/// Edge-class resource budget — the ROADMAP's small follow-on part:
+/// <1 MB of on-chip SRAM and 220 DSPs (a Zynq-7020-class envelope) at a
+/// conservative 150 MHz clock. Small enough that even the minimum-SRAM
+/// configuration of some zoo networks does not fit, which is exactly the
+/// regime the sweep report's `fits_sram` / `sram_utilization` columns
+/// surface.
+///
+/// Prefer [`crate::Platform::edge`]; these constants are the single
+/// source of truth it reads.
+pub mod edge {
+    /// BRAM36K blocks covering the SRAM budget (960 KB / 4.5 KB, rounded up).
+    pub const BRAM36K: usize = 214;
+    /// On-chip SRAM byte budget: 960 KB (<1 MB).
+    pub const SRAM_BYTES: u64 = 960 * 1024;
+    /// Total DSP slices.
+    pub const DSP: usize = 220;
+    /// Small parts run the PE array on the full DSP complement.
+    pub const DSP_BUDGET: usize = 220;
+    /// Conservative edge-class design clock.
+    pub const CLOCK_HZ: f64 = 150.0e6;
 }

@@ -11,6 +11,11 @@
 //!   full design artifact).
 //! * `simulate <net>` — cycle-level simulation of the design point
 //!   (`--load FILE` re-simulates a saved design).
+//! * `sweep` — the design-space sweep: the full pipeline over a
+//!   {networks} x {platforms} x {granularities} matrix (defaults: whole
+//!   zoo x whole catalog x FGPM). `--json` emits the stable sorted-key
+//!   document, `--save-dir DIR` persists one `Design` artifact per cell,
+//!   `--frames N` also cycle-simulates each cell.
 //! * `infer <short> [--frames N]` — sequential PJRT inference vs golden.
 //! * `stream <short> [--frames N] [--workers N]` — the threaded streaming
 //!   coordinator (the end-to-end system path).
@@ -22,6 +27,7 @@
 use std::process::ExitCode;
 
 use repro::design::{Design, Platform};
+use repro::sweep::SweepSpec;
 use repro::{alloc, coordinator, nets, report, runtime, sim};
 
 fn usage() -> ExitCode {
@@ -32,6 +38,8 @@ fn usage() -> ExitCode {
          \x20          [--json] [--save FILE] [--load FILE]\n\
          \x20 simulate <mbv1|mbv2|snv1|snv2> [--platform zc706] [--sram-mb F] [--dsp N] [--factorized]\n\
          \x20          [--frames N] [--baseline] [--save FILE] [--load FILE]\n\
+         \x20 sweep  [--nets a,b,..] [--platforms zc706,zcu102,edge] [--granularities fgpm,factorized]\n\
+         \x20          [--frames N] [--json] [--save-dir DIR]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
     );
@@ -75,9 +83,10 @@ fn parse_or<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Re
 fn platform_from_args(args: &[String]) -> Result<Platform, String> {
     let mut p = match flag_val(args, "--platform")? {
         None => Platform::zc706(),
-        Some(n) => Platform::by_name(&n).ok_or_else(|| {
-            format!("--platform: unknown platform {n:?} (known: zc706; use --sram-mb/--dsp for custom budgets)")
-        })?,
+        // `resolve` lists the whole catalog on unknown names instead of
+        // the old silent usage failure.
+        Some(n) => Platform::resolve(&n)
+            .map_err(|e| format!("--platform: {e}; use --sram-mb/--dsp for custom budgets"))?,
     };
     let mut custom = false;
     if let Some(mb) = parse_opt::<f64>(args, "--sram-mb")? {
@@ -98,7 +107,19 @@ fn platform_from_args(args: &[String]) -> Result<Platform, String> {
 }
 
 /// Flags that consume the following argument as their value.
-const VALUE_FLAGS: [&str; 7] = ["--platform", "--sram-mb", "--dsp", "--frames", "--workers", "--save", "--load"];
+const VALUE_FLAGS: [&str; 11] = [
+    "--platform",
+    "--sram-mb",
+    "--dsp",
+    "--frames",
+    "--workers",
+    "--save",
+    "--load",
+    "--nets",
+    "--platforms",
+    "--granularities",
+    "--save-dir",
+];
 
 /// First positional argument after the subcommand, skipping flags and the
 /// values consumed by value-taking flags (so `--load f.json mbv2` still
@@ -288,6 +309,11 @@ fn main() -> ExitCode {
                 Ok(f) => f,
                 Err(e) => return fail(&e),
             };
+            // The simulator needs at least one measured frame; 0 would
+            // panic deep in the warmup arithmetic instead of erroring.
+            if frames == 0 {
+                return fail("--frames: must be >= 1");
+            }
             if let Err(e) = save_if_asked(&args, &d) {
                 return fail(&e);
             }
@@ -311,6 +337,62 @@ fn main() -> ExitCode {
                     eprintln!("{e}");
                     return ExitCode::FAILURE;
                 }
+            }
+        }
+        "sweep" => {
+            if let Err(e) = check_flags(
+                &args,
+                &["--nets", "--platforms", "--granularities", "--frames", "--save-dir"],
+                &["--json"],
+            ) {
+                return fail(&e);
+            }
+            if let Some(p) = positional(&args) {
+                return fail(&format!("sweep takes no positional argument, found {p:?}"));
+            }
+            // Validate every flag (including --save-dir) before the
+            // potentially expensive matrix run starts.
+            let parsed = (|| -> Result<(SweepSpec, Option<String>), String> {
+                let mut spec = SweepSpec::from_csv(
+                    flag_val(&args, "--nets")?.as_deref(),
+                    flag_val(&args, "--platforms")?.as_deref(),
+                    flag_val(&args, "--granularities")?.as_deref(),
+                )?;
+                spec.frames = parse_opt(&args, "--frames")?;
+                if spec.frames == Some(0) {
+                    return Err("--frames: must be >= 1".to_string());
+                }
+                Ok((spec, flag_val(&args, "--save-dir")?))
+            })();
+            let (spec, save_dir) = match parsed {
+                Ok(p) => p,
+                Err(e) => return fail(&e),
+            };
+            // Fail on an unwritable save directory now, not after the
+            // matrix has been computed: create it and probe with a
+            // scratch file (create_dir_all alone succeeds on an
+            // existing read-only directory).
+            if let Some(dir) = &save_dir {
+                if let Err(e) = std::fs::create_dir_all(dir) {
+                    return fail(&format!("--save-dir {dir}: {e}"));
+                }
+                let probe = std::path::Path::new(dir).join(".sweep-write-probe");
+                if let Err(e) = std::fs::write(&probe, b"") {
+                    return fail(&format!("--save-dir {dir}: not writable: {e}"));
+                }
+                let _ = std::fs::remove_file(&probe);
+            }
+            let sweep_report = spec.run();
+            if let Some(dir) = save_dir {
+                match sweep_report.save_designs(std::path::Path::new(&dir)) {
+                    Ok(paths) => eprintln!("saved {} design artifacts to {dir}", paths.len()),
+                    Err(e) => return fail(&format!("--save-dir: {e}")),
+                }
+            }
+            if args.iter().any(|a| a == "--json") {
+                println!("{}", sweep_report.to_json());
+            } else {
+                println!("{}", report::sweep_matrix(&sweep_report));
             }
         }
         "infer" => {

@@ -72,7 +72,8 @@ pub struct Performance {
     pub t_max: u64,
     /// Index of the bottleneck layer.
     pub bottleneck: usize,
-    /// Frames per second at the 200 MHz design clock.
+    /// Frames per second at the evaluated design clock (the paper's
+    /// 200 MHz unless a [`crate::design::Platform`] overrides it).
     pub fps: f64,
     /// Giga-operations per second (1 MAC = 2 ops).
     pub gops: f64,
@@ -141,9 +142,16 @@ fn pipeline_fill_cycles(l: &Layer, _a: LayerAlloc) -> u64 {
     }
 }
 
-/// Peak GOPS of a PE budget at the design clock.
+/// Peak GOPS of a PE budget at the paper's 200 MHz design clock.
 pub fn peak_gops(total_pes: usize) -> f64 {
-    total_pes as f64 * 2.0 * CLOCK_HZ / 1e9
+    peak_gops_at(total_pes, CLOCK_HZ)
+}
+
+/// Peak GOPS of a PE budget at an explicit design clock — the
+/// clock-aware companion of [`evaluate_at`] for catalog platforms with
+/// non-200 MHz clocks (ZCU102 at 300 MHz, edge at 150 MHz).
+pub fn peak_gops_at(total_pes: usize, clock_hz: f64) -> f64 {
+    total_pes as f64 * 2.0 * clock_hz / 1e9
 }
 
 pub(crate) fn div_ceil(a: u64, b: u64) -> u64 {
@@ -198,6 +206,24 @@ mod tests {
         let a = LayerAlloc { pw: 32, pf: 16 };
         let t = layer_cycles(l, a);
         assert_eq!(t * a.pes() as u64, l.macs());
+    }
+
+    #[test]
+    fn evaluate_at_scales_linearly_with_clock() {
+        // The allocation is clock-independent, so a 300 MHz platform's
+        // prediction is exactly the 200 MHz one scaled by 1.5 — the
+        // property that lets ZCU102 catalog cells share the ZC706 math.
+        let net = mobilenet_v2();
+        let allocs = vec![LayerAlloc { pw: 4, pf: 2 }; net.layers.len()];
+        let p200 = evaluate_at(&net, &allocs, 200.0e6);
+        let p300 = evaluate_at(&net, &allocs, 300.0e6);
+        assert_eq!(p200.t_max, p300.t_max);
+        assert_eq!(p200.bottleneck, p300.bottleneck);
+        assert_eq!(p200.mac_efficiency, p300.mac_efficiency);
+        assert!((p300.fps / p200.fps - 1.5).abs() < 1e-9);
+        assert!((p300.gops / p200.gops - 1.5).abs() < 1e-9);
+        assert!((p200.latency_ms / p300.latency_ms - 1.5).abs() < 1e-9);
+        assert!((peak_gops_at(100, 300.0e6) / peak_gops(100) - 1.5).abs() < 1e-12);
     }
 
     #[test]

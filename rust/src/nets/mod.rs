@@ -567,6 +567,12 @@ pub fn all_networks() -> Vec<Network> {
     vec![mobilenet_v1(), mobilenet_v2(), shufflenet_v1(), shufflenet_v2()]
 }
 
+/// Canonical names of the zoo networks, in the paper's order — the CLI
+/// and sweep parser's "known networks: ..." error listing.
+pub fn zoo_names() -> [&'static str; 4] {
+    ["mobilenet_v1", "mobilenet_v2", "shufflenet_v1", "shufflenet_v2"]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -657,6 +663,12 @@ mod tests {
             assert_eq!(by_name(a).unwrap().name, by_name(b).unwrap().name);
         }
         assert!(by_name("resnet50").is_none());
+    }
+
+    #[test]
+    fn zoo_names_match_all_networks() {
+        let names: Vec<String> = all_networks().into_iter().map(|n| n.name).collect();
+        assert_eq!(names, zoo_names());
     }
 
     #[test]

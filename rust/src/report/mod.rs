@@ -692,6 +692,69 @@ pub fn ablation() -> String {
     s
 }
 
+/// Aligned text rendering of a design-space [`crate::sweep::SweepReport`]
+/// — one row per (network, platform, granularity) cell with the headline
+/// figures (FRCE/WRCE boundary, DSP utilization, SRAM fit, predicted FPS
+/// at each platform's own clock, and simulated FPS when the sweep ran the
+/// cycle simulator). The text twin of `repro sweep --json`.
+pub fn sweep_matrix(report: &crate::sweep::SweepReport) -> String {
+    let mut s = String::new();
+    header(&mut s, "Design-space sweep: networks x platforms x granularities");
+    let _ = writeln!(
+        s,
+        "{:16} {:8} {:10} {:>8} {:>6} {:>6} {:>6} {:>8} {:>5} {:>8} {:>6} {:>9} {:>7} {:>9}",
+        "network",
+        "platform",
+        "gran",
+        "boundary",
+        "PEs",
+        "DSPs",
+        "DSP%",
+        "SRAM MB",
+        "fits",
+        "DRAM MB",
+        "MHz",
+        "FPS",
+        "eff%",
+        "sim FPS"
+    );
+    for cell in &report.cells {
+        let d = cell.design();
+        let sim_fps = match (cell.sim(), cell.sim_error()) {
+            (Some(f), _) => format!("{:.1}", f.fps),
+            (None, Some(_)) => "DEADLOCK".to_string(),
+            (None, None) => "-".to_string(),
+        };
+        let _ = writeln!(
+            s,
+            "{:16} {:8} {:10} {:>8} {:>6} {:>6} {:>5.1}% {:>8.2} {:>5} {:>8.2} {:>6.0} {:>9.1} {:>6.2}% {:>9}",
+            d.network().name,
+            d.platform().name,
+            crate::design::granularity_name(d.granularity()),
+            format!("{}/{}", d.ce_plan().boundary, d.network().layers.len()),
+            d.parallelism().pes,
+            d.parallelism().dsps,
+            cell.dsp_utilization() * 100.0,
+            d.sram_bytes() as f64 / MB,
+            if cell.fits_sram() { "yes" } else { "NO" },
+            d.dram_bytes() as f64 / MB,
+            d.platform().clock_hz / 1e6,
+            d.predicted().fps,
+            d.predicted().mac_efficiency * 100.0,
+            sim_fps
+        );
+    }
+    let _ = writeln!(
+        s,
+        "(boundary b/L: the first b of L CEs are FRCEs; FPS is Eq 14 at each platform's own clock;"
+    );
+    let _ = writeln!(
+        s,
+        " fits=NO marks parts whose SRAM budget is below even this network's allocation)"
+    );
+    s
+}
+
 /// Render every table and figure (the `report all` target).
 pub fn all() -> String {
     let mut s = String::new();
@@ -765,5 +828,20 @@ mod tests {
         assert!(tab1().contains("FRCE"));
         let f = fig10();
         assert!(f.contains("factorized") && f.contains("FGPM"));
+    }
+
+    #[test]
+    fn sweep_matrix_renders_every_cell() {
+        let spec = crate::sweep::SweepSpec::from_csv(
+            Some("shufflenet_v2"),
+            Some("zc706,edge"),
+            None,
+        )
+        .unwrap();
+        let s = sweep_matrix(&spec.run());
+        assert!(s.contains("shufflenet_v2"), "{s}");
+        assert!(s.contains("zc706") && s.contains("edge"), "{s}");
+        // Two cells -> header + 2 rows + 2 footnote lines at minimum.
+        assert!(s.lines().count() >= 5, "{s}");
     }
 }

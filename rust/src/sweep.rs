@@ -1,0 +1,416 @@
+//! Design-space sweep subsystem: the paper's resource-aware methodology
+//! (Algorithm 1 boundary placement, Algorithm 2 parallelism tuning, Eq 14
+//! prediction, optional cycle simulation) evaluated over a whole
+//! {networks} x {platforms} x {granularities} matrix in one call.
+//!
+//! A [`SweepSpec`] names the matrix axes (defaults: the full zoo, the
+//! whole [`Platform::list`] catalog, FGPM granularity); [`SweepSpec::run`]
+//! compiles one [`Design`] per cell and returns a [`SweepReport`] whose
+//! cells carry the headline figures — FPS, MAC efficiency, SRAM bytes,
+//! DSP utilization, FRCE/WRCE boundary — per (network, platform,
+//! granularity) triple. Because each [`Platform`] carries its own clock,
+//! the predictions are clock-aware (ZCU102 cells are evaluated at
+//! 300 MHz, edge cells at 150 MHz).
+//!
+//! Two stable renderings back BENCH trajectories and CI:
+//!
+//! * [`crate::report::sweep_matrix`] — an aligned text table;
+//! * [`SweepReport::to_json`] — one sorted-key JSON line (the `repro
+//!   sweep --json` output), diffable across commits;
+//!
+//! and [`SweepReport::save_designs`] persists every cell's full
+//! [`Design::to_json`] artifact (`<net>_<platform>_<granularity>.design.json`)
+//! — the same artifact format committed as golden regression baselines
+//! under `rust/tests/baselines/`.
+//!
+//! ```no_run
+//! use repro::sweep::SweepSpec;
+//!
+//! let spec = SweepSpec::from_csv(
+//!     Some("mobilenet_v2,shufflenet_v2"),
+//!     Some("zc706,zcu102,edge"),
+//!     None, // granularities: default FGPM
+//! )
+//! .unwrap();
+//! let report = spec.run();
+//! println!("{}", repro::report::sweep_matrix(&report));
+//! std::fs::write("sweep.json", report.to_json()).unwrap();
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::alloc::Granularity;
+use crate::design::{granularity_name, parse_granularity, Design, Platform};
+use crate::nets::{self, Network};
+use crate::sim::SimOptions;
+use crate::util::json::Json;
+
+/// The matrix a sweep runs over, plus per-cell simulation depth.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub nets: Vec<Network>,
+    pub platforms: Vec<Platform>,
+    pub granularities: Vec<Granularity>,
+    /// `Some(n)` with `n > 0`: also cycle-simulate every cell for `n`
+    /// frames (the sweep's actual-vs-theoretical columns). `None` or
+    /// `Some(0)`: model only.
+    pub frames: Option<u64>,
+    /// Simulator options for the cells' designs. `None` keeps the
+    /// builder default ([`SimOptions::optimized`]); ablation sweeps set
+    /// e.g. [`SimOptions::baseline`], under which a cell can deadlock —
+    /// recorded per cell as [`SweepCell::sim_error`].
+    pub sim_options: Option<SimOptions>,
+}
+
+impl Default for SweepSpec {
+    /// The full catalog sweep: every zoo network on every named platform
+    /// at FGPM granularity, model only.
+    fn default() -> Self {
+        SweepSpec {
+            nets: nets::all_networks(),
+            platforms: Platform::list(),
+            granularities: vec![Granularity::Fgpm],
+            frames: None,
+            sim_options: None,
+        }
+    }
+}
+
+fn split_csv(csv: &str) -> Vec<&str> {
+    csv.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
+}
+
+/// Reject axis entries that resolve to the same canonical element
+/// (`mbv2,mobilenet_v2`, `zc706,ZC706`, ...) — they would produce
+/// duplicate cells and clashing artifact file names.
+fn reject_duplicates(flag: &str, keys: impl IntoIterator<Item = String>) -> Result<(), String> {
+    let mut seen = std::collections::BTreeSet::new();
+    for k in keys {
+        if !seen.insert(k.clone()) {
+            return Err(format!(
+                "{flag}: duplicate entry {k:?} (two names resolve to the same element)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+impl SweepSpec {
+    /// Build a spec from the CLI's comma-separated axis lists. `None`
+    /// selects the full default axis (all zoo networks / the whole
+    /// platform catalog / FGPM); `Some` must name at least one element,
+    /// and unknown names fail with the list of known ones.
+    pub fn from_csv(
+        nets_csv: Option<&str>,
+        platforms_csv: Option<&str>,
+        granularities_csv: Option<&str>,
+    ) -> Result<SweepSpec, String> {
+        let mut spec = SweepSpec::default();
+        if let Some(csv) = nets_csv {
+            let names = split_csv(csv);
+            if names.is_empty() {
+                return Err("--nets: empty network list".to_string());
+            }
+            spec.nets = names
+                .iter()
+                .map(|n| {
+                    nets::by_name(n).ok_or_else(|| {
+                        format!(
+                            "unknown network {n:?} (known networks: {})",
+                            nets::zoo_names().join(", ")
+                        )
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(csv) = platforms_csv {
+            let names = split_csv(csv);
+            if names.is_empty() {
+                return Err("--platforms: empty platform list".to_string());
+            }
+            spec.platforms = names.iter().map(|n| Platform::resolve(n)).collect::<Result<_, _>>()?;
+        }
+        if let Some(csv) = granularities_csv {
+            let names = split_csv(csv);
+            if names.is_empty() {
+                return Err("--granularities: empty granularity list".to_string());
+            }
+            spec.granularities =
+                names.iter().map(|g| parse_granularity(g)).collect::<Result<_, _>>()?;
+        }
+        reject_duplicates("--nets", spec.nets.iter().map(|n| n.name.clone()))?;
+        reject_duplicates("--platforms", spec.platforms.iter().map(|p| p.name.clone()))?;
+        reject_duplicates(
+            "--granularities",
+            spec.granularities.iter().map(|g| granularity_name(*g).to_string()),
+        )?;
+        Ok(spec)
+    }
+
+    /// Number of cells the matrix will produce.
+    pub fn cell_count(&self) -> usize {
+        self.nets.len() * self.platforms.len() * self.granularities.len()
+    }
+
+    /// Run the full pipeline for every cell, in deterministic
+    /// nets-outer / platforms / granularities-inner order.
+    pub fn run(&self) -> SweepReport {
+        let frames_req = self.frames.filter(|&f| f > 0);
+        let mut cells = Vec::with_capacity(self.cell_count());
+        for net in &self.nets {
+            for platform in &self.platforms {
+                for &granularity in &self.granularities {
+                    let mut builder = Design::builder(net)
+                        .platform(platform.clone())
+                        .granularity(granularity);
+                    if let Some(opts) = self.sim_options {
+                        builder = builder.sim_options(opts);
+                    }
+                    let design = builder.build();
+                    // A deadlocked simulation (possible only under
+                    // non-default `sim_options`) is recorded as an
+                    // explicit per-cell error, distinguishable from a
+                    // model-only sweep, rather than poisoning the run.
+                    let (sim, sim_error) = match frames_req {
+                        None => (None, None),
+                        Some(frames) => match design.simulate(frames) {
+                            Ok(st) => (
+                                Some(SimFigures {
+                                    frames,
+                                    fps: st.fps(platform.clock_hz),
+                                    mac_efficiency: st.mac_efficiency(),
+                                }),
+                                None,
+                            ),
+                            Err(e) => (None, Some(e.to_string())),
+                        },
+                    };
+                    cells.push(SweepCell { design, sim, sim_error });
+                }
+            }
+        }
+        SweepReport { cells }
+    }
+}
+
+/// Cycle-simulation figures of one cell (present only when the spec set
+/// [`SweepSpec::frames`] and the simulation completed).
+#[derive(Debug, Clone, Copy)]
+pub struct SimFigures {
+    pub frames: u64,
+    /// Simulated FPS at the cell platform's clock.
+    pub fps: f64,
+    /// Actual (simulated) MAC efficiency.
+    pub mac_efficiency: f64,
+}
+
+/// One (network, platform, granularity) cell: the compiled [`Design`]
+/// plus optional simulation figures.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    design: Design,
+    sim: Option<SimFigures>,
+    /// Why the requested simulation produced no figures (deadlock text);
+    /// `None` both when the cell simulated fine and when the sweep was
+    /// model-only — [`SweepCell::sim`] disambiguates.
+    sim_error: Option<String>,
+}
+
+/// File-name-safe lowercase slug of a platform/network name.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+        .collect()
+}
+
+impl SweepCell {
+    pub fn design(&self) -> &Design {
+        &self.design
+    }
+
+    pub fn sim(&self) -> Option<&SimFigures> {
+        self.sim.as_ref()
+    }
+
+    /// The error that prevented a requested simulation (deadlock), if any.
+    pub fn sim_error(&self) -> Option<&str> {
+        self.sim_error.as_deref()
+    }
+
+    pub fn network_name(&self) -> &str {
+        &self.design.network().name
+    }
+
+    pub fn platform(&self) -> &Platform {
+        self.design.platform()
+    }
+
+    /// DSP slices used over the part's total (Table II's utilization).
+    pub fn dsp_utilization(&self) -> f64 {
+        self.design.parallelism().dsps as f64 / self.platform().dsp_total as f64
+    }
+
+    /// Recosted SRAM bytes over the platform budget. Exceeds 1.0 when
+    /// even the minimum-SRAM configuration does not fit the part (the
+    /// edge-class regime).
+    pub fn sram_utilization(&self) -> f64 {
+        self.design.sram_bytes() as f64 / self.platform().sram_bytes as f64
+    }
+
+    /// Whether the recosted SRAM footprint fits the platform budget.
+    pub fn fits_sram(&self) -> bool {
+        self.design.sram_bytes() <= self.platform().sram_bytes
+    }
+
+    /// File name [`SweepReport::save_designs`] writes this cell's design
+    /// artifact under: `<net>_<platform>_<granularity>.design.json`, with
+    /// the network's AOT short name when it is a zoo network.
+    pub fn artifact_file_name(&self) -> String {
+        let net = nets::short_name(self.network_name())
+            .map(str::to_string)
+            .unwrap_or_else(|| sanitize(self.network_name()));
+        format!(
+            "{net}_{}_{}.design.json",
+            sanitize(&self.platform().name),
+            granularity_name(self.design.granularity())
+        )
+    }
+
+    /// The cell's headline figures as a stable sorted-key JSON value —
+    /// one element of the `repro sweep --json` document.
+    pub fn to_json_value(&self) -> Json {
+        let d = &self.design;
+        let p = d.predicted();
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            m.insert(k.to_string(), v);
+        };
+        put("boundary", Json::Num(d.ce_plan().boundary as f64));
+        put("boundary_min_sram", Json::Num(d.memory().boundary_min_sram as f64));
+        put("clock_hz", Json::Num(d.platform().clock_hz));
+        put("dram_bytes", Json::Num(d.dram_bytes() as f64));
+        put("dsp_utilization", Json::Num(self.dsp_utilization()));
+        put("dsps", Json::Num(d.parallelism().dsps as f64));
+        put("fits_sram", Json::Bool(self.fits_sram()));
+        put("fps", Json::Num(p.fps));
+        put("gops", Json::Num(p.gops));
+        put("granularity", Json::Str(granularity_name(d.granularity()).to_string()));
+        put("layers", Json::Num(d.network().layers.len() as f64));
+        put("mac_efficiency", Json::Num(p.mac_efficiency));
+        put("network", Json::Str(d.network().name.clone()));
+        put("pes", Json::Num(d.parallelism().pes as f64));
+        put("platform", Json::Str(d.platform().name.clone()));
+        match &self.sim {
+            Some(s) => {
+                put("sim_fps", Json::Num(s.fps));
+                put("sim_frames", Json::Num(s.frames as f64));
+                put("sim_mac_efficiency", Json::Num(s.mac_efficiency));
+            }
+            None => {
+                put("sim_fps", Json::Null);
+                put("sim_frames", Json::Null);
+                put("sim_mac_efficiency", Json::Null);
+            }
+        }
+        put(
+            "sim_error",
+            match &self.sim_error {
+                Some(e) => Json::Str(e.clone()),
+                None => Json::Null,
+            },
+        );
+        put("sram_bytes", Json::Num(d.sram_bytes() as f64));
+        put("sram_utilization", Json::Num(self.sram_utilization()));
+        put("t_max", Json::Num(p.t_max as f64));
+        Json::Obj(m)
+    }
+}
+
+/// The result of a sweep: one [`SweepCell`] per matrix combination, in
+/// the spec's deterministic iteration order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepReport {
+    /// The whole report as one stable sorted-key JSON line — the
+    /// `repro sweep --json` output recorded in BENCH trajectories.
+    pub fn to_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "cells".to_string(),
+            Json::Arr(self.cells.iter().map(SweepCell::to_json_value).collect()),
+        );
+        m.insert("version".to_string(), Json::Num(1.0));
+        Json::Obj(m).to_string()
+    }
+
+    /// Persist every cell's full [`Design::to_json`] artifact into `dir`
+    /// (created if missing), returning the paths written in cell order.
+    pub fn save_designs(&self, dir: &Path) -> Result<Vec<PathBuf>, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        let mut paths = Vec::with_capacity(self.cells.len());
+        for cell in &self.cells {
+            let path = dir.join(cell.artifact_file_name());
+            let mut text = cell.design.to_json();
+            text.push('\n');
+            std::fs::write(&path, text).map_err(|e| format!("{}: {e}", path.display()))?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    /// The cell for a (network, platform, granularity) triple, if swept.
+    pub fn cell(&self, net: &str, platform: &str, granularity: Granularity) -> Option<&SweepCell> {
+        self.cells.iter().find(|c| {
+            c.network_name() == net
+                && c.platform().name == platform
+                && c.design.granularity() == granularity
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_covers_the_whole_catalog_matrix() {
+        let spec = SweepSpec::default();
+        assert_eq!(spec.nets.len(), 4);
+        assert_eq!(spec.platforms.len(), 3);
+        assert_eq!(spec.granularities, vec![Granularity::Fgpm]);
+        assert_eq!(spec.cell_count(), 12);
+        assert!(spec.frames.is_none());
+    }
+
+    #[test]
+    fn single_cell_sweep_matches_direct_design_build() {
+        let spec =
+            SweepSpec::from_csv(Some("shufflenet_v2"), Some("zcu102"), Some("fgpm")).unwrap();
+        let report = spec.run();
+        assert_eq!(report.cells.len(), 1);
+        let cell = report.cell("shufflenet_v2", "zcu102", Granularity::Fgpm).unwrap();
+        let direct = Design::builder(&nets::shufflenet_v2()).platform(Platform::zcu102()).build();
+        assert_eq!(cell.design().to_json(), direct.to_json());
+        assert_eq!(cell.artifact_file_name(), "snv2_zcu102_fgpm.design.json");
+        assert!(cell.dsp_utilization() > 0.0 && cell.dsp_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn csv_axes_trim_whitespace_and_keep_order() {
+        let spec = SweepSpec::from_csv(
+            Some(" shufflenet_v2 , mobilenet_v2"),
+            Some("edge, zc706"),
+            Some("factorized , fgpm"),
+        )
+        .unwrap();
+        assert_eq!(spec.nets[0].name, "shufflenet_v2");
+        assert_eq!(spec.nets[1].name, "mobilenet_v2");
+        assert_eq!(spec.platforms[0].name, "edge");
+        assert_eq!(spec.platforms[1].name, "zc706");
+        assert_eq!(spec.granularities, vec![Granularity::Factorized, Granularity::Fgpm]);
+    }
+}

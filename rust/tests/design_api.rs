@@ -98,6 +98,39 @@ fn deprecated_design_point_shim_matches_builder() {
 }
 
 #[test]
+fn zcu102_clock_flows_through_prediction() {
+    // The catalog's ZCU102 carries a 300 MHz clock; the allocation
+    // itself is clock-independent, so against an otherwise identical
+    // 200 MHz variant the predicted FPS scales by exactly 3/2 through
+    // `throughput::evaluate_at`.
+    let net = nets::shufflenet_v2();
+    let fast = Design::builder(&net).platform(Platform::zcu102()).build();
+    let slow = Design::builder(&net).platform(Platform::zcu102().with_clock_hz(200.0e6)).build();
+    assert_eq!(fast.platform().clock_hz, 300.0e6);
+    assert_eq!(fast.predicted().t_max, slow.predicted().t_max);
+    assert_eq!(fast.allocs(), slow.allocs());
+    assert_eq!(fast.ce_plan().boundary, slow.ce_plan().boundary);
+    let ratio = fast.predicted().fps / slow.predicted().fps;
+    assert!((ratio - 1.5).abs() < 1e-9, "fps ratio {ratio}");
+    let ratio = fast.predicted().gops / slow.predicted().gops;
+    assert!((ratio - 1.5).abs() < 1e-9, "gops ratio {ratio}");
+}
+
+#[test]
+fn catalog_platforms_build_and_roundtrip_designs() {
+    // Every catalog platform drives the full pipeline and persists: the
+    // same (net, platform) matrix the golden baselines pin.
+    let net = nets::mobilenet_v2();
+    for platform in Platform::list() {
+        let d = Design::builder(&net).platform(platform.clone()).build();
+        assert_eq!(d.platform(), &platform);
+        assert!(d.predicted().fps > 0.0, "{}", platform.name);
+        let reloaded = Design::from_json(&d.to_json()).expect("reload");
+        assert_eq!(d.to_json(), reloaded.to_json(), "{}", platform.name);
+    }
+}
+
+#[test]
 fn saved_design_file_reloads_and_resimulates() {
     let net = nets::shufflenet_v2();
     let d = Design::builder(&net).platform(Platform::zc706()).build();

@@ -9,6 +9,7 @@ use repro::nets;
 use repro::sim::{self, SimOptions};
 use repro::util::json::Json;
 use repro::util::prop::{check, Rng};
+use repro::{Design, Platform};
 
 // ---------------------------------------------------------------------
 // FGPM space properties (Eq 11, §IV-A)
@@ -229,6 +230,119 @@ fn prop_sim_deadlock_free_on_random_configs() {
             }
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Platform catalog invariants (the design-space sweep's budget axes).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_more_sram_never_retreats_the_boundary() {
+    // Algorithm 1's second iteration only ever advances the FRCE/WRCE
+    // boundary with extra SRAM headroom, which in turn can only reduce
+    // DRAM traffic (the boundary sweep is monotone in DRAM).
+    check(
+        "platform_sram_monotone",
+        6,
+        |r: &mut Rng| (r.range(0, 3), r.range(128, 3072)),
+        |&(ni, kb)| {
+            let net = &nets::all_networks()[ni];
+            let small = Platform::custom("small", kb as u64 * 1024, 855);
+            let large = small.clone().with_sram_bytes(kb as u64 * 2 * 1024);
+            let ds = Design::builder(net).platform(small).build();
+            let dl = Design::builder(net).platform(large).build();
+            if dl.ce_plan().boundary < ds.ce_plan().boundary {
+                return Err(format!(
+                    "2x SRAM retreated the boundary: {} -> {}",
+                    ds.ce_plan().boundary,
+                    dl.ce_plan().boundary
+                ));
+            }
+            if dl.dram_bytes() > ds.dram_bytes() {
+                return Err("2x SRAM increased DRAM traffic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_more_dsps_never_lower_predicted_fps() {
+    check(
+        "platform_dsp_monotone",
+        6,
+        |r: &mut Rng| (r.range(0, 3), r.range(60, 1500)),
+        |&(ni, dsp)| {
+            let net = &nets::all_networks()[ni];
+            let base = Platform::custom("base", repro::zc706::SRAM_BYTES, dsp);
+            let doubled = base.clone().with_dsp_budget(dsp * 2);
+            let db = Design::builder(net).platform(base).build();
+            let dd = Design::builder(net).platform(doubled).build();
+            if dd.predicted().t_max > db.predicted().t_max {
+                return Err(format!(
+                    "2x DSPs slowed t_max: {} -> {}",
+                    db.predicted().t_max,
+                    dd.predicted().t_max
+                ));
+            }
+            if dd.predicted().fps < db.predicted().fps {
+                return Err("2x DSPs lowered predicted FPS".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_catalog_platforms_fit_their_own_budgets() {
+    // Algorithm 1's contract per catalog part: whenever the second
+    // iteration advanced past the min-SRAM boundary, the Alg-1 footprint
+    // fits the budget; big parts (>= the ZC706 budget) always fit, and
+    // the DSP budget is never exceeded. The edge part may legitimately
+    // not fit some networks' min-SRAM configurations — exactly what the
+    // sweep's `fits_sram` column surfaces — but then the allocator must
+    // have stopped at the min-SRAM boundary rather than overshooting.
+    for platform in Platform::list() {
+        for net in nets::all_networks() {
+            let d = Design::builder(&net).platform(platform.clone()).build();
+            assert!(
+                d.parallelism().dsps <= platform.dsp_budget,
+                "{} on {}: {} DSPs over budget {}",
+                net.name,
+                platform.name,
+                d.parallelism().dsps,
+                platform.dsp_budget
+            );
+            if d.memory().boundary > d.memory().boundary_min_sram {
+                assert!(
+                    d.memory().sram_bytes < platform.sram_bytes,
+                    "{} on {}: advanced boundary but {} B over budget {} B",
+                    net.name,
+                    platform.name,
+                    d.memory().sram_bytes,
+                    platform.sram_bytes
+                );
+            }
+            if platform.sram_bytes >= repro::zc706::SRAM_BYTES {
+                assert!(
+                    d.memory().sram_bytes < platform.sram_bytes,
+                    "{} does not fit {} ({} B of {} B)",
+                    net.name,
+                    platform.name,
+                    d.memory().sram_bytes,
+                    platform.sram_bytes
+                );
+            }
+            // sram_report at the chosen boundary is what Alg 1 budgeted.
+            assert_eq!(
+                d.sram_report().total(),
+                d.memory().sram_bytes,
+                "{} on {}: sram_report disagrees with Alg 1",
+                net.name,
+                platform.name
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------

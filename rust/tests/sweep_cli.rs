@@ -1,0 +1,194 @@
+//! Coverage of the `repro sweep` subcommand's parsing and output
+//! surface, exercised through the same library entry points `main.rs`
+//! delegates to (`SweepSpec::from_csv`, `SweepReport::to_json`,
+//! `SweepReport::save_designs`) — unknown axis names, empty matrices,
+//! JSON that parses back through `util::json`, and `--save-dir`
+//! round-trips.
+
+use std::collections::BTreeSet;
+
+use repro::alloc::Granularity;
+use repro::sim::SimOptions;
+use repro::sweep::SweepSpec;
+use repro::util::json::Json;
+use repro::{Design, Platform};
+
+#[test]
+fn unknown_platform_error_lists_the_catalog() {
+    let err = SweepSpec::from_csv(None, Some("zc999"), None).unwrap_err();
+    assert!(err.contains("unknown platform \"zc999\""), "{err}");
+    assert!(err.contains("known platforms: zc706, zcu102, edge"), "{err}");
+    // Same catalog listing as Platform::resolve (the allocate/simulate
+    // `--platform` path fixed in this PR).
+    assert!(Platform::resolve("zc999").unwrap_err().contains("known platforms"), "{err}");
+}
+
+#[test]
+fn unknown_network_and_granularity_fail_loudly() {
+    let err = SweepSpec::from_csv(Some("resnet50"), None, None).unwrap_err();
+    assert!(err.contains("unknown network \"resnet50\""), "{err}");
+    assert!(err.contains("mobilenet_v1") && err.contains("shufflenet_v2"), "{err}");
+    let err = SweepSpec::from_csv(None, None, Some("coarse")).unwrap_err();
+    assert!(err.contains("unknown granularity"), "{err}");
+}
+
+#[test]
+fn empty_matrix_axes_are_rejected() {
+    for (n, p, g) in [
+        (Some(""), None, None),
+        (Some(" , ,"), None, None),
+        (None, Some(""), None),
+        (None, None, Some(",")),
+    ] {
+        let err = SweepSpec::from_csv(n, p, g).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+    }
+}
+
+#[test]
+fn aliased_axis_entries_are_rejected_as_duplicates() {
+    let err = SweepSpec::from_csv(Some("mbv2,mobilenet_v2"), None, None).unwrap_err();
+    assert!(err.contains("duplicate entry \"mobilenet_v2\""), "{err}");
+    let err = SweepSpec::from_csv(None, Some("zc706,ZC706"), None).unwrap_err();
+    assert!(err.contains("duplicate entry \"zc706\""), "{err}");
+    let err = SweepSpec::from_csv(None, None, Some("fgpm,fgpm")).unwrap_err();
+    assert!(err.contains("duplicate entry \"fgpm\""), "{err}");
+}
+
+#[test]
+fn default_axes_cover_zoo_and_catalog() {
+    let spec = SweepSpec::from_csv(None, None, None).unwrap();
+    assert_eq!(spec.nets.len(), 4);
+    assert_eq!(spec.platforms.len(), 3);
+    assert_eq!(spec.granularities, vec![Granularity::Fgpm]);
+    assert_eq!(spec.cell_count(), 12);
+}
+
+#[test]
+fn json_output_has_one_cell_per_combination_and_reparses() {
+    let spec = SweepSpec::from_csv(
+        Some("mobilenet_v2,shufflenet_v2"),
+        Some("zc706,edge"),
+        Some("fgpm,factorized"),
+    )
+    .unwrap();
+    let report = spec.run();
+    let text = report.to_json();
+    assert!(!text.contains('\n'), "not one line");
+    let j = Json::parse(&text).expect("sweep JSON reparses through util::json");
+    let cells = j.arr_field("cells");
+    assert_eq!(cells.len(), 8, "2 nets x 2 platforms x 2 granularities");
+    assert_eq!(j.usize_field("version"), 1);
+    let mut seen = BTreeSet::new();
+    for c in cells {
+        // Acceptance keys: FPS, MAC efficiency, SRAM bytes, DSP
+        // utilization, FRCE/WRCE boundary — present and sane per cell.
+        assert!(c.get("fps").unwrap().as_f64().unwrap() > 0.0);
+        let eff = c.get("mac_efficiency").unwrap().as_f64().unwrap();
+        assert!(eff > 0.0 && eff <= 1.0);
+        assert!(c.get("sram_bytes").unwrap().as_f64().unwrap() > 0.0);
+        let util = c.get("dsp_utilization").unwrap().as_f64().unwrap();
+        assert!(util > 0.0 && util <= 1.0);
+        assert!(c.get("boundary").unwrap().as_usize().unwrap() <= c.usize_field("layers"));
+        assert!(
+            seen.insert((
+                c.str_field("network").to_string(),
+                c.str_field("platform").to_string(),
+                c.str_field("granularity").to_string(),
+            )),
+            "duplicate cell"
+        );
+    }
+    // Stable output: a second run serializes byte-identically, and the
+    // unrequested platform never appears.
+    assert_eq!(text, spec.run().to_json());
+    assert!(!text.contains("zcu102"));
+}
+
+#[test]
+fn clock_aware_cells_report_platform_clocks() {
+    let spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,zcu102"), None).unwrap();
+    let report = spec.run();
+    let zc = report.cell("shufflenet_v2", "zc706", Granularity::Fgpm).unwrap();
+    let zu = report.cell("shufflenet_v2", "zcu102", Granularity::Fgpm).unwrap();
+    assert_eq!(zc.platform().clock_hz, 200.0e6);
+    assert_eq!(zu.platform().clock_hz, 300.0e6);
+    // ZCU102 has both a bigger DSP budget and a faster clock: never
+    // slower than the ZC706 cell, and the 300 MHz flows through Eq 14.
+    assert!(zu.design().predicted().fps >= zc.design().predicted().fps);
+}
+
+#[test]
+fn save_dir_round_trips_every_design() {
+    let spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+    let report = spec.run();
+    let dir = std::env::temp_dir().join("repro_sweep_save_dir_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let paths = report.save_designs(&dir).expect("save designs");
+    assert_eq!(paths.len(), report.cells.len());
+    for (path, cell) in paths.iter().zip(&report.cells) {
+        assert_eq!(
+            path.file_name().unwrap().to_str().unwrap(),
+            cell.artifact_file_name(),
+            "path order matches cell order"
+        );
+        let text = std::fs::read_to_string(path).unwrap();
+        let reloaded = Design::from_json(&text).expect("saved artifact reloads");
+        assert_eq!(reloaded.to_json(), cell.design().to_json(), "{}", path.display());
+    }
+    let names: BTreeSet<String> = paths
+        .iter()
+        .map(|p| p.file_name().unwrap().to_str().unwrap().to_string())
+        .collect();
+    let expect: BTreeSet<String> =
+        ["snv2_zc706_fgpm.design.json", "snv2_edge_fgpm.design.json"]
+            .into_iter()
+            .map(str::to_string)
+            .collect();
+    assert_eq!(names, expect);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn simulated_sweep_cells_carry_actual_figures() {
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None).unwrap();
+    spec.frames = Some(2);
+    let report = spec.run();
+    let cell = &report.cells[0];
+    let sim = cell.sim().expect("optimized options never deadlock");
+    assert!(cell.sim_error().is_none());
+    assert_eq!(sim.frames, 2);
+    assert!(sim.fps > 0.0);
+    assert!(sim.mac_efficiency > 0.0 && sim.mac_efficiency <= 1.0);
+    // Simulation never meaningfully beats the Eq-14 bound (the sim is
+    // allowed a <=0.1% quantization wobble, see integration.rs).
+    assert!(sim.fps <= cell.design().predicted().fps * 1.002);
+    let j = Json::parse(&report.to_json()).unwrap();
+    let c = &j.arr_field("cells")[0];
+    assert!(c.get("sim_fps").unwrap().as_f64().is_some());
+    assert_eq!(c.usize_field("sim_frames"), 2);
+}
+
+#[test]
+fn sweep_sim_options_flow_into_cells_and_zero_frames_is_model_only() {
+    // Ablation-style sweep: the spec's SimOptions reach every cell's
+    // design (and therefore its simulation and saved artifact).
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None).unwrap();
+    spec.sim_options = Some(SimOptions::baseline());
+    spec.frames = Some(2);
+    let report = spec.run();
+    let cell = &report.cells[0];
+    assert_eq!(*cell.design().sim_options(), SimOptions::baseline());
+    // Baseline options are deadlock-free on the zoo (see proptests), so
+    // the cell either simulated or recorded an explicit error — never a
+    // silent null next to a requested simulation.
+    assert!(cell.sim().is_some() ^ cell.sim_error().is_some());
+
+    // frames = 0 cannot drive the simulator; the sweep treats it as
+    // model-only instead of panicking in the warmup arithmetic.
+    spec.frames = Some(0);
+    spec.sim_options = None;
+    let report = spec.run();
+    assert!(report.cells[0].sim().is_none());
+    assert!(report.cells[0].sim_error().is_none());
+}
