@@ -1,0 +1,57 @@
+//! # Pareto frontiers and clock-scaling curves
+//!
+//! The design-space sweep's two analyses in one run:
+//!
+//! * `sweep::pareto` — per network, the non-dominated set over
+//!   {on-chip SRAM, predicted FPS, off-chip DRAM bytes/frame}. This is
+//!   the trade-off the balanced-dataflow methodology navigates: the
+//!   FRCE/WRCE boundary *buys* throughput-stable on-chip memory at the
+//!   price of off-chip weight traffic, so a bigger part (zcu102) and a
+//!   smaller one (edge) land on the same frontier at different corners,
+//!   and a factorized-granularity cell is typically *dominated* by its
+//!   FGPM twin — same memory, less throughput.
+//!
+//! * `SweepSpec::clocks_hz` — every cell's Eq-14 prediction re-evaluated
+//!   along a `--clocks`-style MHz axis (FPS/GOPS scale linearly; the
+//!   allocation, bottleneck CE and MAC efficiency do not move).
+//!
+//! The CLI twin of this example is:
+//!
+//! ```sh
+//! repro sweep --granularities fgpm,factorized \
+//!             --jobs 4 --clocks 100,150,200,250,300 --pareto
+//! ```
+
+use repro::alloc::Granularity;
+use repro::sweep::{self, SweepSpec};
+use repro::{report, util};
+
+fn main() {
+    let spec = SweepSpec {
+        granularities: vec![Granularity::Fgpm, Granularity::Factorized],
+        jobs: util::pool::default_jobs(),
+        clocks_hz: SweepSpec::parse_clocks_csv("100,150,200,250,300").expect("clock axis"),
+        ..SweepSpec::default()
+    };
+    println!("evaluating {} cells on {} jobs", spec.cell_count(), spec.jobs);
+    let matrix = spec.run();
+
+    let analysis = sweep::pareto(&matrix);
+    println!("{}", report::pareto_table(&matrix, &analysis));
+    for front in &analysis.fronts {
+        println!(
+            "{}: {} of {} cells on the frontier, {} dominated",
+            front.network,
+            front.frontier.len(),
+            front.frontier.len() + front.dominated.len(),
+            front.dominated.len()
+        );
+    }
+
+    println!("{}", report::clock_curves(&matrix));
+
+    // The machine-readable twin: `repro sweep --pareto --json` embeds the
+    // same analysis under a top-level "pareto" key.
+    let json = matrix.to_json_with(Some(&analysis));
+    println!("JSON document with embedded pareto analysis: {} bytes", json.len());
+}

@@ -5,6 +5,8 @@
 //! * full `Design` compilation latency (Alg 1 + Alg 2 at the ZC706
 //!   platform) and its JSON persistence round-trip;
 //! * the individual Alg 1 / Alg 2 / FGPM-space stages;
+//! * the design-space sweep engine, serial vs parallel (`--jobs`), with
+//!   a byte-identical-output assertion on the parallel path;
 //! * streaming-coordinator overhead vs the busiest worker (only when
 //!   artifacts exist).
 
@@ -64,6 +66,32 @@ fn main() {
         let rep = sweep_spec.run();
         let _ = rep.to_json();
     });
+
+    // Serial vs parallel sweep engine over the full 12-cell catalog
+    // matrix: the headline wall-clock win of `--jobs`, plus a one-shot
+    // assertion that parallelism never changes the bytes.
+    let full = repro::sweep::SweepSpec::default();
+    let mut serial_report = None;
+    let serial = time("sweep_catalog_12cells_jobs1", 20000.0, || {
+        serial_report = Some(full.run());
+    });
+    let jobs = repro::util::pool::default_jobs().clamp(2, 8);
+    let mut par_spec = full.clone();
+    par_spec.jobs = jobs;
+    let mut par_report = None;
+    let par = time(&format!("sweep_catalog_12cells_jobs{jobs}"), 20000.0, || {
+        par_report = Some(par_spec.run());
+    });
+    assert_eq!(
+        serial_report.expect("timed at least once").to_json(),
+        par_report.expect("timed at least once").to_json(),
+        "parallel sweep must be byte-identical to serial"
+    );
+    println!(
+        "  -> parallel speedup {:.2}x at {} jobs (deterministic output verified)",
+        serial.median_ms / par.median_ms,
+        jobs
+    );
 
     // Coordinator overhead (needs `make artifacts`).
     let dir = runtime::artifacts_dir();

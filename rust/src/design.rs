@@ -128,6 +128,15 @@ impl Platform {
 
     /// Every named platform in the catalog, in canonical order — the axis
     /// a default [`crate::sweep::SweepSpec`] runs over.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use repro::Platform;
+    ///
+    /// let names: Vec<String> = Platform::list().into_iter().map(|p| p.name).collect();
+    /// assert_eq!(names, ["zc706", "zcu102", "edge"]);
+    /// ```
     pub fn list() -> Vec<Platform> {
         vec![Platform::zc706(), Platform::zcu102(), Platform::edge()]
     }
@@ -161,6 +170,16 @@ impl Platform {
     /// [`Platform::by_name`] with the uniform "known platforms: ..."
     /// error the CLI and sweep parser report for unknown names, instead
     /// of a silent `None`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use repro::Platform;
+    ///
+    /// assert_eq!(Platform::resolve("ZC706").unwrap(), Platform::zc706());
+    /// let err = Platform::resolve("vu9p").unwrap_err();
+    /// assert!(err.contains("known platforms: zc706, zcu102, edge"));
+    /// ```
     pub fn resolve(name: &str) -> Result<Platform, String> {
         Platform::by_name(name).ok_or_else(|| {
             format!("unknown platform {name:?} (known platforms: {})", Platform::known_names())
@@ -309,6 +328,20 @@ pub struct Design {
 impl Design {
     /// Start building a design for `net` (the network is cloned: a design
     /// is a self-contained artifact).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use repro::{Design, Platform};
+    ///
+    /// let net = repro::nets::shufflenet_v2();
+    /// let design = Design::builder(&net).platform(Platform::zc706()).build();
+    /// assert!(design.predicted().fps > 0.0);
+    /// assert!(design.sram_bytes() <= Platform::zc706().sram_bytes);
+    /// // Persist, reload, and the derivation cross-checks bit-for-bit.
+    /// let reloaded = Design::from_json(&design.to_json()).unwrap();
+    /// assert_eq!(reloaded.to_json(), design.to_json());
+    /// ```
     pub fn builder(net: &Network) -> DesignBuilder {
         DesignBuilder {
             net: net.clone(),

@@ -15,7 +15,11 @@
 //!   {networks} x {platforms} x {granularities} matrix (defaults: whole
 //!   zoo x whole catalog x FGPM). `--json` emits the stable sorted-key
 //!   document, `--save-dir DIR` persists one `Design` artifact per cell,
-//!   `--frames N` also cycle-simulates each cell.
+//!   `--frames N` also cycle-simulates each cell, `--jobs N` evaluates
+//!   cells on N worker threads (byte-identical output for any N),
+//!   `--clocks MHZ,..` adds an FPS-vs-clock curve per cell, and
+//!   `--pareto` layers the per-network {SRAM, FPS, DRAM} Pareto-frontier
+//!   analysis on top.
 //! * `infer <short> [--frames N]` — sequential PJRT inference vs golden.
 //! * `stream <short> [--frames N] [--workers N]` — the threaded streaming
 //!   coordinator (the end-to-end system path).
@@ -39,7 +43,7 @@ fn usage() -> ExitCode {
          \x20 simulate <mbv1|mbv2|snv1|snv2> [--platform zc706] [--sram-mb F] [--dsp N] [--factorized]\n\
          \x20          [--frames N] [--baseline] [--save FILE] [--load FILE]\n\
          \x20 sweep  [--nets a,b,..] [--platforms zc706,zcu102,edge] [--granularities fgpm,factorized]\n\
-         \x20          [--frames N] [--json] [--save-dir DIR]\n\
+         \x20          [--frames N] [--jobs N] [--clocks MHZ,MHZ,..] [--pareto] [--json] [--save-dir DIR]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
     );
@@ -107,7 +111,7 @@ fn platform_from_args(args: &[String]) -> Result<Platform, String> {
 }
 
 /// Flags that consume the following argument as their value.
-const VALUE_FLAGS: [&str; 11] = [
+const VALUE_FLAGS: [&str; 13] = [
     "--platform",
     "--sram-mb",
     "--dsp",
@@ -119,6 +123,8 @@ const VALUE_FLAGS: [&str; 11] = [
     "--platforms",
     "--granularities",
     "--save-dir",
+    "--jobs",
+    "--clocks",
 ];
 
 /// First positional argument after the subcommand, skipping flags and the
@@ -342,8 +348,16 @@ fn main() -> ExitCode {
         "sweep" => {
             if let Err(e) = check_flags(
                 &args,
-                &["--nets", "--platforms", "--granularities", "--frames", "--save-dir"],
-                &["--json"],
+                &[
+                    "--nets",
+                    "--platforms",
+                    "--granularities",
+                    "--frames",
+                    "--jobs",
+                    "--clocks",
+                    "--save-dir",
+                ],
+                &["--json", "--pareto"],
             ) {
                 return fail(&e);
             }
@@ -361,6 +375,17 @@ fn main() -> ExitCode {
                 spec.frames = parse_opt(&args, "--frames")?;
                 if spec.frames == Some(0) {
                     return Err("--frames: must be >= 1".to_string());
+                }
+                // Parallel cell evaluation: any job count produces
+                // byte-identical output, so this is purely a wall-clock
+                // knob. 0 would mean "no workers"; fail loudly like the
+                // other flags instead of silently running serial.
+                spec.jobs = parse_or(&args, "--jobs", 1usize)?;
+                if spec.jobs == 0 {
+                    return Err("--jobs: must be >= 1".to_string());
+                }
+                if let Some(csv) = flag_val(&args, "--clocks")? {
+                    spec.clocks_hz = SweepSpec::parse_clocks_csv(&csv)?;
                 }
                 Ok((spec, flag_val(&args, "--save-dir")?))
             })();
@@ -389,10 +414,17 @@ fn main() -> ExitCode {
                     Err(e) => return fail(&format!("--save-dir: {e}")),
                 }
             }
+            let pareto = args.iter().any(|a| a == "--pareto").then(|| sweep_report.pareto());
             if args.iter().any(|a| a == "--json") {
-                println!("{}", sweep_report.to_json());
+                println!("{}", sweep_report.to_json_with(pareto.as_ref()));
             } else {
                 println!("{}", report::sweep_matrix(&sweep_report));
+                if !spec.clocks_hz.is_empty() {
+                    println!("{}", report::clock_curves(&sweep_report));
+                }
+                if let Some(analysis) = &pareto {
+                    println!("{}", report::pareto_table(&sweep_report, analysis));
+                }
             }
         }
         "infer" => {

@@ -154,6 +154,64 @@ pub fn peak_gops_at(total_pes: usize, clock_hz: f64) -> f64 {
     total_pes as f64 * 2.0 * clock_hz / 1e9
 }
 
+/// One point of an FPS-vs-clock scaling curve: the Eq-14 prediction of a
+/// fixed allocation re-evaluated at one candidate design clock, next to
+/// the PE array's raw peak at that clock ([`peak_gops_at`]).
+///
+/// The allocation itself is clock-independent (Alg 1 and Alg 2 count
+/// bytes and cycles, not seconds), so along a curve only the rates move:
+/// `fps`/`gops`/`peak_gops` scale linearly with the clock while the
+/// bottleneck CE and MAC efficiency stay fixed — which is exactly what
+/// makes the curve a frequency-scaling *what-if* rather than a re-design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockPoint {
+    /// The candidate design clock in Hz.
+    pub clock_hz: f64,
+    /// Predicted frames per second at this clock (Eq 14).
+    pub fps: f64,
+    /// Achieved giga-ops per second at this clock.
+    pub gops: f64,
+    /// Raw PE-array peak at this clock ([`peak_gops_at`]); `gops /
+    /// peak_gops` is clock-invariant along the curve (it tracks
+    /// [`Performance::mac_efficiency`], counting the SCB additions
+    /// `gops` includes on top of the PE-array MACs).
+    pub peak_gops: f64,
+}
+
+/// Evaluate an allocation's FPS/GOPS curve across candidate design clocks
+/// (the `repro sweep --clocks` axis). Each point re-runs [`evaluate_at`]
+/// and pairs it with [`peak_gops_at`] for the same clock; points come
+/// back in the order given.
+///
+/// # Examples
+///
+/// ```
+/// use repro::model::throughput::{clock_curve, LayerAlloc};
+///
+/// let net = repro::nets::shufflenet_v2();
+/// let allocs = vec![LayerAlloc::ONE; net.layers.len()];
+/// let curve = clock_curve(&net, &allocs, &[100.0e6, 200.0e6]);
+/// assert_eq!(curve.len(), 2);
+/// // Rates scale linearly with the clock; efficiency does not move.
+/// assert!((curve[1].fps / curve[0].fps - 2.0).abs() < 1e-9);
+/// assert!((curve[0].gops / curve[0].peak_gops
+///        - curve[1].gops / curve[1].peak_gops).abs() < 1e-12);
+/// ```
+pub fn clock_curve(net: &Network, allocs: &[LayerAlloc], clocks_hz: &[f64]) -> Vec<ClockPoint> {
+    clocks_hz
+        .iter()
+        .map(|&hz| {
+            let p = evaluate_at(net, allocs, hz);
+            ClockPoint {
+                clock_hz: hz,
+                fps: p.fps,
+                gops: p.gops,
+                peak_gops: peak_gops_at(p.total_pes, hz),
+            }
+        })
+        .collect()
+}
+
 pub(crate) fn div_ceil(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
 }
@@ -224,6 +282,26 @@ mod tests {
         assert!((p300.gops / p200.gops - 1.5).abs() < 1e-9);
         assert!((p200.latency_ms / p300.latency_ms - 1.5).abs() < 1e-9);
         assert!((peak_gops_at(100, 300.0e6) / peak_gops(100) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_curve_points_match_direct_evaluation() {
+        let net = mobilenet_v2();
+        let allocs = vec![LayerAlloc { pw: 4, pf: 2 }; net.layers.len()];
+        let clocks = [150.0e6, 200.0e6, 300.0e6];
+        let curve = clock_curve(&net, &allocs, &clocks);
+        assert_eq!(curve.len(), 3);
+        for (pt, &hz) in curve.iter().zip(&clocks) {
+            let p = evaluate_at(&net, &allocs, hz);
+            assert_eq!(pt.clock_hz, hz);
+            assert_eq!(pt.fps, p.fps);
+            assert_eq!(pt.gops, p.gops);
+            assert_eq!(pt.peak_gops, peak_gops_at(p.total_pes, hz));
+            // O_total also counts SCB additions executed on LUT adders,
+            // so allow their thin margin above the PE-array peak.
+            assert!(pt.gops <= pt.peak_gops * 1.01);
+        }
+        assert!(clock_curve(&net, &allocs, &[]).is_empty());
     }
 
     #[test]

@@ -755,6 +755,100 @@ pub fn sweep_matrix(report: &crate::sweep::SweepReport) -> String {
     s
 }
 
+/// Aligned text rendering of a sweep's Pareto analysis
+/// ([`crate::sweep::pareto`]): per network, the non-dominated cells over
+/// {on-chip SRAM, predicted FPS, off-chip DRAM bytes/frame} followed by
+/// every dominated cell with the frontier cell that dominates it. The
+/// text twin of the `"pareto"` key in `repro sweep --pareto --json`.
+pub fn pareto_table(
+    report: &crate::sweep::SweepReport,
+    analysis: &crate::sweep::ParetoReport,
+) -> String {
+    let mut s = String::new();
+    header(&mut s, "Pareto frontier: {SRAM, predicted FPS, DRAM/frame} per network");
+    let label = |i: usize| {
+        let d = report.cells[i].design();
+        format!("{}/{}", d.platform().name, crate::design::granularity_name(d.granularity()))
+    };
+    for front in &analysis.fronts {
+        let _ = writeln!(s, "{}:", front.network);
+        let _ = writeln!(
+            s,
+            "  {:20} {:>9} {:>9} {:>9}  {}",
+            "cell", "SRAM MB", "FPS", "DRAM MB", "status"
+        );
+        for &i in &front.frontier {
+            let d = report.cells[i].design();
+            let _ = writeln!(
+                s,
+                "  {:20} {:>9.2} {:>9.1} {:>9.2}  frontier",
+                label(i),
+                d.sram_bytes() as f64 / MB,
+                d.predicted().fps,
+                d.dram_bytes() as f64 / MB,
+            );
+        }
+        for &(i, by) in &front.dominated {
+            let d = report.cells[i].design();
+            let _ = writeln!(
+                s,
+                "  {:20} {:>9.2} {:>9.1} {:>9.2}  dominated by {}",
+                label(i),
+                d.sram_bytes() as f64 / MB,
+                d.predicted().fps,
+                d.dram_bytes() as f64 / MB,
+                label(by),
+            );
+        }
+    }
+    let _ = writeln!(
+        s,
+        "(frontier = no other cell of the same network is ≤ SRAM, ≥ FPS and ≤ DRAM with one strict)"
+    );
+    s
+}
+
+/// Aligned text rendering of a sweep's clock-scaling curves (`repro
+/// sweep --clocks`): per cell, the Eq-14 FPS/GOPS prediction re-evaluated
+/// at each requested clock next to the PE array's raw peak
+/// ([`crate::model::throughput::peak_gops_at`]). Empty curves render a
+/// pointer to the `--clocks` flag instead of an empty table.
+pub fn clock_curves(report: &crate::sweep::SweepReport) -> String {
+    let mut s = String::new();
+    header(&mut s, "Clock-scaling curves: predicted FPS/GOPS vs design clock");
+    if report.cells.iter().all(|c| c.clock_curve().is_empty()) {
+        let _ = writeln!(s, "(no curve points — pass --clocks MHZ[,MHZ..] to request them)");
+        return s;
+    }
+    let _ = writeln!(
+        s,
+        "{:16} {:8} {:10} {:>6} {:>9} {:>9} {:>10} {:>7}",
+        "network", "platform", "gran", "MHz", "FPS", "GOPS", "peak GOPS", "eff%"
+    );
+    for cell in &report.cells {
+        let d = cell.design();
+        for pt in cell.clock_curve() {
+            let _ = writeln!(
+                s,
+                "{:16} {:8} {:10} {:>6.0} {:>9.1} {:>9.1} {:>10.1} {:>6.2}%",
+                d.network().name,
+                d.platform().name,
+                crate::design::granularity_name(d.granularity()),
+                pt.clock_hz / 1e6,
+                pt.fps,
+                pt.gops,
+                pt.peak_gops,
+                pt.gops / pt.peak_gops * 100.0,
+            );
+        }
+    }
+    let _ = writeln!(
+        s,
+        "(the allocation is clock-independent: FPS/GOPS scale linearly, efficiency stays fixed)"
+    );
+    s
+}
+
 /// Render every table and figure (the `report all` target).
 pub fn all() -> String {
     let mut s = String::new();
@@ -828,6 +922,29 @@ mod tests {
         assert!(tab1().contains("FRCE"));
         let f = fig10();
         assert!(f.contains("factorized") && f.contains("FGPM"));
+    }
+
+    #[test]
+    fn pareto_table_and_clock_curves_render() {
+        let mut spec = crate::sweep::SweepSpec::from_csv(
+            Some("shufflenet_v2"),
+            Some("zc706,zcu102,edge"),
+            None,
+        )
+        .unwrap();
+        spec.clocks_hz = crate::sweep::SweepSpec::parse_clocks_csv("150,300").unwrap();
+        let report = spec.run();
+        let t = pareto_table(&report, &crate::sweep::pareto(&report));
+        assert!(t.contains("shufflenet_v2:"), "{t}");
+        assert!(t.contains("frontier"), "{t}");
+        let c = clock_curves(&report);
+        // 3 cells x 2 clock points.
+        assert_eq!(c.matches("shufflenet_v2 ").count(), 6, "{c}");
+        // And the empty-curve sweep points at the flag instead of a table.
+        let plain = crate::sweep::SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None)
+            .unwrap()
+            .run();
+        assert!(clock_curves(&plain).contains("--clocks"), "{}", clock_curves(&plain));
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Design-space sweep subsystem: the paper's resource-aware methodology
 //! (Algorithm 1 boundary placement, Algorithm 2 parallelism tuning, Eq 14
 //! prediction, optional cycle simulation) evaluated over a whole
-//! {networks} x {platforms} x {granularities} matrix in one call.
+//! {networks} x {platforms} x {granularities} matrix in one call — and
+//! the analyses the paper's design-space story rests on, layered on top
+//! of the raw matrix.
 //!
 //! A [`SweepSpec`] names the matrix axes (defaults: the full zoo, the
 //! whole [`Platform::list`] catalog, FGPM granularity); [`SweepSpec::run`]
@@ -12,9 +14,36 @@
 //! the predictions are clock-aware (ZCU102 cells are evaluated at
 //! 300 MHz, edge cells at 150 MHz).
 //!
+//! # Parallel evaluation
+//!
+//! Cells are independent (each is one pure `Design` build plus an
+//! optional cycle simulation), so [`SweepSpec::jobs`] > 1 fans the matrix
+//! out over the scoped-thread pool in [`crate::util::pool`]. Output
+//! ordering is deterministic — cells always come back in nets-outer /
+//! platforms / granularities-inner order regardless of which worker
+//! finished first — so `--jobs N` produces **byte-identical** JSON and
+//! golden-baseline artifacts to the serial path for any `N` (asserted in
+//! `rust/tests/pareto.rs`).
+//!
+//! # Analyses
+//!
+//! * [`pareto`] — the per-network non-dominated set over {on-chip SRAM,
+//!   predicted FPS, off-chip DRAM bytes/frame}, with dominated-by
+//!   attribution: the memory-vs-throughput frontier that motivates the
+//!   whole balanced-dataflow methodology (`repro sweep --pareto`).
+//! * [`SweepSpec::clocks_hz`] — a clock-scaling axis: every cell also
+//!   reports an FPS-vs-clock curve ([`crate::model::throughput::clock_curve`],
+//!   which reuses [`crate::model::throughput::peak_gops_at`]) so one
+//!   `repro sweep --clocks 100,200,300` call emits frequency-scaling
+//!   curves per platform.
+//!
+//! # Stable renderings
+//!
 //! Two stable renderings back BENCH trajectories and CI:
 //!
-//! * [`crate::report::sweep_matrix`] — an aligned text table;
+//! * [`crate::report::sweep_matrix`] — an aligned text table (plus
+//!   [`crate::report::pareto_table`] / [`crate::report::clock_curves`]
+//!   for the analyses);
 //! * [`SweepReport::to_json`] — one sorted-key JSON line (the `repro
 //!   sweep --json` output), diffable across commits;
 //!
@@ -24,16 +53,18 @@
 //! under `rust/tests/baselines/`.
 //!
 //! ```no_run
-//! use repro::sweep::SweepSpec;
+//! use repro::sweep::{self, SweepSpec};
 //!
-//! let spec = SweepSpec::from_csv(
+//! let mut spec = SweepSpec::from_csv(
 //!     Some("mobilenet_v2,shufflenet_v2"),
 //!     Some("zc706,zcu102,edge"),
 //!     None, // granularities: default FGPM
 //! )
 //! .unwrap();
+//! spec.jobs = 4; // parallel cells, byte-identical output to jobs = 1
 //! let report = spec.run();
 //! println!("{}", repro::report::sweep_matrix(&report));
+//! println!("{}", repro::report::pareto_table(&report, &sweep::pareto(&report)));
 //! std::fs::write("sweep.json", report.to_json()).unwrap();
 //! ```
 
@@ -42,9 +73,11 @@ use std::path::{Path, PathBuf};
 
 use crate::alloc::Granularity;
 use crate::design::{granularity_name, parse_granularity, Design, Platform};
+use crate::model::throughput::{self, ClockPoint};
 use crate::nets::{self, Network};
 use crate::sim::SimOptions;
 use crate::util::json::Json;
+use crate::util::pool;
 
 /// The matrix a sweep runs over, plus per-cell simulation depth.
 #[derive(Debug, Clone)]
@@ -61,11 +94,24 @@ pub struct SweepSpec {
     /// e.g. [`SimOptions::baseline`], under which a cell can deadlock —
     /// recorded per cell as [`SweepCell::sim_error`].
     pub sim_options: Option<SimOptions>,
+    /// Worker threads evaluating cells ([`crate::util::pool`]); the CLI's
+    /// `--jobs`. `0` and `1` both mean the serial path. Any value
+    /// produces byte-identical output — parallelism only changes
+    /// wall-clock time.
+    pub jobs: usize,
+    /// Clock-scaling curve axis (the CLI's `--clocks`, in Hz here): when
+    /// non-empty, every cell also carries
+    /// [`SweepCell::clock_curve`] — its allocation's predicted FPS/GOPS
+    /// re-evaluated at each of these clocks next to the PE array's
+    /// [`crate::model::throughput::peak_gops_at`] peak. Empty: no curves
+    /// (and no `clock_curve` key in the JSON, keeping pre-curve
+    /// trajectories diffable).
+    pub clocks_hz: Vec<f64>,
 }
 
 impl Default for SweepSpec {
     /// The full catalog sweep: every zoo network on every named platform
-    /// at FGPM granularity, model only.
+    /// at FGPM granularity, model only, serial, no clock curves.
     fn default() -> Self {
         SweepSpec {
             nets: nets::all_networks(),
@@ -73,6 +119,8 @@ impl Default for SweepSpec {
             granularities: vec![Granularity::Fgpm],
             frames: None,
             sim_options: None,
+            jobs: 1,
+            clocks_hz: Vec::new(),
         }
     }
 }
@@ -101,6 +149,23 @@ impl SweepSpec {
     /// selects the full default axis (all zoo networks / the whole
     /// platform catalog / FGPM); `Some` must name at least one element,
     /// and unknown names fail with the list of known ones.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use repro::sweep::SweepSpec;
+    ///
+    /// let spec = SweepSpec::from_csv(
+    ///     Some("mobilenet_v2,shufflenet_v2"),
+    ///     Some("zc706,edge"),
+    ///     Some("fgpm,factorized"),
+    /// )
+    /// .unwrap();
+    /// assert_eq!(spec.cell_count(), 8); // 2 nets x 2 platforms x 2 grans
+    ///
+    /// let err = SweepSpec::from_csv(None, Some("vu9p"), None).unwrap_err();
+    /// assert!(err.contains("known platforms: zc706, zcu102, edge"));
+    /// ```
     pub fn from_csv(
         nets_csv: Option<&str>,
         platforms_csv: Option<&str>,
@@ -148,49 +213,107 @@ impl SweepSpec {
         Ok(spec)
     }
 
+    /// Parse the CLI's `--clocks` value — a comma-separated list of MHz
+    /// points — into the Hz values [`SweepSpec::clocks_hz`] stores.
+    /// Points must be positive finite numbers; duplicates are rejected
+    /// (they would produce duplicate curve points); order is preserved.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use repro::sweep::SweepSpec;
+    ///
+    /// assert_eq!(
+    ///     SweepSpec::parse_clocks_csv("100, 200,300").unwrap(),
+    ///     vec![100.0e6, 200.0e6, 300.0e6]
+    /// );
+    /// assert!(SweepSpec::parse_clocks_csv("0,200").is_err());
+    /// assert!(SweepSpec::parse_clocks_csv("200,200").is_err());
+    /// ```
+    pub fn parse_clocks_csv(csv: &str) -> Result<Vec<f64>, String> {
+        let points = split_csv(csv);
+        if points.is_empty() {
+            return Err("--clocks: empty clock list".to_string());
+        }
+        let mut hz = Vec::with_capacity(points.len());
+        for p in points {
+            let mhz: f64 =
+                p.parse().map_err(|_| format!("--clocks: cannot parse MHz value {p:?}"))?;
+            if !mhz.is_finite() || mhz <= 0.0 {
+                return Err(format!("--clocks: MHz points must be positive, got {p:?}"));
+            }
+            let v = mhz * 1.0e6;
+            if hz.contains(&v) {
+                return Err(format!("--clocks: duplicate entry {p:?}"));
+            }
+            hz.push(v);
+        }
+        Ok(hz)
+    }
+
     /// Number of cells the matrix will produce.
     pub fn cell_count(&self) -> usize {
         self.nets.len() * self.platforms.len() * self.granularities.len()
     }
 
-    /// Run the full pipeline for every cell, in deterministic
-    /// nets-outer / platforms / granularities-inner order.
+    /// Run the full pipeline for every cell. Cells are evaluated on
+    /// [`SweepSpec::jobs`] worker threads (serial when `jobs <= 1`), but
+    /// the report's cell order is always the deterministic nets-outer /
+    /// platforms / granularities-inner order — the output is
+    /// byte-identical for any job count.
     pub fn run(&self) -> SweepReport {
         let frames_req = self.frames.filter(|&f| f > 0);
-        let mut cells = Vec::with_capacity(self.cell_count());
+        let mut combos = Vec::with_capacity(self.cell_count());
         for net in &self.nets {
             for platform in &self.platforms {
                 for &granularity in &self.granularities {
-                    let mut builder = Design::builder(net)
-                        .platform(platform.clone())
-                        .granularity(granularity);
-                    if let Some(opts) = self.sim_options {
-                        builder = builder.sim_options(opts);
-                    }
-                    let design = builder.build();
-                    // A deadlocked simulation (possible only under
-                    // non-default `sim_options`) is recorded as an
-                    // explicit per-cell error, distinguishable from a
-                    // model-only sweep, rather than poisoning the run.
-                    let (sim, sim_error) = match frames_req {
-                        None => (None, None),
-                        Some(frames) => match design.simulate(frames) {
-                            Ok(st) => (
-                                Some(SimFigures {
-                                    frames,
-                                    fps: st.fps(platform.clock_hz),
-                                    mac_efficiency: st.mac_efficiency(),
-                                }),
-                                None,
-                            ),
-                            Err(e) => (None, Some(e.to_string())),
-                        },
-                    };
-                    cells.push(SweepCell { design, sim, sim_error });
+                    combos.push((net, platform, granularity));
                 }
             }
         }
+        let cells = pool::parallel_map(self.jobs, &combos, |_, &(net, platform, granularity)| {
+            self.eval_cell(net, platform, granularity, frames_req)
+        });
         SweepReport { cells }
+    }
+
+    /// Evaluate one matrix cell: build the [`Design`], optionally
+    /// cycle-simulate it, and attach the clock-scaling curve. Pure —
+    /// shares nothing mutable, so the pool may run any number of these
+    /// concurrently.
+    fn eval_cell(
+        &self,
+        net: &Network,
+        platform: &Platform,
+        granularity: Granularity,
+        frames_req: Option<u64>,
+    ) -> SweepCell {
+        let mut builder = Design::builder(net).platform(platform.clone()).granularity(granularity);
+        if let Some(opts) = self.sim_options {
+            builder = builder.sim_options(opts);
+        }
+        let design = builder.build();
+        // A deadlocked simulation (possible only under non-default
+        // `sim_options`) is recorded as an explicit per-cell error,
+        // distinguishable from a model-only sweep, rather than poisoning
+        // the run.
+        let (sim, sim_error) = match frames_req {
+            None => (None, None),
+            Some(frames) => match design.simulate(frames) {
+                Ok(st) => (
+                    Some(SimFigures {
+                        frames,
+                        fps: st.fps(platform.clock_hz),
+                        mac_efficiency: st.mac_efficiency(),
+                    }),
+                    None,
+                ),
+                Err(e) => (None, Some(e.to_string())),
+            },
+        };
+        let clock_curve =
+            throughput::clock_curve(design.network(), design.allocs(), &self.clocks_hz);
+        SweepCell { design, sim, sim_error, clock_curve }
     }
 }
 
@@ -215,6 +338,9 @@ pub struct SweepCell {
     /// `None` both when the cell simulated fine and when the sweep was
     /// model-only — [`SweepCell::sim`] disambiguates.
     sim_error: Option<String>,
+    /// FPS-vs-clock points at the spec's [`SweepSpec::clocks_hz`] axis
+    /// (empty when no `--clocks` axis was requested).
+    clock_curve: Vec<ClockPoint>,
 }
 
 /// File-name-safe lowercase slug of a platform/network name.
@@ -236,6 +362,13 @@ impl SweepCell {
     /// The error that prevented a requested simulation (deadlock), if any.
     pub fn sim_error(&self) -> Option<&str> {
         self.sim_error.as_deref()
+    }
+
+    /// The cell's FPS-vs-clock scaling curve, one point per entry of the
+    /// spec's [`SweepSpec::clocks_hz`] axis (empty when the sweep ran
+    /// without a `--clocks` axis).
+    pub fn clock_curve(&self) -> &[ClockPoint] {
+        &self.clock_curve
     }
 
     pub fn network_name(&self) -> &str {
@@ -288,6 +421,23 @@ impl SweepCell {
         };
         put("boundary", Json::Num(d.ce_plan().boundary as f64));
         put("boundary_min_sram", Json::Num(d.memory().boundary_min_sram as f64));
+        // Only curve-bearing sweeps carry the key, so curve-less JSON
+        // stays byte-identical to pre-curve BENCH trajectories.
+        if !self.clock_curve.is_empty() {
+            let pts = self
+                .clock_curve
+                .iter()
+                .map(|pt| {
+                    let mut p = BTreeMap::new();
+                    p.insert("clock_hz".to_string(), Json::Num(pt.clock_hz));
+                    p.insert("fps".to_string(), Json::Num(pt.fps));
+                    p.insert("gops".to_string(), Json::Num(pt.gops));
+                    p.insert("peak_gops".to_string(), Json::Num(pt.peak_gops));
+                    Json::Obj(p)
+                })
+                .collect();
+            put("clock_curve", Json::Arr(pts));
+        }
         put("clock_hz", Json::Num(d.platform().clock_hz));
         put("dram_bytes", Json::Num(d.dram_bytes() as f64));
         put("dsp_utilization", Json::Num(self.dsp_utilization()));
@@ -337,14 +487,45 @@ pub struct SweepReport {
 impl SweepReport {
     /// The whole report as one stable sorted-key JSON line — the
     /// `repro sweep --json` output recorded in BENCH trajectories.
+    ///
+    /// Byte-identical for any [`SweepSpec::jobs`] value: parallelism
+    /// changes wall-clock time, never content or ordering.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use repro::sweep::SweepSpec;
+    ///
+    /// let spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None).unwrap();
+    /// let json = spec.run().to_json();
+    /// assert!(!json.contains('\n')); // one line, stable sorted keys
+    /// let parsed = repro::util::json::Json::parse(&json).unwrap();
+    /// assert_eq!(parsed.arr_field("cells").len(), 1);
+    /// ```
     pub fn to_json(&self) -> String {
+        self.to_json_with(None)
+    }
+
+    /// [`SweepReport::to_json`] with an optional embedded Pareto analysis
+    /// (the `repro sweep --pareto --json` output): when given, the
+    /// document gains a top-level `"pareto"` key holding
+    /// [`ParetoReport::to_json_value`].
+    pub fn to_json_with(&self, pareto: Option<&ParetoReport>) -> String {
         let mut m = BTreeMap::new();
         m.insert(
             "cells".to_string(),
             Json::Arr(self.cells.iter().map(SweepCell::to_json_value).collect()),
         );
+        if let Some(p) = pareto {
+            m.insert("pareto".to_string(), p.to_json_value());
+        }
         m.insert("version".to_string(), Json::Num(1.0));
         Json::Obj(m).to_string()
+    }
+
+    /// Convenience for [`pareto`] (the free function) on this report.
+    pub fn pareto(&self) -> ParetoReport {
+        pareto(self)
     }
 
     /// Persist every cell's full [`Design::to_json`] artifact into `dir`
@@ -372,6 +553,189 @@ impl SweepReport {
     }
 }
 
+/// The three objectives the Pareto analysis trades off for one cell:
+/// minimize on-chip SRAM, maximize predicted FPS, minimize off-chip DRAM
+/// traffic per frame — the axes Petrica et al. and the memory-wall line
+/// of work argue must sit on one frontier for streaming dataflow
+/// accelerators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// On-chip SRAM bytes (minimize) — [`Design::sram_bytes`].
+    pub sram_bytes: u64,
+    /// Predicted FPS at the cell platform's clock (maximize) — Eq 14.
+    pub fps: f64,
+    /// Off-chip DRAM bytes per frame (minimize) — Eq 13.
+    pub dram_bytes: u64,
+}
+
+impl Objectives {
+    /// The objective vector of one sweep cell.
+    pub fn of(cell: &SweepCell) -> Objectives {
+        Objectives {
+            sram_bytes: cell.design().sram_bytes(),
+            fps: cell.design().predicted().fps,
+            dram_bytes: cell.design().dram_bytes(),
+        }
+    }
+
+    /// Pareto dominance: `self` dominates `other` when it is no worse on
+    /// every objective (≤ SRAM, ≥ FPS, ≤ DRAM) and strictly better on at
+    /// least one. Exact ties on all three dominate in neither direction —
+    /// both cells land on the frontier.
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        let no_worse = self.sram_bytes <= other.sram_bytes
+            && self.fps >= other.fps
+            && self.dram_bytes <= other.dram_bytes;
+        let strictly_better = self.sram_bytes < other.sram_bytes
+            || self.fps > other.fps
+            || self.dram_bytes < other.dram_bytes;
+        no_worse && strictly_better
+    }
+}
+
+/// The non-dominated set of one network's cells, with dominated-by
+/// attribution for everything off the frontier.
+#[derive(Debug, Clone)]
+pub struct ParetoFront {
+    /// The network this frontier belongs to.
+    pub network: String,
+    /// Indices (into [`SweepReport::cells`]) of the non-dominated cells,
+    /// in cell order.
+    pub frontier: Vec<usize>,
+    /// `(dominated cell index, dominating frontier cell index)` for every
+    /// cell off the frontier: the attribution names the first frontier
+    /// cell (lowest index) that dominates it, in cell order.
+    pub dominated: Vec<(usize, usize)>,
+}
+
+/// Every per-network frontier of one sweep, in the report's network
+/// order.
+#[derive(Debug, Clone)]
+pub struct ParetoReport {
+    pub fronts: Vec<ParetoFront>,
+}
+
+impl ParetoReport {
+    /// Stable sorted-key JSON value of the analysis — the `"pareto"`
+    /// entry of `repro sweep --pareto --json`. Frontier cells and
+    /// dominated-by attributions reference cells by index into the same
+    /// document's `"cells"` array, with (platform, granularity) labels
+    /// repeated for readability.
+    pub fn to_json_value(&self) -> Json {
+        let fronts = self
+            .fronts
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "dominated".to_string(),
+                    Json::Arr(
+                        f.dominated
+                            .iter()
+                            .map(|&(cell, by)| {
+                                let mut d = BTreeMap::new();
+                                d.insert("by".to_string(), Json::Num(by as f64));
+                                d.insert("cell".to_string(), Json::Num(cell as f64));
+                                Json::Obj(d)
+                            })
+                            .collect(),
+                    ),
+                );
+                m.insert(
+                    "frontier".to_string(),
+                    Json::Arr(f.frontier.iter().map(|&i| Json::Num(i as f64)).collect()),
+                );
+                m.insert("network".to_string(), Json::Str(f.network.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("fronts".to_string(), Json::Arr(fronts));
+        Json::Obj(m)
+    }
+}
+
+/// Extract the per-network Pareto frontier of a sweep over {on-chip SRAM,
+/// predicted FPS, off-chip DRAM bytes/frame} (see [`Objectives`]).
+///
+/// Cells are grouped by network (frontiers across different networks
+/// would compare apples to oranges — a ShuffleNet cell always "beats" a
+/// MobileNet cell on work done per frame) and each group's non-dominated
+/// set is computed exactly, with dominated-by attribution pointing every
+/// off-frontier cell at the first frontier cell that dominates it. Output
+/// is deterministic: networks in first-appearance order, indices in cell
+/// order.
+///
+/// An empty report yields an empty analysis; a single-cell group is its
+/// own frontier; exact-tie cells (identical objective vectors) dominate
+/// in neither direction and both stay on the frontier.
+///
+/// # Examples
+///
+/// ```
+/// use repro::sweep::{pareto, SweepSpec};
+///
+/// let spec = SweepSpec::from_csv(
+///     Some("shufflenet_v2"),
+///     Some("zc706,zcu102,edge"),
+///     None,
+/// )
+/// .unwrap();
+/// let report = spec.run();
+/// let analysis = pareto(&report);
+/// assert_eq!(analysis.fronts.len(), 1); // one frontier per network
+/// let front = &analysis.fronts[0];
+/// // Every cell is either on the frontier or attributed to a dominator.
+/// assert_eq!(front.frontier.len() + front.dominated.len(), report.cells.len());
+/// ```
+pub fn pareto(report: &SweepReport) -> ParetoReport {
+    // Group cell indices by network, preserving first-appearance order.
+    let mut order: Vec<&str> = Vec::new();
+    let mut groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, cell) in report.cells.iter().enumerate() {
+        let name = cell.network_name();
+        let group = groups.entry(name).or_default();
+        if group.is_empty() {
+            order.push(name);
+        }
+        group.push(i);
+    }
+    let fronts = order
+        .into_iter()
+        .map(|name| {
+            let idxs = &groups[name];
+            let objs: Vec<Objectives> =
+                idxs.iter().map(|&i| Objectives::of(&report.cells[i])).collect();
+            // Frontier as (local, global) index pairs so attribution can
+            // compare objectives without re-searching `idxs` per probe.
+            let front_pairs: Vec<(usize, usize)> = idxs
+                .iter()
+                .enumerate()
+                .filter(|&(a, _)| !objs.iter().any(|ob| ob.dominates(&objs[a])))
+                .map(|(a, &cell_a)| (a, cell_a))
+                .collect();
+            let mut dominated = Vec::new();
+            for (a, &cell_a) in idxs.iter().enumerate() {
+                if front_pairs.iter().any(|&(b, _)| b == a) {
+                    continue;
+                }
+                // A dominated cell always has a *frontier* dominator:
+                // dominance is transitive and irreflexive, so a maximal
+                // element above it exists and is itself non-dominated.
+                let (_, by) = front_pairs
+                    .iter()
+                    .copied()
+                    .find(|&(b, _)| objs[b].dominates(&objs[a]))
+                    .expect("dominated cell must have a frontier dominator");
+                dominated.push((cell_a, by));
+            }
+            let frontier = front_pairs.into_iter().map(|(_, cell)| cell).collect();
+            ParetoFront { network: name.to_string(), frontier, dominated }
+        })
+        .collect();
+    ParetoReport { fronts }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -384,6 +748,31 @@ mod tests {
         assert_eq!(spec.granularities, vec![Granularity::Fgpm]);
         assert_eq!(spec.cell_count(), 12);
         assert!(spec.frames.is_none());
+        assert_eq!(spec.jobs, 1, "default is the serial path");
+        assert!(spec.clocks_hz.is_empty(), "no clock curves unless asked");
+    }
+
+    #[test]
+    fn clock_curve_cells_report_points_at_each_requested_clock() {
+        let mut spec =
+            SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), Some("fgpm")).unwrap();
+        spec.clocks_hz = SweepSpec::parse_clocks_csv("100,200").unwrap();
+        let report = spec.run();
+        let cell = &report.cells[0];
+        let curve = cell.clock_curve();
+        assert_eq!(curve.len(), 2);
+        assert_eq!(curve[0].clock_hz, 100.0e6);
+        assert_eq!(curve[1].clock_hz, 200.0e6);
+        // The 200 MHz curve point is the cell's own prediction (zc706
+        // runs at 200 MHz), and rates scale linearly along the curve.
+        assert_eq!(curve[1].fps, cell.design().predicted().fps);
+        assert!((curve[1].fps / curve[0].fps - 2.0).abs() < 1e-9);
+        // Curves appear in the JSON only when requested.
+        assert!(report.to_json().contains("\"clock_curve\""));
+        let plain = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), Some("fgpm"))
+            .unwrap()
+            .run();
+        assert!(!plain.to_json().contains("\"clock_curve\""));
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Self-contained utilities replacing unavailable third-party crates in
-//! this offline build: a JSON parser ([`json`]), a deterministic PRNG +
-//! property-test harness ([`prop`]), and a micro-bench timer ([`bench`]).
+//! this offline build: a JSON parser ([`json`]), a scoped-thread work
+//! pool with deterministic output ordering ([`pool`]), a deterministic
+//! PRNG + property-test harness ([`prop`]), and a micro-bench timer
+//! ([`bench`]).
 
 pub mod json;
+pub mod pool;
 
 /// Deterministic xorshift64* PRNG + tiny property-test harness (proptest
 /// is not vendored; invariant tests in `rust/tests/proptests.rs` use

@@ -1,0 +1,140 @@
+//! Scoped-thread work pool with deterministic output ordering.
+//!
+//! The offline build vendors no threading crates (rayon, crossbeam), so
+//! this is the crate's own fan-out primitive: [`parallel_map`] evaluates a
+//! pure function over a slice on `jobs` scoped threads. Scheduling is
+//! self-balancing — every idle worker *steals* the next unclaimed index
+//! from one shared atomic cursor, so a slow cell (a big network on a big
+//! platform) never serializes the rest of the matrix behind it — and the
+//! results are re-sorted by input index before returning, so the output
+//! `Vec` is **bit-identical to the serial path for any `jobs`**. That
+//! determinism is what lets `repro sweep --jobs N` keep byte-identical
+//! JSON and golden-baseline artifacts (asserted in
+//! `rust/tests/pareto.rs`).
+//!
+//! `std::thread::scope` means borrowed inputs need no `'static` bound and
+//! a panicking worker propagates on join instead of being silently lost.
+//!
+//! # Examples
+//!
+//! ```
+//! use repro::util::pool::parallel_map;
+//!
+//! let items = [1u64, 2, 3, 4, 5];
+//! let serial = parallel_map(1, &items, |_, &x| x * x);
+//! let parallel = parallel_map(4, &items, |_, &x| x * x);
+//! assert_eq!(serial, vec![1, 4, 9, 16, 25]);
+//! assert_eq!(serial, parallel); // deterministic order for any job count
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` on up to `jobs` scoped threads, returning results
+/// in input order (index `i` of the output is `f(i, &items[i])`).
+///
+/// * `jobs <= 1` (or a single-item/empty slice) runs entirely on the
+///   caller's thread — the serial path, no threads spawned.
+/// * `jobs` is clamped to `items.len()`; surplus workers are never
+///   spawned.
+/// * `f` must be pure with respect to ordering: it may run concurrently
+///   with itself and in any claim order.
+///
+/// Panics in `f` propagate to the caller once all workers have joined.
+pub fn parallel_map<T, U, F>(jobs: usize, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let jobs = jobs.clamp(1, items.len().max(1));
+    if jobs <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // One shared cursor of unclaimed work: an idle worker steals the next
+    // index with a single fetch_add, so load balances dynamically without
+    // per-worker queues (cells vastly outnumber lock transitions — each
+    // worker touches the results mutex exactly once, at exit).
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, U)>> = Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                results.lock().unwrap().extend(local);
+            });
+        }
+    });
+    // Claim order is racy; output order is not: sort back to input order.
+    let mut tagged = results.into_inner().unwrap();
+    tagged.sort_by_key(|&(i, _)| i);
+    debug_assert_eq!(tagged.len(), items.len());
+    tagged.into_iter().map(|(_, u)| u).collect()
+}
+
+/// A sensible default worker count for CLI `--jobs`-style flags: the
+/// machine's available parallelism, or 1 when it cannot be queried.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn output_order_matches_input_for_any_job_count() {
+        let items: Vec<usize> = (0..97).collect();
+        let expect: Vec<usize> = items.iter().map(|&x| x * 3 + 1).collect();
+        for jobs in [1, 2, 3, 8, 64, 200] {
+            let got = parallel_map(jobs, &items, |_, &x| x * 3 + 1);
+            assert_eq!(got, expect, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn indices_are_passed_through_and_each_item_runs_once() {
+        let items = vec!["a", "b", "c", "d"];
+        let calls = AtomicUsize::new(0);
+        let got = parallel_map(3, &items, |i, &s| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            format!("{i}:{s}")
+        });
+        assert_eq!(got, vec!["0:a", "1:b", "2:c", "3:d"]);
+        assert_eq!(calls.load(Ordering::Relaxed), items.len());
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs_take_the_serial_path() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(8, &empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(0, &[42u32], |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn uneven_work_still_returns_sorted_results() {
+        // Early items sleep so late (fast) items finish first; the output
+        // must still come back in input order.
+        let items: Vec<u64> = (0..16).collect();
+        let got = parallel_map(8, &items, |i, &x| {
+            if i < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            x
+        });
+        assert_eq!(got, items);
+    }
+
+    #[test]
+    fn default_jobs_is_at_least_one() {
+        assert!(default_jobs() >= 1);
+    }
+}

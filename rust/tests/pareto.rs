@@ -1,0 +1,200 @@
+//! Pareto-frontier extraction and parallel-sweep determinism coverage.
+//!
+//! * Edge cases the extractor must get right: empty matrix, single cell,
+//!   exact-tie cells (identical objective vectors dominate in neither
+//!   direction — both stay on the frontier).
+//! * The acceptance check: every reported frontier is verified against a
+//!   brute-force O(n²) dominance scan that re-implements the dominance
+//!   rule from the raw per-cell objectives, independently of
+//!   [`Objectives::dominates`].
+//! * Serial-vs-parallel determinism: `--jobs 1` and `--jobs 8` produce
+//!   byte-identical `to_json` documents and identical per-cell design
+//!   artifacts (the golden-baseline format).
+
+use repro::alloc::Granularity;
+use repro::nets;
+use repro::sweep::{pareto, Objectives, SweepReport, SweepSpec};
+use repro::util::json::Json;
+use repro::Platform;
+
+/// Brute-force dominance over raw objective triples (min SRAM, max FPS,
+/// min DRAM; strict in at least one) — deliberately re-derived here
+/// rather than calling the library's `Objectives::dominates`.
+fn dominates_bf(a: (u64, f64, u64), b: (u64, f64, u64)) -> bool {
+    (a.0 <= b.0 && a.1 >= b.1 && a.2 <= b.2) && (a.0 < b.0 || a.1 > b.1 || a.2 < b.2)
+}
+
+fn raw_objectives(report: &SweepReport) -> Vec<(String, (u64, f64, u64))> {
+    report
+        .cells
+        .iter()
+        .map(|c| {
+            let d = c.design();
+            (d.network().name.clone(), (d.sram_bytes(), d.predicted().fps, d.dram_bytes()))
+        })
+        .collect()
+}
+
+/// The acceptance criterion: for every network, a cell is reported on the
+/// frontier iff no same-network cell dominates it under the O(n²) scan,
+/// and every dominated-by attribution names a frontier cell that really
+/// dominates.
+fn assert_frontier_matches_brute_force(report: &SweepReport) {
+    let objs = raw_objectives(report);
+    let analysis = pareto(report);
+    let mut cells_seen = 0usize;
+    for front in &analysis.fronts {
+        for i in 0..report.cells.len() {
+            if objs[i].0 != front.network {
+                continue;
+            }
+            cells_seen += 1;
+            let dominated_bf = (0..report.cells.len())
+                .any(|j| objs[j].0 == front.network && dominates_bf(objs[j].1, objs[i].1));
+            assert_eq!(
+                front.frontier.contains(&i),
+                !dominated_bf,
+                "cell {i} ({}) frontier membership disagrees with brute force",
+                front.network
+            );
+        }
+        for &(cell, by) in &front.dominated {
+            assert!(front.frontier.contains(&by), "attribution {by} is not a frontier cell");
+            assert_eq!(objs[cell].0, front.network);
+            assert_eq!(objs[by].0, front.network, "attribution crosses networks");
+            assert!(
+                dominates_bf(objs[by].1, objs[cell].1),
+                "cell {by} does not actually dominate cell {cell}"
+            );
+        }
+        assert_eq!(
+            front.frontier.len() + front.dominated.len(),
+            report.cells.iter().filter(|c| c.network_name() == front.network).count(),
+            "{}: every cell is frontier xor dominated",
+            front.network
+        );
+    }
+    assert_eq!(cells_seen, report.cells.len(), "every cell belongs to exactly one front");
+}
+
+#[test]
+fn empty_matrix_yields_empty_analysis() {
+    let report = SweepReport { cells: Vec::new() };
+    let analysis = pareto(&report);
+    assert!(analysis.fronts.is_empty());
+    // And the JSON embedding is well-formed.
+    let j = Json::parse(&report.to_json_with(Some(&analysis))).unwrap();
+    assert_eq!(j.get("pareto").unwrap().arr_field("fronts").len(), 0);
+}
+
+#[test]
+fn single_cell_is_its_own_frontier() {
+    let spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), Some("fgpm")).unwrap();
+    let report = spec.run();
+    let analysis = pareto(&report);
+    assert_eq!(analysis.fronts.len(), 1);
+    assert_eq!(analysis.fronts[0].network, "shufflenet_v2");
+    assert_eq!(analysis.fronts[0].frontier, vec![0]);
+    assert!(analysis.fronts[0].dominated.is_empty());
+    assert_frontier_matches_brute_force(&report);
+}
+
+#[test]
+fn exact_tie_cells_both_stay_on_the_frontier() {
+    // Two custom platforms with identical budgets and clocks differ only
+    // in name, so their cells' objective vectors tie exactly: neither
+    // dominates and both must be reported as frontier.
+    let spec = SweepSpec {
+        nets: vec![nets::shufflenet_v2()],
+        platforms: vec![
+            Platform::custom("tie-a", 2 * 1024 * 1024, 855),
+            Platform::custom("tie-b", 2 * 1024 * 1024, 855),
+        ],
+        granularities: vec![Granularity::Fgpm],
+        ..SweepSpec::default()
+    };
+    let report = spec.run();
+    let o0 = Objectives::of(&report.cells[0]);
+    let o1 = Objectives::of(&report.cells[1]);
+    assert_eq!(o0, o1, "test premise: identical budgets tie exactly");
+    assert!(!o0.dominates(&o1) && !o1.dominates(&o0), "ties dominate in neither direction");
+    let analysis = pareto(&report);
+    assert_eq!(analysis.fronts[0].frontier, vec![0, 1]);
+    assert!(analysis.fronts[0].dominated.is_empty());
+    assert_frontier_matches_brute_force(&report);
+}
+
+#[test]
+fn full_matrix_frontier_survives_brute_force_dominance_check() {
+    // 2 networks x 3 platforms x 2 granularities: big enough that the
+    // frontier is non-trivial (zc706/zcu102/edge trade SRAM, FPS and
+    // DRAM against each other) and dominated cells exist (a factorized
+    // cell is typically beaten by its FGPM twin at equal memory).
+    let spec = SweepSpec::from_csv(
+        Some("mobilenet_v2,shufflenet_v2"),
+        Some("zc706,zcu102,edge"),
+        Some("fgpm,factorized"),
+    )
+    .unwrap();
+    let report = spec.run();
+    assert_eq!(report.cells.len(), 12);
+    assert_frontier_matches_brute_force(&report);
+    let analysis = pareto(&report);
+    assert_eq!(analysis.fronts.len(), 2, "one front per network");
+    assert!(
+        analysis.fronts.iter().any(|f| !f.dominated.is_empty()),
+        "expected at least one dominated cell in a mixed-granularity sweep"
+    );
+    // The JSON embedding round-trips with cells and attributions indexed
+    // into the same document.
+    let j = Json::parse(&report.to_json_with(Some(&analysis))).unwrap();
+    let fronts = j.get("pareto").unwrap().arr_field("fronts");
+    assert_eq!(fronts.len(), 2);
+    let n_cells = j.arr_field("cells").len();
+    for f in fronts {
+        for idx in f.arr_field("frontier") {
+            assert!(idx.as_usize().unwrap() < n_cells);
+        }
+        for d in f.arr_field("dominated") {
+            assert!(d.usize_field("cell") < n_cells);
+            assert!(d.usize_field("by") < n_cells);
+        }
+    }
+    // Plain to_json stays pareto-free (BENCH trajectory compatibility).
+    assert!(!report.to_json().contains("\"pareto\""));
+}
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial_for_any_job_count() {
+    // The acceptance criterion for `--jobs N`: identical JSON documents
+    // and identical per-cell golden-baseline artifacts, with the clock
+    // and pareto analyses stacked on to stress every serialized surface.
+    let mut serial = SweepSpec::from_csv(None, None, Some("fgpm,factorized")).unwrap();
+    serial.clocks_hz = SweepSpec::parse_clocks_csv("150,200,300").unwrap();
+    let mut parallel = serial.clone();
+    let serial_report = serial.run();
+    assert_eq!(serial.jobs, 1);
+    for jobs in [2, 8] {
+        parallel.jobs = jobs;
+        let par_report = parallel.run();
+        assert_eq!(
+            serial_report.to_json(),
+            par_report.to_json(),
+            "jobs={jobs}: sweep JSON must be byte-identical to serial"
+        );
+        assert_eq!(
+            serial_report.to_json_with(Some(&pareto(&serial_report))),
+            par_report.to_json_with(Some(&pareto(&par_report))),
+            "jobs={jobs}: pareto-bearing JSON must be byte-identical to serial"
+        );
+        for (a, b) in serial_report.cells.iter().zip(&par_report.cells) {
+            assert_eq!(a.artifact_file_name(), b.artifact_file_name(), "jobs={jobs}: cell order");
+            assert_eq!(
+                a.design().to_json(),
+                b.design().to_json(),
+                "jobs={jobs}: golden-baseline artifact bytes must match ({})",
+                a.artifact_file_name()
+            );
+        }
+    }
+}

@@ -150,6 +150,30 @@ fn save_dir_round_trips_every_design() {
 }
 
 #[test]
+fn clocks_axis_parses_like_the_cli_and_flows_into_cells() {
+    // The `--clocks` surface: MHz CSV -> Hz points, fail-loudly on junk.
+    assert_eq!(SweepSpec::parse_clocks_csv("150, 300").unwrap(), vec![150.0e6, 300.0e6]);
+    for bad in ["", " , ", "abc", "-100", "0", "inf", "200,200"] {
+        assert!(SweepSpec::parse_clocks_csv(bad).is_err(), "{bad:?} should be rejected");
+    }
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zcu102"), None).unwrap();
+    spec.clocks_hz = SweepSpec::parse_clocks_csv("150,300").unwrap();
+    spec.jobs = 2;
+    let report = spec.run();
+    let curve = report.cells[0].clock_curve();
+    assert_eq!(curve.len(), 2);
+    // zcu102's native clock is the second point, so its curve FPS there
+    // equals the cell's own prediction.
+    assert_eq!(curve[1].fps, report.cells[0].design().predicted().fps);
+    // The JSON cells carry the curve under a stable key.
+    let j = Json::parse(&report.to_json()).unwrap();
+    let pts = j.arr_field("cells")[0].arr_field("clock_curve");
+    assert_eq!(pts.len(), 2);
+    assert_eq!(pts[0].usize_field("clock_hz"), 150_000_000);
+    assert!(pts[0].get("peak_gops").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
 fn simulated_sweep_cells_carry_actual_figures() {
     let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None).unwrap();
     spec.frames = Some(2);
