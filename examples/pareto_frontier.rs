@@ -15,11 +15,17 @@
 //!   along a `--clocks`-style MHz axis (FPS/GOPS scale linearly; the
 //!   allocation, bottleneck CE and MAC efficiency do not move).
 //!
+//! * `sweep::pareto_clocks` — the same clock axis promoted to a fourth
+//!   Pareto dimension: every (cell, clock point) pair competes over
+//!   {SRAM ↓, FPS ↑, DRAM ↓, clock ↓}, so "run the mid-size part at
+//!   150 MHz" can beat "run the big part at 300 MHz" on everything but
+//!   raw FPS and still sit on the frontier.
+//!
 //! The CLI twin of this example is:
 //!
 //! ```sh
 //! repro sweep --granularities fgpm,factorized \
-//!             --jobs 4 --clocks 100,150,200,250,300 --pareto
+//!             --jobs 4 --clocks 100,150,200,250,300 --pareto --pareto-clocks
 //! ```
 
 use repro::alloc::Granularity;
@@ -50,8 +56,23 @@ fn main() {
 
     println!("{}", report::clock_curves(&matrix));
 
-    // The machine-readable twin: `repro sweep --pareto --json` embeds the
-    // same analysis under a top-level "pareto" key.
-    let json = matrix.to_json_with(Some(&analysis));
-    println!("JSON document with embedded pareto analysis: {} bytes", json.len());
+    // Clock frequency as a fourth Pareto axis: every (cell, clock point)
+    // candidate competes, so the frontier names the slowest clock that
+    // still earns its place — not just the fastest platform.
+    let clock_analysis = sweep::pareto_clocks(&matrix);
+    println!("{}", report::pareto_clocks_table(&matrix, &clock_analysis));
+    for front in &clock_analysis.fronts {
+        println!(
+            "{}: {} of {} (cell, clock) candidates on the 4-D frontier",
+            front.network,
+            front.frontier.len(),
+            front.frontier.len() + front.dominated.len(),
+        );
+    }
+
+    // The machine-readable twin: `repro sweep --pareto --pareto-clocks
+    // --json` embeds both analyses under top-level "pareto" /
+    // "pareto_clocks" keys.
+    let json = matrix.to_json_full(Some(&analysis), Some(&clock_analysis));
+    println!("JSON document with embedded pareto analyses: {} bytes", json.len());
 }

@@ -7,6 +7,8 @@
 //! * the individual Alg 1 / Alg 2 / FGPM-space stages;
 //! * the design-space sweep engine, serial vs parallel (`--jobs`), with
 //!   a byte-identical-output assertion on the parallel path;
+//! * the memoized sweep cache, cold fill vs warm reload over the full
+//!   12-cell catalog matrix, with hit-rate and byte-identity assertions;
 //! * streaming-coordinator overhead vs the busiest worker (only when
 //!   artifacts exist).
 
@@ -92,6 +94,40 @@ fn main() {
         serial.median_ms / par.median_ms,
         jobs
     );
+
+    // The memoized cache over the same 12-cell matrix: one cold fill,
+    // then timed warm reloads (the cost every repeat BENCH sweep pays).
+    let cache_dir = std::env::temp_dir().join("repro_sim_hotpath_sweep_cache");
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let cached_spec = repro::sweep::SweepSpec {
+        cache_dir: Some(cache_dir.clone()),
+        ..repro::sweep::SweepSpec::default()
+    };
+    let cold_report = {
+        let mut report = None;
+        time("sweep_catalog_12cells_cache_cold", 20000.0, || {
+            let _ = std::fs::remove_dir_all(&cache_dir);
+            report = Some(cached_spec.run());
+        });
+        report.expect("timed at least once")
+    };
+    let mut warm_report = None;
+    let warm = time("sweep_catalog_12cells_cache_warm", 5000.0, || {
+        warm_report = Some(cached_spec.run());
+    });
+    let warm_report = warm_report.expect("timed at least once");
+    let stats = warm_report.cache.expect("cached run reports stats");
+    assert_eq!((stats.hits, stats.misses), (12, 0), "warm run must be all hits");
+    assert_eq!(
+        cold_report.to_json(),
+        warm_report.to_json(),
+        "warm sweep must be byte-identical to cold"
+    );
+    println!(
+        "  -> warm-cache speedup {:.2}x over serial cold (100% hit rate, zero re-derivation)",
+        serial.median_ms / warm.median_ms
+    );
+    let _ = std::fs::remove_dir_all(&cache_dir);
 
     // Coordinator overhead (needs `make artifacts`).
     let dir = runtime::artifacts_dir();

@@ -50,6 +50,7 @@ pub fn boundary_sweep(net: &Network, cfg: &MemoryModelCfg) -> Vec<BoundaryPoint>
 /// Algorithm 1. `sram_budget` is the available on-chip memory in bytes
 /// (e.g. [`crate::zc706::SRAM_BYTES`]).
 pub fn balanced_memory_allocation(net: &Network, sram_budget: u64, cfg: &MemoryModelCfg) -> MemoryPlan {
+    crate::alloc::derivations::ALG1_RUNS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let l_total = net.layers.len();
 
     // First iteration: find the minimum-SRAM boundary by incrementally

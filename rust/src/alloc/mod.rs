@@ -15,6 +15,38 @@ pub mod fgpm;
 pub mod memory_alloc;
 pub mod parallelism;
 
+/// Process-wide Algorithm 1 / Algorithm 2 run counters.
+///
+/// Every call to [`balanced_memory_allocation`] (Alg 1) and
+/// [`parallelism::dynamic_parallelism_tuning_with`] (Alg 2, which both
+/// tuning entry points funnel through) ticks its counter. The counters
+/// exist so the sweep cache's central claim — a warm-cache sweep performs
+/// **zero** re-derivations — is *testable* rather than asserted: the
+/// differential suite snapshots them around a warm [`crate::sweep`] run
+/// and requires the deltas to be zero (`rust/tests/differential.rs`).
+///
+/// Monotonic, relaxed, never reset: callers compare before/after deltas,
+/// so concurrent tests in other threads of the same process must
+/// serialize around the measured region themselves.
+pub mod derivations {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub(crate) static ALG1_RUNS: AtomicU64 = AtomicU64::new(0);
+    pub(crate) static ALG2_RUNS: AtomicU64 = AtomicU64::new(0);
+
+    /// Times Algorithm 1 (balanced memory allocation) has run in this
+    /// process.
+    pub fn alg1_runs() -> u64 {
+        ALG1_RUNS.load(Ordering::Relaxed)
+    }
+
+    /// Times Algorithm 2 (dynamic parallelism tuning) has run in this
+    /// process.
+    pub fn alg2_runs() -> u64 {
+        ALG2_RUNS.load(Ordering::Relaxed)
+    }
+}
+
 pub use fgpm::{factor_space, fgpm_space};
 pub use memory_alloc::{balanced_memory_allocation, boundary_sweep, MemoryPlan};
 pub use parallelism::{config_ladder, dynamic_parallelism_tuning, tune_and_evaluate, Granularity, ParallelismPlan};

@@ -143,6 +143,7 @@ pub fn dynamic_parallelism_tuning_with(
     g: Granularity,
     budget_kind: BudgetKind,
 ) -> ParallelismPlan {
+    crate::alloc::derivations::ALG2_RUNS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let ladders: Vec<Vec<LayerAlloc>> = net
         .layers
         .iter()

@@ -42,12 +42,16 @@
 //!   plus the named platform catalog.
 //! * [`sweep`] — the design-space sweep subsystem: the full pipeline over
 //!   a {networks} x {platforms} x {granularities} matrix, evaluated in
-//!   parallel on the [`util::pool`] worker pool with deterministic
-//!   (byte-identical to serial) output, plus the per-network
-//!   {SRAM, FPS, DRAM} Pareto-frontier analysis ([`sweep::pareto`]) and
+//!   parallel on the [`util::pool`] work-stealing pool with deterministic
+//!   (byte-identical to serial) output and memoized across invocations by
+//!   the content-keyed [`sweep::cache`] layer (zero Alg 1/Alg 2
+//!   re-derivation on a warm cache), plus the per-network
+//!   {SRAM, FPS, DRAM} Pareto-frontier analysis ([`sweep::pareto`]), the
+//!   4-D frequency-axis frontier ([`sweep::pareto_clocks`]), and
 //!   FPS-vs-clock scaling curves; rendered as text tables
 //!   ([`report::sweep_matrix`], [`report::pareto_table`],
-//!   [`report::clock_curves`]) or stable sorted-key JSON.
+//!   [`report::pareto_clocks_table`], [`report::clock_curves`]) or stable
+//!   sorted-key JSON.
 //! * [`sim`] — the cycle-level streaming simulator (hybrid CEs, line
 //!   buffers with both padding schemes, order converter, SCB joins).
 //! * [`runtime`] — PJRT wrapper loading AOT-compiled HLO artifacts.
@@ -68,7 +72,7 @@ pub mod sweep;
 pub mod util;
 
 pub use design::{Design, Platform};
-pub use sweep::{ParetoReport, SweepReport, SweepSpec};
+pub use sweep::{CacheStats, ClockParetoReport, ParetoReport, SweepReport, SweepSpec};
 
 /// Clock frequency of the evaluated design (the paper implements at 200 MHz).
 pub const CLOCK_HZ: f64 = 200.0e6;

@@ -16,10 +16,13 @@
 //!   zoo x whole catalog x FGPM). `--json` emits the stable sorted-key
 //!   document, `--save-dir DIR` persists one `Design` artifact per cell,
 //!   `--frames N` also cycle-simulates each cell, `--jobs N` evaluates
-//!   cells on N worker threads (byte-identical output for any N),
-//!   `--clocks MHZ,..` adds an FPS-vs-clock curve per cell, and
-//!   `--pareto` layers the per-network {SRAM, FPS, DRAM} Pareto-frontier
-//!   analysis on top.
+//!   cells on N work-stealing workers (byte-identical output for any N),
+//!   `--cache` / `--cache-dir DIR` memoize cells across invocations in a
+//!   content-keyed cache (hit/miss stats on stderr, zero Alg 1/Alg 2
+//!   re-derivation on hits), `--clocks MHZ,..` adds an FPS-vs-clock curve
+//!   per cell, `--pareto` layers the per-network {SRAM, FPS, DRAM}
+//!   Pareto-frontier analysis on top, and `--pareto-clocks` (with
+//!   `--clocks`) promotes frequency to a fourth Pareto axis.
 //! * `infer <short> [--frames N]` — sequential PJRT inference vs golden.
 //! * `stream <short> [--frames N] [--workers N]` — the threaded streaming
 //!   coordinator (the end-to-end system path).
@@ -31,7 +34,7 @@
 use std::process::ExitCode;
 
 use repro::design::{Design, Platform};
-use repro::sweep::SweepSpec;
+use repro::sweep::{self, SweepSpec};
 use repro::{alloc, coordinator, nets, report, runtime, sim};
 
 fn usage() -> ExitCode {
@@ -43,7 +46,8 @@ fn usage() -> ExitCode {
          \x20 simulate <mbv1|mbv2|snv1|snv2> [--platform zc706] [--sram-mb F] [--dsp N] [--factorized]\n\
          \x20          [--frames N] [--baseline] [--save FILE] [--load FILE]\n\
          \x20 sweep  [--nets a,b,..] [--platforms zc706,zcu102,edge] [--granularities fgpm,factorized]\n\
-         \x20          [--frames N] [--jobs N] [--clocks MHZ,MHZ,..] [--pareto] [--json] [--save-dir DIR]\n\
+         \x20          [--frames N] [--jobs N] [--clocks MHZ,MHZ,..] [--pareto] [--pareto-clocks]\n\
+         \x20          [--cache | --cache-dir DIR] [--json] [--save-dir DIR]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
     );
@@ -111,7 +115,7 @@ fn platform_from_args(args: &[String]) -> Result<Platform, String> {
 }
 
 /// Flags that consume the following argument as their value.
-const VALUE_FLAGS: [&str; 13] = [
+const VALUE_FLAGS: [&str; 14] = [
     "--platform",
     "--sram-mb",
     "--dsp",
@@ -125,6 +129,7 @@ const VALUE_FLAGS: [&str; 13] = [
     "--save-dir",
     "--jobs",
     "--clocks",
+    "--cache-dir",
 ];
 
 /// First positional argument after the subcommand, skipping flags and the
@@ -356,8 +361,9 @@ fn main() -> ExitCode {
                     "--jobs",
                     "--clocks",
                     "--save-dir",
+                    "--cache-dir",
                 ],
-                &["--json", "--pareto"],
+                &["--json", "--pareto", "--pareto-clocks", "--cache"],
             ) {
                 return fail(&e);
             }
@@ -387,27 +393,50 @@ fn main() -> ExitCode {
                 if let Some(csv) = flag_val(&args, "--clocks")? {
                     spec.clocks_hz = SweepSpec::parse_clocks_csv(&csv)?;
                 }
+                sweep::validate_pareto_clocks(
+                    args.iter().any(|a| a == "--pareto-clocks"),
+                    &spec.clocks_hz,
+                )?;
+                spec.cache_dir = SweepSpec::resolve_cache_flags(
+                    args.iter().any(|a| a == "--cache"),
+                    flag_val(&args, "--cache-dir")?.as_deref(),
+                )?;
                 Ok((spec, flag_val(&args, "--save-dir")?))
             })();
             let (spec, save_dir) = match parsed {
                 Ok(p) => p,
                 Err(e) => return fail(&e),
             };
-            // Fail on an unwritable save directory now, not after the
-            // matrix has been computed: create it and probe with a
-            // scratch file (create_dir_all alone succeeds on an
-            // existing read-only directory).
-            if let Some(dir) = &save_dir {
-                if let Err(e) = std::fs::create_dir_all(dir) {
-                    return fail(&format!("--save-dir {dir}: {e}"));
-                }
-                let probe = std::path::Path::new(dir).join(".sweep-write-probe");
-                if let Err(e) = std::fs::write(&probe, b"") {
-                    return fail(&format!("--save-dir {dir}: not writable: {e}"));
-                }
+            // Fail on an unwritable save or cache directory now, not
+            // after the matrix has been computed: create it and probe
+            // with a scratch file (create_dir_all alone succeeds on an
+            // existing read-only directory). The cache layer itself is
+            // best-effort, so without this probe a bad --cache-dir would
+            // silently run cold forever.
+            let probe_dir = |flag: &str, dir: &std::path::Path| -> Result<(), String> {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{flag} {}: {e}", dir.display()))?;
+                let probe = dir.join(".sweep-write-probe");
+                std::fs::write(&probe, b"")
+                    .map_err(|e| format!("{flag} {}: not writable: {e}", dir.display()))?;
                 let _ = std::fs::remove_file(&probe);
+                Ok(())
+            };
+            if let Some(dir) = &save_dir {
+                if let Err(e) = probe_dir("--save-dir", std::path::Path::new(dir)) {
+                    return fail(&e);
+                }
+            }
+            if let Some(dir) = &spec.cache_dir {
+                if let Err(e) = probe_dir("--cache/--cache-dir", dir) {
+                    return fail(&e);
+                }
             }
             let sweep_report = spec.run();
+            if let (Some(stats), Some(dir)) = (&sweep_report.cache, &spec.cache_dir) {
+                // Stderr, not the JSON document: warm and cold documents
+                // must stay byte-identical (CI greps this line instead).
+                eprintln!("{}", stats.summary(dir));
+            }
             if let Some(dir) = save_dir {
                 match sweep_report.save_designs(std::path::Path::new(&dir)) {
                     Ok(paths) => eprintln!("saved {} design artifacts to {dir}", paths.len()),
@@ -415,8 +444,12 @@ fn main() -> ExitCode {
                 }
             }
             let pareto = args.iter().any(|a| a == "--pareto").then(|| sweep_report.pareto());
+            let pareto_clocks = args
+                .iter()
+                .any(|a| a == "--pareto-clocks")
+                .then(|| sweep_report.pareto_clocks());
             if args.iter().any(|a| a == "--json") {
-                println!("{}", sweep_report.to_json_with(pareto.as_ref()));
+                println!("{}", sweep_report.to_json_full(pareto.as_ref(), pareto_clocks.as_ref()));
             } else {
                 println!("{}", report::sweep_matrix(&sweep_report));
                 if !spec.clocks_hz.is_empty() {
@@ -424,6 +457,9 @@ fn main() -> ExitCode {
                 }
                 if let Some(analysis) = &pareto {
                     println!("{}", report::pareto_table(&sweep_report, analysis));
+                }
+                if let Some(analysis) = &pareto_clocks {
+                    println!("{}", report::pareto_clocks_table(&sweep_report, analysis));
                 }
             }
         }

@@ -198,18 +198,17 @@ pub struct ClockPoint {
 ///        - curve[1].gops / curve[1].peak_gops).abs() < 1e-12);
 /// ```
 pub fn clock_curve(net: &Network, allocs: &[LayerAlloc], clocks_hz: &[f64]) -> Vec<ClockPoint> {
-    clocks_hz
-        .iter()
-        .map(|&hz| {
-            let p = evaluate_at(net, allocs, hz);
-            ClockPoint {
-                clock_hz: hz,
-                fps: p.fps,
-                gops: p.gops,
-                peak_gops: peak_gops_at(p.total_pes, hz),
-            }
-        })
-        .collect()
+    clocks_hz.iter().map(|&hz| clock_point(net, allocs, hz)).collect()
+}
+
+/// One [`clock_curve`] point at a single candidate clock — the
+/// convenience the clock-axis Pareto analysis ([`crate::sweep::pareto_clocks`])
+/// uses to give a curve-less cell its native-clock candidate. At the
+/// platform's own clock this reproduces the cell's
+/// [`Performance`] prediction exactly (`evaluate_at` is deterministic).
+pub fn clock_point(net: &Network, allocs: &[LayerAlloc], clock_hz: f64) -> ClockPoint {
+    let p = evaluate_at(net, allocs, clock_hz);
+    ClockPoint { clock_hz, fps: p.fps, gops: p.gops, peak_gops: peak_gops_at(p.total_pes, clock_hz) }
 }
 
 pub(crate) fn div_ceil(a: u64, b: u64) -> u64 {
@@ -302,6 +301,8 @@ mod tests {
             assert!(pt.gops <= pt.peak_gops * 1.01);
         }
         assert!(clock_curve(&net, &allocs, &[]).is_empty());
+        // The single-point convenience is exactly one curve entry.
+        assert_eq!(clock_point(&net, &allocs, 200.0e6), curve[1]);
     }
 
     #[test]

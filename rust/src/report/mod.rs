@@ -758,8 +758,9 @@ pub fn sweep_matrix(report: &crate::sweep::SweepReport) -> String {
 /// Aligned text rendering of a sweep's Pareto analysis
 /// ([`crate::sweep::pareto`]): per network, the non-dominated cells over
 /// {on-chip SRAM, predicted FPS, off-chip DRAM bytes/frame} followed by
-/// every dominated cell with the frontier cell that dominates it. The
-/// text twin of the `"pareto"` key in `repro sweep --pareto --json`.
+/// every dominated cell with the frontier cell that dominates it, each
+/// with the platform clock the FPS column was predicted at. The text twin
+/// of the `"pareto"` key in `repro sweep --pareto --json`.
 pub fn pareto_table(
     report: &crate::sweep::SweepReport,
     analysis: &crate::sweep::ParetoReport,
@@ -774,36 +775,93 @@ pub fn pareto_table(
         let _ = writeln!(s, "{}:", front.network);
         let _ = writeln!(
             s,
-            "  {:20} {:>9} {:>9} {:>9}  {}",
-            "cell", "SRAM MB", "FPS", "DRAM MB", "status"
+            "  {:20} {:>6} {:>9} {:>9} {:>9}  {}",
+            "cell", "MHz", "SRAM MB", "FPS", "DRAM MB", "status"
         );
-        for &i in &front.frontier {
+        let mut row = |i: usize, status: String| {
             let d = report.cells[i].design();
             let _ = writeln!(
                 s,
-                "  {:20} {:>9.2} {:>9.1} {:>9.2}  frontier",
+                "  {:20} {:>6.0} {:>9.2} {:>9.1} {:>9.2}  {status}",
                 label(i),
+                d.platform().clock_hz / 1e6,
                 d.sram_bytes() as f64 / MB,
                 d.predicted().fps,
                 d.dram_bytes() as f64 / MB,
             );
+        };
+        for &i in &front.frontier {
+            row(i, "frontier".to_string());
         }
         for &(i, by) in &front.dominated {
-            let d = report.cells[i].design();
-            let _ = writeln!(
-                s,
-                "  {:20} {:>9.2} {:>9.1} {:>9.2}  dominated by {}",
-                label(i),
-                d.sram_bytes() as f64 / MB,
-                d.predicted().fps,
-                d.dram_bytes() as f64 / MB,
-                label(by),
-            );
+            row(i, format!("dominated by {}", label(by)));
         }
     }
     let _ = writeln!(
         s,
-        "(frontier = no other cell of the same network is ≤ SRAM, ≥ FPS and ≤ DRAM with one strict)"
+        "(frontier = no other cell of the same network is ≤ SRAM, ≥ FPS and ≤ DRAM with one strict;"
+    );
+    let _ = writeln!(
+        s,
+        " MHz is each platform's own clock — pass --pareto-clocks to trade frequency as an axis)"
+    );
+    s
+}
+
+/// Aligned text rendering of the 4-D clock-axis Pareto analysis
+/// ([`crate::sweep::pareto_clocks`]): per network, every (cell, clock)
+/// candidate over {SRAM, FPS, DRAM/frame, clock}, frontier first, then
+/// each dominated candidate with its dominating candidate. The text twin
+/// of the `"pareto_clocks"` key in `repro sweep --pareto-clocks --json`.
+pub fn pareto_clocks_table(
+    report: &crate::sweep::SweepReport,
+    analysis: &crate::sweep::ClockParetoReport,
+) -> String {
+    let mut s = String::new();
+    header(&mut s, "4-D Pareto frontier: {SRAM, predicted FPS, DRAM/frame, clock} per network");
+    let label = |c: usize| {
+        let cand = &analysis.candidates[c];
+        let d = report.cells[cand.cell].design();
+        format!(
+            "{}/{}@{:.0}",
+            d.platform().name,
+            crate::design::granularity_name(d.granularity()),
+            cand.clock_hz / 1e6
+        )
+    };
+    for front in &analysis.fronts {
+        let _ = writeln!(s, "{}:", front.network);
+        let _ = writeln!(
+            s,
+            "  {:24} {:>6} {:>9} {:>9} {:>9}  {}",
+            "candidate", "MHz", "SRAM MB", "FPS", "DRAM MB", "status"
+        );
+        let mut row = |c: usize, status: String| {
+            let o = &analysis.candidates[c].objectives;
+            let _ = writeln!(
+                s,
+                "  {:24} {:>6.0} {:>9.2} {:>9.1} {:>9.2}  {status}",
+                label(c),
+                analysis.candidates[c].clock_hz / 1e6,
+                o.sram_bytes as f64 / MB,
+                o.fps,
+                o.dram_bytes as f64 / MB,
+            );
+        };
+        for &c in &front.frontier {
+            row(c, "frontier".to_string());
+        }
+        for &(c, by) in &front.dominated {
+            row(c, format!("dominated by {}", label(by)));
+        }
+    }
+    let _ = writeln!(
+        s,
+        "(candidates = cells x their --clocks curve points; lower clock is better — a slower"
+    );
+    let _ = writeln!(
+        s,
+        " candidate stays on the frontier unless something matches its FPS at ≤ SRAM/DRAM/MHz)"
     );
     s
 }
@@ -945,6 +1003,26 @@ mod tests {
             .unwrap()
             .run();
         assert!(clock_curves(&plain).contains("--clocks"), "{}", clock_curves(&plain));
+    }
+
+    #[test]
+    fn pareto_clocks_table_renders_every_candidate() {
+        let mut spec = crate::sweep::SweepSpec::from_csv(
+            Some("shufflenet_v2"),
+            Some("zc706,edge"),
+            None,
+        )
+        .unwrap();
+        spec.clocks_hz = crate::sweep::SweepSpec::parse_clocks_csv("150,200").unwrap();
+        let report = spec.run();
+        let analysis = crate::sweep::pareto_clocks(&report);
+        let t = pareto_clocks_table(&report, &analysis);
+        assert!(t.contains("shufflenet_v2:"), "{t}");
+        assert!(t.contains("frontier"), "{t}");
+        // 2 cells x 2 clock points: every candidate label appears.
+        for label in ["zc706/fgpm@150", "zc706/fgpm@200", "edge/fgpm@150", "edge/fgpm@200"] {
+            assert!(t.contains(label), "missing {label} in:\n{t}");
+        }
     }
 
     #[test]

@@ -25,6 +25,17 @@
 //! golden-baseline artifacts to the serial path for any `N` (asserted in
 //! `rust/tests/pareto.rs`).
 //!
+//! # Memoization
+//!
+//! [`SweepSpec::cache_dir`] points the run at a content-keyed per-cell
+//! evaluation cache ([`cache`], the CLI's `--cache` / `--cache-dir`):
+//! every cell already derived by *any* prior sweep — an example, a test,
+//! a CI step — is reloaded from disk through the trusted
+//! [`crate::design::Design::from_json_unchecked`] path with **zero**
+//! Algorithm 1 / Algorithm 2 re-derivation, and hit/miss counts surface
+//! as [`SweepReport::cache`]. Warm output is byte-identical to cold
+//! (asserted in `rust/tests/differential.rs`).
+//!
 //! # Analyses
 //!
 //! * [`pareto`] — the per-network non-dominated set over {on-chip SRAM,
@@ -36,6 +47,12 @@
 //!   which reuses [`crate::model::throughput::peak_gops_at`]) so one
 //!   `repro sweep --clocks 100,200,300` call emits frequency-scaling
 //!   curves per platform.
+//! * [`pareto_clocks`] — clock frequency promoted to a **fourth Pareto
+//!   axis** (`repro sweep --clocks .. --pareto-clocks`): every (cell,
+//!   curve point) pair becomes a candidate and the non-dominated set is
+//!   taken over {SRAM ↓, FPS ↑, DRAM ↓, clock ↓}, so a slower clock that
+//!   still meets a throughput target shows up on the frontier instead of
+//!   being flattened into the per-platform side curves.
 //!
 //! # Stable renderings
 //!
@@ -68,8 +85,11 @@
 //! std::fs::write("sweep.json", report.to_json()).unwrap();
 //! ```
 
+pub mod cache;
+
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::alloc::Granularity;
 use crate::design::{granularity_name, parse_granularity, Design, Platform};
@@ -78,6 +98,8 @@ use crate::nets::{self, Network};
 use crate::sim::SimOptions;
 use crate::util::json::Json;
 use crate::util::pool;
+
+pub use cache::{CacheStats, CellCache};
 
 /// The matrix a sweep runs over, plus per-cell simulation depth.
 #[derive(Debug, Clone)]
@@ -107,6 +129,12 @@ pub struct SweepSpec {
     /// (and no `clock_curve` key in the JSON, keeping pre-curve
     /// trajectories diffable).
     pub clocks_hz: Vec<f64>,
+    /// Memoize cells in the content-keyed [`cache::CellCache`] at this
+    /// directory (the CLI's `--cache` / `--cache-dir`). `None` evaluates
+    /// every cell cold. The cache never changes output bytes — only
+    /// whether a cell is derived or reloaded — and the run's hit/miss
+    /// stats come back as [`SweepReport::cache`].
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for SweepSpec {
@@ -121,6 +149,7 @@ impl Default for SweepSpec {
             sim_options: None,
             jobs: 1,
             clocks_hz: Vec::new(),
+            cache_dir: None,
         }
     }
 }
@@ -251,6 +280,40 @@ impl SweepSpec {
         Ok(hz)
     }
 
+    /// Resolve the CLI's cache flag pair into [`SweepSpec::cache_dir`]:
+    /// `--cache` enables the cache at the default directory
+    /// (`.sweep-cache`), `--cache-dir DIR` enables it at `DIR`, and
+    /// passing both is rejected — silently preferring one would hide
+    /// which directory the entries actually landed in.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use repro::sweep::SweepSpec;
+    ///
+    /// assert_eq!(SweepSpec::resolve_cache_flags(false, None).unwrap(), None);
+    /// assert_eq!(
+    ///     SweepSpec::resolve_cache_flags(true, None).unwrap().unwrap(),
+    ///     std::path::PathBuf::from(".sweep-cache")
+    /// );
+    /// let err = SweepSpec::resolve_cache_flags(true, Some("warm")).unwrap_err();
+    /// assert!(err.contains("conflicts with --cache-dir"));
+    /// ```
+    pub fn resolve_cache_flags(
+        cache: bool,
+        cache_dir: Option<&str>,
+    ) -> Result<Option<PathBuf>, String> {
+        match (cache, cache_dir) {
+            (true, Some(dir)) => Err(format!(
+                "--cache: conflicts with --cache-dir {dir:?} (--cache-dir already enables the \
+                 cache there; pass exactly one of the two)"
+            )),
+            (true, None) => Ok(Some(PathBuf::from(".sweep-cache"))),
+            (false, Some(dir)) => Ok(Some(PathBuf::from(dir))),
+            (false, None) => Ok(None),
+        }
+    }
+
     /// Number of cells the matrix will produce.
     pub fn cell_count(&self) -> usize {
         self.nets.len() * self.platforms.len() * self.granularities.len()
@@ -260,7 +323,9 @@ impl SweepSpec {
     /// [`SweepSpec::jobs`] worker threads (serial when `jobs <= 1`), but
     /// the report's cell order is always the deterministic nets-outer /
     /// platforms / granularities-inner order — the output is
-    /// byte-identical for any job count.
+    /// byte-identical for any job count, and — when
+    /// [`SweepSpec::cache_dir`] is set — for any mix of cache hits and
+    /// cold evaluations.
     pub fn run(&self) -> SweepReport {
         let frames_req = self.frames.filter(|&f| f > 0);
         let mut combos = Vec::with_capacity(self.cell_count());
@@ -271,10 +336,93 @@ impl SweepSpec {
                 }
             }
         }
+        let cache = self.cache_dir.as_deref().map(CellCache::open);
+        let hits = AtomicU64::new(0);
+        let misses = AtomicU64::new(0);
         let cells = pool::parallel_map(self.jobs, &combos, |_, &(net, platform, granularity)| {
-            self.eval_cell(net, platform, granularity, frames_req)
+            if let Some(cache) = &cache {
+                let key = self.cell_key(net, platform, granularity, frames_req);
+                if let Some(cell) = cache.load(&key) {
+                    // The trusted reloader rebuilds the network by zoo
+                    // name; a *custom* Network sharing a zoo name (or any
+                    // structural drift the key somehow missed) must not be
+                    // served a zoo-net cell. Verbatim structural equality
+                    // with the probe network, or it's a miss.
+                    if format!("{:?}", cell.design().network()) == format!("{net:?}") {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                        return cell;
+                    }
+                }
+                let cell = self.eval_cell(net, platform, granularity, frames_req);
+                cache.store(&key, &cell);
+                misses.fetch_add(1, Ordering::Relaxed);
+                cell
+            } else {
+                self.eval_cell(net, platform, granularity, frames_req)
+            }
         });
-        SweepReport { cells }
+        let cache_stats = cache.map(|_| CacheStats {
+            hits: hits.into_inner(),
+            misses: misses.into_inner(),
+        });
+        SweepReport { cells, cache: cache_stats }
+    }
+
+    /// Content key of one cell for the [`cache`] layer: every input that
+    /// can change the cell's bytes, as one stable sorted-key JSON value —
+    /// network identity (name plus a full structural digest over the
+    /// `Debug` form of the whole `Network` value: dims, every layer,
+    /// every SCB — so even a field tweak or layer reorder that preserves
+    /// name/length/total MACs changes the key), the full platform budget
+    /// object (SRAM / DSP / clock / name), granularity, requested
+    /// simulation depth, effective simulator options, and the clock-curve
+    /// axis. Changing *any* component changes the key, so a stale hit is
+    /// structurally impossible (property-tested in
+    /// `rust/tests/proptests.rs`); [`SweepSpec::run`] additionally
+    /// re-checks the reconstructed network verbatim at hit time.
+    fn cell_key(
+        &self,
+        net: &Network,
+        platform: &Platform,
+        granularity: Granularity,
+        frames_req: Option<u64>,
+    ) -> Json {
+        let dbg = format!("{net:?}");
+        let mut fp = BTreeMap::new();
+        fp.insert(
+            "digest".to_string(),
+            Json::Str(format!(
+                "{:016x}{:016x}",
+                cache::fnv1a64(dbg.as_bytes(), 0xcbf2_9ce4_8422_2325),
+                cache::fnv1a64(dbg.as_bytes(), 0x9747_b28c_8c5e_a5a3)
+            )),
+        );
+        fp.insert("layers".to_string(), Json::Num(net.layers.len() as f64));
+        fp.insert("macs".to_string(), Json::Num(net.total_macs() as f64));
+        let mut m = BTreeMap::new();
+        m.insert(
+            "clocks_hz".to_string(),
+            Json::Arr(self.clocks_hz.iter().map(|&hz| Json::Num(hz)).collect()),
+        );
+        m.insert(
+            "frames".to_string(),
+            match frames_req {
+                Some(f) => Json::Num(f as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert("granularity".to_string(), Json::Str(granularity_name(granularity).to_string()));
+        m.insert("net_fingerprint".to_string(), Json::Obj(fp));
+        m.insert("network".to_string(), Json::Str(net.name.clone()));
+        m.insert("platform".to_string(), platform.to_json_value());
+        m.insert(
+            "sim_options".to_string(),
+            crate::design::sim_options_to_json(
+                &self.sim_options.unwrap_or_else(SimOptions::optimized),
+            ),
+        );
+        m.insert("version".to_string(), Json::Num(1.0));
+        Json::Obj(m)
     }
 
     /// Evaluate one matrix cell: build the [`Design`], optionally
@@ -341,6 +489,18 @@ pub struct SweepCell {
     /// FPS-vs-clock points at the spec's [`SweepSpec::clocks_hz`] axis
     /// (empty when no `--clocks` axis was requested).
     clock_curve: Vec<ClockPoint>,
+}
+
+/// The stable JSON object of one clock-curve point — shared by the cell
+/// document serializer and the [`cache`] entry format so the two can
+/// never drift field-by-field.
+pub(crate) fn clock_point_to_json(pt: &ClockPoint) -> Json {
+    let mut p = BTreeMap::new();
+    p.insert("clock_hz".to_string(), Json::Num(pt.clock_hz));
+    p.insert("fps".to_string(), Json::Num(pt.fps));
+    p.insert("gops".to_string(), Json::Num(pt.gops));
+    p.insert("peak_gops".to_string(), Json::Num(pt.peak_gops));
+    Json::Obj(p)
 }
 
 /// File-name-safe lowercase slug of a platform/network name.
@@ -424,19 +584,10 @@ impl SweepCell {
         // Only curve-bearing sweeps carry the key, so curve-less JSON
         // stays byte-identical to pre-curve BENCH trajectories.
         if !self.clock_curve.is_empty() {
-            let pts = self
-                .clock_curve
-                .iter()
-                .map(|pt| {
-                    let mut p = BTreeMap::new();
-                    p.insert("clock_hz".to_string(), Json::Num(pt.clock_hz));
-                    p.insert("fps".to_string(), Json::Num(pt.fps));
-                    p.insert("gops".to_string(), Json::Num(pt.gops));
-                    p.insert("peak_gops".to_string(), Json::Num(pt.peak_gops));
-                    Json::Obj(p)
-                })
-                .collect();
-            put("clock_curve", Json::Arr(pts));
+            put(
+                "clock_curve",
+                Json::Arr(self.clock_curve.iter().map(clock_point_to_json).collect()),
+            );
         }
         put("clock_hz", Json::Num(d.platform().clock_hz));
         put("dram_bytes", Json::Num(d.dram_bytes() as f64));
@@ -482,6 +633,13 @@ impl SweepCell {
 #[derive(Debug, Clone)]
 pub struct SweepReport {
     pub cells: Vec<SweepCell>,
+    /// Hit/miss stats of the run against [`SweepSpec::cache_dir`]'s
+    /// [`cache::CellCache`]; `None` when the sweep ran uncached. A fully
+    /// warm run reports `misses == 0` and
+    /// [`CacheStats::hit_rate`] `== 1.0`. Deliberately excluded from
+    /// [`SweepReport::to_json`] so warm and cold documents stay
+    /// byte-identical; the CLI prints it to stderr instead.
+    pub cache: Option<CacheStats>,
 }
 
 impl SweepReport {
@@ -511,6 +669,20 @@ impl SweepReport {
     /// document gains a top-level `"pareto"` key holding
     /// [`ParetoReport::to_json_value`].
     pub fn to_json_with(&self, pareto: Option<&ParetoReport>) -> String {
+        self.to_json_full(pareto, None)
+    }
+
+    /// The full document: [`SweepReport::to_json`] plus optional embedded
+    /// analyses — `"pareto"` (3-D, [`ParetoReport`]) and
+    /// `"pareto_clocks"` (the 4-D clock-axis frontier,
+    /// [`ClockParetoReport`], the `repro sweep --pareto-clocks --json`
+    /// output). Cache stats are never embedded (see
+    /// [`SweepReport::cache`]).
+    pub fn to_json_full(
+        &self,
+        pareto: Option<&ParetoReport>,
+        pareto_clocks: Option<&ClockParetoReport>,
+    ) -> String {
         let mut m = BTreeMap::new();
         m.insert(
             "cells".to_string(),
@@ -519,6 +691,9 @@ impl SweepReport {
         if let Some(p) = pareto {
             m.insert("pareto".to_string(), p.to_json_value());
         }
+        if let Some(p) = pareto_clocks {
+            m.insert("pareto_clocks".to_string(), p.to_json_value());
+        }
         m.insert("version".to_string(), Json::Num(1.0));
         Json::Obj(m).to_string()
     }
@@ -526,6 +701,12 @@ impl SweepReport {
     /// Convenience for [`pareto`] (the free function) on this report.
     pub fn pareto(&self) -> ParetoReport {
         pareto(self)
+    }
+
+    /// Convenience for [`pareto_clocks`] (the free function) on this
+    /// report.
+    pub fn pareto_clocks(&self) -> ClockParetoReport {
+        pareto_clocks(self)
     }
 
     /// Persist every cell's full [`Design::to_json`] artifact into `dir`
@@ -553,42 +734,74 @@ impl SweepReport {
     }
 }
 
-/// The three objectives the Pareto analysis trades off for one cell:
+/// The objectives the Pareto analyses trade off for one candidate:
 /// minimize on-chip SRAM, maximize predicted FPS, minimize off-chip DRAM
 /// traffic per frame — the axes Petrica et al. and the memory-wall line
 /// of work argue must sit on one frontier for streaming dataflow
-/// accelerators.
+/// accelerators — plus an opt-in fourth axis, the design clock
+/// (minimize: a lower clock closes timing on cheaper speed grades and
+/// burns less power for the same allocation).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Objectives {
     /// On-chip SRAM bytes (minimize) — [`Design::sram_bytes`].
     pub sram_bytes: u64,
-    /// Predicted FPS at the cell platform's clock (maximize) — Eq 14.
+    /// Predicted FPS (maximize) — Eq 14, at the cell platform's clock in
+    /// the 3-D analysis, at [`Objectives::clock_hz`] in the 4-D one.
     pub fps: f64,
     /// Off-chip DRAM bytes per frame (minimize) — Eq 13.
     pub dram_bytes: u64,
+    /// The frequency axis (minimize), fed by
+    /// [`crate::model::throughput::clock_curve`] points. `None` in the
+    /// classic 3-D analysis ([`pareto`]), where it is ignored by
+    /// [`Objectives::dominates`]; `Some` for every [`pareto_clocks`]
+    /// candidate.
+    pub clock_hz: Option<f64>,
 }
 
 impl Objectives {
-    /// The objective vector of one sweep cell.
+    /// The 3-D objective vector of one sweep cell (no clock axis).
     pub fn of(cell: &SweepCell) -> Objectives {
         Objectives {
             sram_bytes: cell.design().sram_bytes(),
             fps: cell.design().predicted().fps,
             dram_bytes: cell.design().dram_bytes(),
+            clock_hz: None,
+        }
+    }
+
+    /// The 4-D objective vector of one (cell, clock point) candidate:
+    /// SRAM and DRAM come from the (clock-independent) allocation, FPS
+    /// from the curve point's Eq-14 re-evaluation, and the point's clock
+    /// becomes the fourth axis.
+    pub fn at_clock(cell: &SweepCell, point: ClockPoint) -> Objectives {
+        Objectives {
+            sram_bytes: cell.design().sram_bytes(),
+            fps: point.fps,
+            dram_bytes: cell.design().dram_bytes(),
+            clock_hz: Some(point.clock_hz),
         }
     }
 
     /// Pareto dominance: `self` dominates `other` when it is no worse on
-    /// every objective (≤ SRAM, ≥ FPS, ≤ DRAM) and strictly better on at
-    /// least one. Exact ties on all three dominate in neither direction —
-    /// both cells land on the frontier.
+    /// every objective (≤ SRAM, ≥ FPS, ≤ DRAM, and ≤ clock when both
+    /// carry the axis) and strictly better on at least one. Exact ties on
+    /// all axes dominate in neither direction — both candidates land on
+    /// the frontier. The clock axis only participates when **both**
+    /// vectors carry it, so 3-D and 4-D analyses never mix dominance
+    /// rules mid-comparison.
     pub fn dominates(&self, other: &Objectives) -> bool {
+        let (clock_no_worse, clock_better) = match (self.clock_hz, other.clock_hz) {
+            (Some(a), Some(b)) => (a <= b, a < b),
+            _ => (true, false),
+        };
         let no_worse = self.sram_bytes <= other.sram_bytes
             && self.fps >= other.fps
-            && self.dram_bytes <= other.dram_bytes;
+            && self.dram_bytes <= other.dram_bytes
+            && clock_no_worse;
         let strictly_better = self.sram_bytes < other.sram_bytes
             || self.fps > other.fps
-            || self.dram_bytes < other.dram_bytes;
+            || self.dram_bytes < other.dram_bytes
+            || clock_better;
         no_worse && strictly_better
     }
 }
@@ -689,51 +902,249 @@ impl ParetoReport {
 /// assert_eq!(front.frontier.len() + front.dominated.len(), report.cells.len());
 /// ```
 pub fn pareto(report: &SweepReport) -> ParetoReport {
-    // Group cell indices by network, preserving first-appearance order.
+    let groups = group_by_network(report.cells.iter().map(SweepCell::network_name));
+    let fronts = groups
+        .into_iter()
+        .map(|(name, idxs)| {
+            let objs: Vec<Objectives> =
+                idxs.iter().map(|&i| Objectives::of(&report.cells[i])).collect();
+            let (front_local, dom_local) = non_dominated_split(&objs);
+            ParetoFront {
+                network: name,
+                frontier: front_local.iter().map(|&a| idxs[a]).collect(),
+                dominated: dom_local.iter().map(|&(a, b)| (idxs[a], idxs[b])).collect(),
+            }
+        })
+        .collect();
+    ParetoReport { fronts }
+}
+
+/// Group element indices by network name, preserving first-appearance
+/// order (frontiers across networks would compare apples to oranges).
+fn group_by_network<'a>(names: impl Iterator<Item = &'a str>) -> Vec<(String, Vec<usize>)> {
     let mut order: Vec<&str> = Vec::new();
     let mut groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
-    for (i, cell) in report.cells.iter().enumerate() {
-        let name = cell.network_name();
+    for (i, name) in names.enumerate() {
         let group = groups.entry(name).or_default();
         if group.is_empty() {
             order.push(name);
         }
         group.push(i);
     }
-    let fronts = order
+    order.into_iter().map(|name| (name.to_string(), groups.remove(name).unwrap())).collect()
+}
+
+/// Exact non-dominated split of one objective group, as local indices:
+/// `(frontier, dominated)` where every dominated element is attributed to
+/// the first (lowest-index) frontier element that dominates it. A
+/// dominated element always has a *frontier* dominator: dominance is
+/// transitive and irreflexive, so a maximal element above it exists and
+/// is itself non-dominated.
+fn non_dominated_split(objs: &[Objectives]) -> (Vec<usize>, Vec<(usize, usize)>) {
+    let frontier: Vec<usize> = (0..objs.len())
+        .filter(|&a| !objs.iter().any(|ob| ob.dominates(&objs[a])))
+        .collect();
+    let mut dominated = Vec::new();
+    for a in 0..objs.len() {
+        if frontier.binary_search(&a).is_ok() {
+            continue;
+        }
+        let by = *frontier
+            .iter()
+            .find(|&&b| objs[b].dominates(&objs[a]))
+            .expect("dominated element must have a frontier dominator");
+        dominated.push((a, by));
+    }
+    (frontier, dominated)
+}
+
+/// One candidate of the 4-D clock-axis analysis: a sweep cell evaluated
+/// at one candidate design clock.
+#[derive(Debug, Clone, Copy)]
+pub struct ClockCandidate {
+    /// Index into [`SweepReport::cells`].
+    pub cell: usize,
+    /// The candidate clock in Hz.
+    pub clock_hz: f64,
+    /// The full 4-D objective vector ([`Objectives::at_clock`]).
+    pub objectives: Objectives,
+}
+
+/// The 4-D non-dominated set of one network's candidates; indices point
+/// into [`ClockParetoReport::candidates`].
+#[derive(Debug, Clone)]
+pub struct ClockParetoFront {
+    pub network: String,
+    /// Candidate indices on the frontier, in candidate order.
+    pub frontier: Vec<usize>,
+    /// `(dominated candidate, dominating frontier candidate)` pairs, in
+    /// candidate order, attributing the first (lowest-index) dominator.
+    pub dominated: Vec<(usize, usize)>,
+}
+
+/// The clock-axis Pareto analysis of one sweep (`repro sweep --clocks ..
+/// --pareto-clocks`): the candidate list plus one per-network front.
+#[derive(Debug, Clone)]
+pub struct ClockParetoReport {
+    /// Every (cell, clock) candidate, cells in report order, clock points
+    /// in curve order (one native-clock candidate for curve-less cells).
+    pub candidates: Vec<ClockCandidate>,
+    pub fronts: Vec<ClockParetoFront>,
+}
+
+impl ClockParetoReport {
+    /// Stable sorted-key JSON value — the `"pareto_clocks"` entry of
+    /// `repro sweep --pareto-clocks --json`. Candidates carry their full
+    /// objective vector (`cell` indexes the same document's `"cells"`
+    /// array); frontier and dominated-by entries index `"candidates"`.
+    pub fn to_json_value(&self) -> Json {
+        let candidates = self
+            .candidates
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("cell".to_string(), Json::Num(c.cell as f64));
+                m.insert("clock_hz".to_string(), Json::Num(c.clock_hz));
+                m.insert("dram_bytes".to_string(), Json::Num(c.objectives.dram_bytes as f64));
+                m.insert("fps".to_string(), Json::Num(c.objectives.fps));
+                m.insert("sram_bytes".to_string(), Json::Num(c.objectives.sram_bytes as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let fronts = self
+            .fronts
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "dominated".to_string(),
+                    Json::Arr(
+                        f.dominated
+                            .iter()
+                            .map(|&(cand, by)| {
+                                let mut d = BTreeMap::new();
+                                d.insert("by".to_string(), Json::Num(by as f64));
+                                d.insert("candidate".to_string(), Json::Num(cand as f64));
+                                Json::Obj(d)
+                            })
+                            .collect(),
+                    ),
+                );
+                m.insert(
+                    "frontier".to_string(),
+                    Json::Arr(f.frontier.iter().map(|&i| Json::Num(i as f64)).collect()),
+                );
+                m.insert("network".to_string(), Json::Str(f.network.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("candidates".to_string(), Json::Arr(candidates));
+        m.insert("fronts".to_string(), Json::Arr(fronts));
+        Json::Obj(m)
+    }
+}
+
+/// Expand a report into the 4-D candidate set: one candidate per (cell,
+/// clock-curve point), in deterministic cell-then-curve order. A cell
+/// swept without a `--clocks` axis contributes a single candidate at its
+/// platform's native clock ([`crate::model::throughput::clock_point`],
+/// which reproduces the cell's own prediction exactly).
+pub fn clock_candidates(report: &SweepReport) -> Vec<ClockCandidate> {
+    let mut out = Vec::new();
+    for (i, cell) in report.cells.iter().enumerate() {
+        let points: Vec<ClockPoint> = if cell.clock_curve().is_empty() {
+            let d = cell.design();
+            vec![throughput::clock_point(d.network(), d.allocs(), d.platform().clock_hz)]
+        } else {
+            cell.clock_curve().to_vec()
+        };
+        for pt in points {
+            out.push(ClockCandidate {
+                cell: i,
+                clock_hz: pt.clock_hz,
+                objectives: Objectives::at_clock(cell, pt),
+            });
+        }
+    }
+    out
+}
+
+/// The frequency-axis Pareto analysis: clock promoted to a fourth
+/// objective next to {SRAM, FPS, DRAM/frame}.
+///
+/// Candidates are every (cell, clock) pair of [`clock_candidates`],
+/// grouped per network like [`pareto`], and each group's exact
+/// non-dominated set is taken under the 4-D rule of
+/// [`Objectives::dominates`] (SRAM ↓, FPS ↑, DRAM ↓, clock ↓). Because a
+/// fixed allocation's FPS scales linearly with its clock, two points of
+/// the *same* cell never dominate each other — the interesting structure
+/// is across cells: a candidate falls off the frontier exactly when some
+/// other (platform, granularity, clock) choice is at least as good on
+/// memory, traffic, *and* frequency while matching its throughput.
+///
+/// Verified against a brute-force O(n²) dominance scan including the
+/// clock axis in `rust/tests/pareto.rs`.
+///
+/// # Examples
+///
+/// ```
+/// use repro::sweep::{clock_candidates, pareto_clocks, SweepSpec};
+///
+/// let mut spec =
+///     SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+/// spec.clocks_hz = SweepSpec::parse_clocks_csv("150,200").unwrap();
+/// let report = spec.run();
+/// let analysis = pareto_clocks(&report);
+/// assert_eq!(analysis.candidates.len(), 4); // 2 cells x 2 clock points
+/// let front = &analysis.fronts[0];
+/// assert_eq!(front.frontier.len() + front.dominated.len(), 4);
+/// assert_eq!(analysis.candidates.len(), clock_candidates(&report).len());
+/// ```
+pub fn pareto_clocks(report: &SweepReport) -> ClockParetoReport {
+    let candidates = clock_candidates(report);
+    let groups = group_by_network(
+        candidates.iter().map(|c| report.cells[c.cell].network_name()),
+    );
+    let fronts = groups
         .into_iter()
-        .map(|name| {
-            let idxs = &groups[name];
-            let objs: Vec<Objectives> =
-                idxs.iter().map(|&i| Objectives::of(&report.cells[i])).collect();
-            // Frontier as (local, global) index pairs so attribution can
-            // compare objectives without re-searching `idxs` per probe.
-            let front_pairs: Vec<(usize, usize)> = idxs
-                .iter()
-                .enumerate()
-                .filter(|&(a, _)| !objs.iter().any(|ob| ob.dominates(&objs[a])))
-                .map(|(a, &cell_a)| (a, cell_a))
-                .collect();
-            let mut dominated = Vec::new();
-            for (a, &cell_a) in idxs.iter().enumerate() {
-                if front_pairs.iter().any(|&(b, _)| b == a) {
-                    continue;
-                }
-                // A dominated cell always has a *frontier* dominator:
-                // dominance is transitive and irreflexive, so a maximal
-                // element above it exists and is itself non-dominated.
-                let (_, by) = front_pairs
-                    .iter()
-                    .copied()
-                    .find(|&(b, _)| objs[b].dominates(&objs[a]))
-                    .expect("dominated cell must have a frontier dominator");
-                dominated.push((cell_a, by));
+        .map(|(name, idxs)| {
+            let objs: Vec<Objectives> = idxs.iter().map(|&i| candidates[i].objectives).collect();
+            let (front_local, dom_local) = non_dominated_split(&objs);
+            ClockParetoFront {
+                network: name,
+                frontier: front_local.iter().map(|&a| idxs[a]).collect(),
+                dominated: dom_local.iter().map(|&(a, b)| (idxs[a], idxs[b])).collect(),
             }
-            let frontier = front_pairs.into_iter().map(|(_, cell)| cell).collect();
-            ParetoFront { network: name.to_string(), frontier, dominated }
         })
         .collect();
-    ParetoReport { fronts }
+    ClockParetoReport { candidates, fronts }
+}
+
+/// Validate the CLI's `--pareto-clocks` flag against the spec's clock
+/// axis: the 4-D analysis without a `--clocks` axis would silently
+/// degenerate to one native point per cell — reject the combination with
+/// a message that names the missing flag instead.
+///
+/// # Examples
+///
+/// ```
+/// use repro::sweep::validate_pareto_clocks;
+///
+/// assert!(validate_pareto_clocks(false, &[]).is_ok());
+/// assert!(validate_pareto_clocks(true, &[150.0e6]).is_ok());
+/// let err = validate_pareto_clocks(true, &[]).unwrap_err();
+/// assert!(err.contains("--clocks"));
+/// ```
+pub fn validate_pareto_clocks(requested: bool, clocks_hz: &[f64]) -> Result<(), String> {
+    if requested && clocks_hz.is_empty() {
+        return Err(
+            "--pareto-clocks: requires --clocks MHZ[,MHZ..] — the clock axis supplies the \
+             frequency dimension of the 4-D frontier"
+                .to_string(),
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -750,6 +1161,139 @@ mod tests {
         assert!(spec.frames.is_none());
         assert_eq!(spec.jobs, 1, "default is the serial path");
         assert!(spec.clocks_hz.is_empty(), "no clock curves unless asked");
+        assert!(spec.cache_dir.is_none(), "no memoization unless asked");
+    }
+
+    #[test]
+    fn cell_key_changes_with_every_component_and_only_those() {
+        let spec = SweepSpec::default();
+        let net = nets::shufflenet_v2();
+        let base = spec.cell_key(&net, &Platform::zc706(), Granularity::Fgpm, None);
+        // Same inputs -> byte-identical key (the cache's hit condition).
+        assert_eq!(
+            base.to_string(),
+            spec.cell_key(&net, &Platform::zc706(), Granularity::Fgpm, None).to_string()
+        );
+        // Each component perturbs the key: platform budget, platform
+        // clock, granularity, frames, sim options, clocks axis, network.
+        let mut keys = vec![
+            spec.cell_key(&net, &Platform::zc706().with_sram_bytes(1), Granularity::Fgpm, None),
+            spec.cell_key(&net, &Platform::zc706().with_clock_hz(1.0e6), Granularity::Fgpm, None),
+            spec.cell_key(&net, &Platform::zc706(), Granularity::Factorized, None),
+            spec.cell_key(&net, &Platform::zc706(), Granularity::Fgpm, Some(3)),
+            spec.cell_key(&nets::mobilenet_v2(), &Platform::zc706(), Granularity::Fgpm, None),
+        ];
+        let mut opts = spec.clone();
+        opts.sim_options = Some(crate::sim::SimOptions::baseline());
+        keys.push(opts.cell_key(&net, &Platform::zc706(), Granularity::Fgpm, None));
+        let mut clocks = spec.clone();
+        clocks.clocks_hz = vec![100.0e6];
+        keys.push(clocks.cell_key(&net, &Platform::zc706(), Granularity::Fgpm, None));
+        // Structural drift invisible to name/layer-count/total-MACs: two
+        // layers swapped must still change the key (the Debug digest).
+        let mut swapped = nets::shufflenet_v2();
+        swapped.layers.swap(0, 1);
+        assert_eq!(swapped.layers.len(), net.layers.len());
+        assert_eq!(swapped.total_macs(), net.total_macs());
+        keys.push(spec.cell_key(&swapped, &Platform::zc706(), Granularity::Fgpm, None));
+        for (i, k) in keys.iter().enumerate() {
+            assert_ne!(k.to_string(), base.to_string(), "perturbation {i} did not change the key");
+        }
+    }
+
+    #[test]
+    fn warm_path_never_serves_a_zoo_cell_to_a_lookalike_custom_network() {
+        let dir = std::env::temp_dir().join("repro_sweep_cache_lookalike");
+        let _ = std::fs::remove_dir_all(&dir);
+        // A *custom* network sharing the zoo name but structurally
+        // different: the digest keys it separately, and even if an entry
+        // is found, run()'s verbatim network check refuses to serve the
+        // zoo-rebuilt cell — such sweeps stay correct but cold.
+        let mut lookalike = nets::shufflenet_v2();
+        lookalike.layers.swap(0, 1);
+        let spec = SweepSpec {
+            nets: vec![lookalike],
+            platforms: vec![Platform::zc706()],
+            cache_dir: Some(dir.clone()),
+            ..SweepSpec::default()
+        };
+        let cold = spec.run();
+        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 1 }));
+        let rerun = spec.run();
+        assert_eq!(
+            rerun.cache,
+            Some(CacheStats { hits: 0, misses: 1 }),
+            "a lookalike custom network must never warm-hit"
+        );
+        assert_eq!(cold.to_json(), rerun.to_json());
+        // The stock zoo network is keyed apart and stays unpoisoned.
+        let stock = SweepSpec {
+            nets: vec![nets::shufflenet_v2()],
+            platforms: vec![Platform::zc706()],
+            cache_dir: Some(dir.clone()),
+            ..SweepSpec::default()
+        };
+        assert_eq!(stock.run().cache, Some(CacheStats { hits: 0, misses: 1 }));
+        assert_eq!(stock.run().cache, Some(CacheStats { hits: 1, misses: 0 }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cached_run_reports_stats_and_identical_bytes() {
+        let dir = std::env::temp_dir().join("repro_sweep_cache_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+        let cold_uncached = spec.run();
+        assert!(cold_uncached.cache.is_none(), "uncached runs carry no stats");
+        spec.cache_dir = Some(dir.clone());
+        let cold = spec.run();
+        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2 }));
+        let warm = spec.run();
+        assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0 }));
+        assert!((warm.cache.unwrap().hit_rate() - 1.0).abs() < 1e-12);
+        // The cache changes *where* cells come from, never their bytes —
+        // and the JSON document embeds no stats, so all three agree.
+        assert_eq!(cold_uncached.to_json(), cold.to_json());
+        assert_eq!(cold.to_json(), warm.to_json());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pareto_clocks_expands_curve_points_and_falls_back_to_native() {
+        let mut spec =
+            SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+        spec.clocks_hz = SweepSpec::parse_clocks_csv("150,200").unwrap();
+        let analysis = pareto_clocks(&spec.run());
+        assert_eq!(analysis.candidates.len(), 4, "2 cells x 2 curve points");
+        assert_eq!(analysis.fronts.len(), 1);
+        // Two points of one cell never dominate each other (FPS and clock
+        // move together), so each cell has at least one frontier point...
+        let f = &analysis.fronts[0];
+        assert_eq!(f.frontier.len() + f.dominated.len(), 4);
+        // ...and a curve-less sweep still yields one native candidate per
+        // cell, at the platform clock, matching the cell's own prediction.
+        let plain = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None)
+            .unwrap()
+            .run();
+        let native = clock_candidates(&plain);
+        assert_eq!(native.len(), 2);
+        for c in &native {
+            let d = plain.cells[c.cell].design();
+            assert_eq!(c.clock_hz, d.platform().clock_hz);
+            assert_eq!(c.objectives.fps, d.predicted().fps);
+            assert_eq!(c.objectives.clock_hz, Some(c.clock_hz));
+        }
+    }
+
+    #[test]
+    fn clock_axis_only_participates_when_both_sides_carry_it() {
+        let lean = Objectives { sram_bytes: 10, fps: 5.0, dram_bytes: 10, clock_hz: None };
+        let rich = Objectives { sram_bytes: 10, fps: 5.0, dram_bytes: 10, clock_hz: Some(1.0) };
+        // 3-D ties stay mutually non-dominating regardless of one side's
+        // extra axis; with both axes present, the lower clock wins.
+        assert!(!lean.dominates(&rich) && !rich.dominates(&lean));
+        let slower = Objectives { clock_hz: Some(2.0), ..rich };
+        assert!(rich.dominates(&slower) && !slower.dominates(&rich));
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Content-keyed per-cell evaluation cache — the sweep's memoization
+//! layer.
+//!
+//! Re-deriving the same (network, platform budgets, granularity, clock)
+//! cell is what every example, test, and CI sweep spends its time on, so
+//! a [`CellCache`] persists each evaluated [`SweepCell`] to one file in a
+//! cache directory and serves later evaluations from disk. The warm path
+//! reloads designs through [`Design::from_json_unchecked`] — **zero
+//! Algorithm 1 / Algorithm 2 re-derivations** (the claim is enforced via
+//! [`crate::alloc::derivations`] counters in
+//! `rust/tests/differential.rs`), and a warm sweep's JSON and artifacts
+//! are byte-identical to a cold one's.
+//!
+//! # Keying
+//!
+//! Entries are *content*-keyed: the key is the stable sorted-key JSON of
+//! every input that can change a cell's content — network name plus a
+//! structural fingerprint, the full platform budget object (SRAM, DSPs,
+//! clock, name), granularity, simulated frame count, simulator options,
+//! and the `--clocks` curve axis. The key hashes (twice-seeded FNV-1a)
+//! into the entry file name, **and** is stored verbatim inside the entry:
+//! a load only hits when the stored key equals the probe key exactly, so
+//! hash collisions, stale schema versions, and truncated files all
+//! degrade to misses, never to wrong cells (the no-stale-hits property in
+//! `rust/tests/proptests.rs`).
+//!
+//! The cache is best-effort by design: unreadable directories or write
+//! failures silently degrade to cold evaluation (counted as misses) —
+//! callers that want fail-loudly semantics probe the directory first, as
+//! the `repro sweep --cache-dir` CLI path does.
+//!
+//! Only **zoo** networks are warm-servable: the trusted reloader rebuilds
+//! the network by name from [`crate::nets`], and [`super::SweepSpec::run`]
+//! re-checks the rebuilt network verbatim against the probe's at hit
+//! time. A sweep over a custom `Network` therefore stays correct but
+//! permanently cold (stored, never served).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::design::Design;
+use crate::model::throughput::ClockPoint;
+use crate::util::json::Json;
+
+use super::{SimFigures, SweepCell};
+
+/// Schema version of one cache entry file; bumped whenever the cell or
+/// key serialization changes shape, so old entries miss instead of
+/// half-parsing.
+const ENTRY_VERSION: f64 = 1.0;
+
+/// Hit/miss counts of one sweep run against a [`CellCache`] — surfaced
+/// as [`super::SweepReport::cache`] and printed (to stderr) by
+/// `repro sweep --cache/--cache-dir`. Deliberately **not** part of
+/// [`super::SweepReport::to_json`]: the JSON document must stay
+/// byte-identical between warm and cold runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Cells probed in total.
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of probes served from the cache (0.0 when nothing was
+    /// probed). A fully warm run reports exactly 1.0.
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+
+    /// The one-line stats rendering the CLI prints to stderr (and CI
+    /// greps for `100.0% hit rate` on its warm step).
+    pub fn summary(&self, dir: &Path) -> String {
+        format!(
+            "cache: {} hits, {} misses ({:.1}% hit rate) at {}",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            dir.display()
+        )
+    }
+}
+
+/// A directory of memoized sweep cells. Open is cheap; every probe is one
+/// file read keyed by content hash.
+#[derive(Debug, Clone)]
+pub struct CellCache {
+    dir: PathBuf,
+}
+
+impl CellCache {
+    /// Open (creating if missing, best-effort) a cache rooted at `dir`.
+    pub fn open(dir: &Path) -> CellCache {
+        let _ = std::fs::create_dir_all(dir);
+        CellCache { dir: dir.to_path_buf() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Entry file for a key: two differently-seeded 64-bit FNV-1a hashes
+    /// of the canonical key serialization. The name is only a lookup
+    /// accelerator — equality of the *stored* key decides a hit.
+    fn entry_path(&self, key_text: &str) -> PathBuf {
+        let b = key_text.as_bytes();
+        self.dir.join(format!(
+            "{:016x}{:016x}.cell.json",
+            fnv1a64(b, 0xcbf2_9ce4_8422_2325),
+            fnv1a64(b, 0x9747_b28c_8c5e_a5a3)
+        ))
+    }
+
+    /// Probe for `key`; `Some` only when an entry exists whose stored key
+    /// is byte-equal to `key` and whose cell deserializes cleanly. Every
+    /// other outcome (absent file, I/O error, version or key mismatch,
+    /// malformed cell) is a miss.
+    pub(super) fn load(&self, key: &Json) -> Option<SweepCell> {
+        let key_text = key.to_string();
+        let text = std::fs::read_to_string(self.entry_path(&key_text)).ok()?;
+        let entry = Json::parse(&text).ok()?;
+        if entry.field_f64("version") != Some(ENTRY_VERSION) {
+            return None;
+        }
+        if entry.get("key")?.to_string() != key_text {
+            return None; // hash collision or hand-edited entry: treat as cold
+        }
+        cell_from_json(entry.get("cell")?).ok()
+    }
+
+    /// Persist `cell` under `key`, best-effort (failures leave the cache
+    /// cold for this key). The entry is written to a sibling temp file and
+    /// renamed so concurrent writers — two CI steps sharing one cache
+    /// directory — can never interleave a torn entry.
+    pub(super) fn store(&self, key: &Json, cell: &SweepCell) {
+        let key_text = key.to_string();
+        let mut m = BTreeMap::new();
+        m.insert("cell".to_string(), cell_to_json(cell));
+        m.insert("key".to_string(), key.clone());
+        m.insert("version".to_string(), Json::Num(ENTRY_VERSION));
+        let mut text = Json::Obj(m).to_string();
+        text.push('\n');
+        let path = self.entry_path(&key_text);
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        if std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, &path).is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+}
+
+pub(crate) fn fnv1a64(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize one evaluated cell: the design's **full** `to_json` artifact
+/// (every derived figure, so the warm path never recomputes) plus the
+/// sim figures, sim error, and clock curve.
+fn cell_to_json(cell: &SweepCell) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "clock_curve".to_string(),
+        Json::Arr(cell.clock_curve.iter().map(super::clock_point_to_json).collect()),
+    );
+    m.insert(
+        "design".to_string(),
+        Json::parse(&cell.design.to_json()).expect("Design::to_json reparses"),
+    );
+    m.insert(
+        "sim".to_string(),
+        match &cell.sim {
+            None => Json::Null,
+            Some(s) => {
+                let mut sm = BTreeMap::new();
+                sm.insert("fps".to_string(), Json::Num(s.fps));
+                sm.insert("frames".to_string(), Json::Num(s.frames as f64));
+                sm.insert("mac_efficiency".to_string(), Json::Num(s.mac_efficiency));
+                Json::Obj(sm)
+            }
+        },
+    );
+    m.insert(
+        "sim_error".to_string(),
+        match &cell.sim_error {
+            None => Json::Null,
+            Some(e) => Json::Str(e.clone()),
+        },
+    );
+    Json::Obj(m)
+}
+
+/// Inverse of [`cell_to_json`]. Field values land verbatim (the stable
+/// serializer round-trips every f64 exactly), which is what makes warm
+/// and cold cells byte-identical downstream.
+fn cell_from_json(j: &Json) -> Result<SweepCell, String> {
+    let design = Design::from_json_unchecked(
+        &j.get("design").ok_or_else(|| "cache entry: missing \"design\"".to_string())?.to_string(),
+    )?;
+    let sim = match j.get("sim") {
+        None | Some(Json::Null) => None,
+        Some(s) => {
+            let num = |key: &str| {
+                s.field_f64(key).ok_or_else(|| format!("cache entry: missing sim/{key:?}"))
+            };
+            Some(SimFigures {
+                frames: num("frames")? as u64,
+                fps: num("fps")?,
+                mac_efficiency: num("mac_efficiency")?,
+            })
+        }
+    };
+    let sim_error = match j.get("sim_error") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(e)) => Some(e.clone()),
+        Some(other) => return Err(format!("cache entry: bad sim_error {other}")),
+    };
+    let clock_curve = j
+        .get("clock_curve")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "cache entry: missing array \"clock_curve\"".to_string())?
+        .iter()
+        .map(|pt| {
+            let num = |key: &str| {
+                pt.field_f64(key).ok_or_else(|| format!("cache entry: missing curve {key:?}"))
+            };
+            Ok(ClockPoint {
+                clock_hz: num("clock_hz")?,
+                fps: num("fps")?,
+                gops: num("gops")?,
+                peak_gops: num("peak_gops")?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(SweepCell { design, sim, sim_error, clock_curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SweepSpec;
+    use super::*;
+
+    fn tmp_cache(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("repro_cell_cache_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn store_then_load_round_trips_a_cell_byte_for_byte() {
+        let dir = tmp_cache("roundtrip");
+        let cache = CellCache::open(&dir);
+        let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None).unwrap();
+        spec.clocks_hz = SweepSpec::parse_clocks_csv("100,200").unwrap();
+        let report = spec.run();
+        let cell = &report.cells[0];
+        let key = Json::Str("probe-key".to_string());
+        assert!(cache.load(&key).is_none(), "cold cache must miss");
+        cache.store(&key, cell);
+        let warm = cache.load(&key).expect("stored cell loads");
+        assert_eq!(warm.to_json_value().to_string(), cell.to_json_value().to_string());
+        assert_eq!(warm.design().to_json(), cell.design().to_json());
+        // A different key never sees the entry, whatever the hash says.
+        assert!(cache.load(&Json::Str("other-key".to_string())).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_mismatched_entries_degrade_to_misses() {
+        let dir = tmp_cache("corrupt");
+        let cache = CellCache::open(&dir);
+        let spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("edge"), None).unwrap();
+        let cell = &spec.run().cells[0];
+        let key = Json::Str("k".to_string());
+        cache.store(&key, cell);
+        let path = cache.entry_path(&key.to_string());
+        // Truncation: unparseable JSON is a miss, not a panic.
+        std::fs::write(&path, "{\"version\":1,\"key\":\"k\",\"cell\":{").unwrap();
+        assert!(cache.load(&key).is_none());
+        // A well-formed entry under a *different* stored key (the on-disk
+        // shape of a hash collision) is also a miss.
+        cache.store(&key, cell);
+        let swapped =
+            std::fs::read_to_string(&path).unwrap().replace("\"key\":\"k\"", "\"key\":\"q\"");
+        std::fs::write(&path, swapped).unwrap();
+        assert!(cache.load(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -96,6 +96,12 @@ impl Json {
         self.get(key).and_then(Json::as_arr).unwrap_or_else(|| panic!("missing array field {key:?}"))
     }
 
+    /// Non-panicking `get(key).and_then(as_f64)` — the lookup shape every
+    /// fallible reader (design reload, sweep-cache entries) repeats.
+    pub fn field_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+
     pub fn usize_vec(&self) -> Vec<usize> {
         self.as_arr()
             .map(|a| a.iter().filter_map(Json::as_usize).collect())

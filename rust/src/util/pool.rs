@@ -1,12 +1,22 @@
-//! Scoped-thread work pool with deterministic output ordering.
+//! Scoped-thread work-stealing pool with deterministic output ordering.
 //!
 //! The offline build vendors no threading crates (rayon, crossbeam), so
 //! this is the crate's own fan-out primitive: [`parallel_map`] evaluates a
 //! pure function over a slice on `jobs` scoped threads. Scheduling is
-//! self-balancing — every idle worker *steals* the next unclaimed index
-//! from one shared atomic cursor, so a slow cell (a big network on a big
-//! platform) never serializes the rest of the matrix behind it — and the
-//! results are re-sorted by input index before returning, so the output
+//! **chunked work stealing with per-worker deques**: the input range is
+//! split into one contiguous chunk per worker (cache-friendly; a worker
+//! draining its own chunk only ever touches its own uncontended lock),
+//! each worker pops indices from the front of its own deque, and a worker
+//! that runs dry scans the others round-robin and *steals the back half*
+//! of the first victim that still has work instead of idling. Uneven item
+//! costs therefore never serialize the tail behind one unlucky worker — a
+//! deque holding several expensive items (e.g. sim-enabled sweep cells
+//! next to predict-only ones) is progressively redistributed in halves,
+//! so redistribution events stay O(workers · log(items)) even though each
+//! pop is still one (almost always uncontended) lock on the worker's own
+//! deque.
+//!
+//! Results are re-sorted by input index before returning, so the output
 //! `Vec` is **bit-identical to the serial path for any `jobs`**. That
 //! determinism is what lets `repro sweep --jobs N` keep byte-identical
 //! JSON and golden-baseline artifacts (asserted in
@@ -27,7 +37,7 @@
 //! assert_eq!(serial, parallel); // deterministic order for any job count
 //! ```
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
 use std::sync::Mutex;
 
 /// Map `f` over `items` on up to `jobs` scoped threads, returning results
@@ -40,6 +50,15 @@ use std::sync::Mutex;
 /// * `f` must be pure with respect to ordering: it may run concurrently
 ///   with itself and in any claim order.
 ///
+/// Scheduling: worker `w` starts with the `w`-th contiguous chunk of the
+/// index range in a private deque and pops from its front; an idle worker
+/// steals the back half of the first other deque (round-robin scan from
+/// its right) that still has work, publishing the stolen half into its
+/// own deque *before* releasing the victim's lock, so unclaimed work is
+/// always visible in some deque. Because the task set is static (claimed
+/// indices are never re-queued), a worker that finds every deque empty
+/// can exit — all remaining work is already claimed by running workers.
+///
 /// Panics in `f` propagate to the caller once all workers have joined.
 pub fn parallel_map<T, U, F>(jobs: usize, items: &[T], f: F) -> Vec<U>
 where
@@ -47,26 +66,63 @@ where
     U: Send,
     F: Fn(usize, &T) -> U + Sync,
 {
-    let jobs = jobs.clamp(1, items.len().max(1));
+    let n = items.len();
+    let jobs = jobs.clamp(1, n.max(1));
     if jobs <= 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    // One shared cursor of unclaimed work: an idle worker steals the next
-    // index with a single fetch_add, so load balances dynamically without
-    // per-worker queues (cells vastly outnumber lock transitions — each
-    // worker touches the results mutex exactly once, at exit).
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<(usize, U)>> = Mutex::new(Vec::with_capacity(items.len()));
+    // One deque per worker, seeded with its contiguous chunk of the
+    // index range. A Mutex per deque (not one global lock) keeps the
+    // owner's pops and a thief's steals from contending with unrelated
+    // workers.
+    let deques: Vec<Mutex<VecDeque<usize>>> = (0..jobs)
+        .map(|w| Mutex::new((w * n / jobs..(w + 1) * n / jobs).collect()))
+        .collect();
+    let results: Mutex<Vec<(usize, U)>> = Mutex::new(Vec::with_capacity(n));
     std::thread::scope(|scope| {
-        for _ in 0..jobs {
-            scope.spawn(|| {
+        for w in 0..jobs {
+            let deques = &deques;
+            let results = &results;
+            let f = &f;
+            scope.spawn(move || {
                 let mut local = Vec::new();
                 loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
+                    // Fast path: drain the front of our own deque.
+                    let next = deques[w].lock().unwrap().pop_front();
+                    if let Some(i) = next {
+                        local.push((i, f(i, &items[i])));
+                        continue;
+                    }
+                    // Own deque dry: steal the back half of the first
+                    // victim (scanning round-robin from our right) that
+                    // still has unclaimed work. Taking the *back* of the
+                    // victim's chunk preserves its front-to-back locality.
+                    // The stolen half is published into our own deque
+                    // while the victim's lock is still held, so a
+                    // concurrently scanning worker can never observe
+                    // "all deques empty" while unclaimed work is in
+                    // flight between two deques. Holding victim-then-own
+                    // cannot deadlock: a thief's own deque is empty, and
+                    // no worker locks a second deque unless that victim
+                    // is non-empty — so no thief ever waits on another
+                    // thief's (empty) deque while holding one.
+                    let mut stole = false;
+                    for off in 1..jobs {
+                        let mut q = deques[(w + off) % jobs].lock().unwrap();
+                        if !q.is_empty() {
+                            let steal = q.len().div_ceil(2);
+                            let stolen = q.split_off(q.len() - steal);
+                            *deques[w].lock().unwrap() = stolen;
+                            stole = true;
+                            break;
+                        }
+                    }
+                    if !stole {
+                        // Every deque is empty: all indices are claimed
+                        // (claimed work is never re-queued), so nothing is
+                        // left to schedule.
                         break;
                     }
-                    local.push((i, f(i, &items[i])));
                 }
                 results.lock().unwrap().extend(local);
             });
@@ -131,6 +187,53 @@ mod tests {
             x
         });
         assert_eq!(got, items);
+    }
+
+    #[test]
+    fn skewed_front_chunk_is_redistributed_by_stealing() {
+        // Adversarial for the *chunked* distribution: all the expensive
+        // items land in worker 0's initial chunk. With per-worker deques
+        // and no stealing the run would take ~8 x 5 ms serialized on one
+        // worker; correctness-wise the output must be complete and sorted
+        // whatever the steal interleaving.
+        let items: Vec<u64> = (0..64).collect();
+        for jobs in [2, 4, 8] {
+            let claims = AtomicUsize::new(0);
+            let got = parallel_map(jobs, &items, |i, &x| {
+                claims.fetch_add(1, Ordering::Relaxed);
+                if i < 8 {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                x * 2
+            });
+            assert_eq!(got, items.iter().map(|&x| x * 2).collect::<Vec<_>>(), "jobs={jobs}");
+            assert_eq!(claims.load(Ordering::Relaxed), items.len(), "jobs={jobs}: exactly-once");
+        }
+    }
+
+    #[test]
+    fn large_random_cost_spread_stays_exactly_once_and_ordered() {
+        // 1000 items whose costs vary by ~100x in a deterministic but
+        // shuffled pattern: every index must be evaluated exactly once and
+        // come back in order for every job count.
+        let items: Vec<u64> = (0..1000).collect();
+        let expect: Vec<u64> = items.iter().map(|&x| x + 7).collect();
+        for jobs in [2, 5, 16] {
+            let calls = AtomicUsize::new(0);
+            let got = parallel_map(jobs, &items, |i, &x| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                // Busy-work spread: a pseudo-random subset spins longer.
+                let spin = if (i * 2654435761) % 97 < 5 { 20_000 } else { 200 };
+                let mut acc = x;
+                for k in 0..spin {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+                }
+                std::hint::black_box(acc);
+                x + 7
+            });
+            assert_eq!(got, expect, "jobs={jobs}");
+            assert_eq!(calls.load(Ordering::Relaxed), items.len(), "jobs={jobs}");
+        }
     }
 
     #[test]

@@ -9,11 +9,16 @@
 //!   [`Objectives::dominates`].
 //! * Serial-vs-parallel determinism: `--jobs 1` and `--jobs 8` produce
 //!   byte-identical `to_json` documents and identical per-cell design
-//!   artifacts (the golden-baseline format).
+//!   artifacts (the golden-baseline format), including under the
+//!   deliberately uneven per-cell costs of a sim-enabled sweep driven
+//!   through the work-stealing pool.
+//! * The 4-D acceptance check: [`repro::sweep::pareto_clocks`]'s
+//!   frequency-axis frontier verified against a brute-force O(n²)
+//!   dominance scan that includes the clock axis.
 
 use repro::alloc::Granularity;
 use repro::nets;
-use repro::sweep::{pareto, Objectives, SweepReport, SweepSpec};
+use repro::sweep::{pareto, pareto_clocks, Objectives, SweepReport, SweepSpec};
 use repro::util::json::Json;
 use repro::Platform;
 
@@ -79,12 +84,15 @@ fn assert_frontier_matches_brute_force(report: &SweepReport) {
 
 #[test]
 fn empty_matrix_yields_empty_analysis() {
-    let report = SweepReport { cells: Vec::new() };
+    let report = SweepReport { cells: Vec::new(), cache: None };
     let analysis = pareto(&report);
     assert!(analysis.fronts.is_empty());
-    // And the JSON embedding is well-formed.
-    let j = Json::parse(&report.to_json_with(Some(&analysis))).unwrap();
+    // And the JSON embedding is well-formed — for the 4-D analysis too.
+    let clocks = pareto_clocks(&report);
+    assert!(clocks.candidates.is_empty() && clocks.fronts.is_empty());
+    let j = Json::parse(&report.to_json_full(Some(&analysis), Some(&clocks))).unwrap();
     assert_eq!(j.get("pareto").unwrap().arr_field("fronts").len(), 0);
+    assert_eq!(j.get("pareto_clocks").unwrap().arr_field("candidates").len(), 0);
 }
 
 #[test]
@@ -164,6 +172,129 @@ fn full_matrix_frontier_survives_brute_force_dominance_check() {
     assert!(!report.to_json().contains("\"pareto\""));
 }
 
+/// Brute-force 4-D dominance over raw (SRAM, FPS, DRAM, clock) tuples —
+/// min/max/min/min, strict in at least one — deliberately re-derived
+/// here rather than calling the library's `Objectives::dominates`.
+fn dominates_bf4(a: (u64, f64, u64, f64), b: (u64, f64, u64, f64)) -> bool {
+    (a.0 <= b.0 && a.1 >= b.1 && a.2 <= b.2 && a.3 <= b.3)
+        && (a.0 < b.0 || a.1 > b.1 || a.2 < b.2 || a.3 < b.3)
+}
+
+/// Independently expand a report into (network, 4-tuple) candidates the
+/// way the analysis documents it: one candidate per clock-curve point,
+/// or one at the platform's native clock for curve-less cells, reading
+/// FPS straight off the curve / prediction.
+fn raw_candidates_4d(report: &SweepReport) -> Vec<(String, (u64, f64, u64, f64))> {
+    let mut out = Vec::new();
+    for cell in &report.cells {
+        let d = cell.design();
+        let (sram, dram) = (d.sram_bytes(), d.dram_bytes());
+        if cell.clock_curve().is_empty() {
+            out.push((
+                d.network().name.clone(),
+                (sram, d.predicted().fps, dram, d.platform().clock_hz),
+            ));
+        } else {
+            for pt in cell.clock_curve() {
+                out.push((d.network().name.clone(), (sram, pt.fps, dram, pt.clock_hz)));
+            }
+        }
+    }
+    out
+}
+
+/// The ISSUE 5 acceptance criterion: the 4-D frontier (clock axis
+/// included) agrees with a brute-force O(n²) dominance scan, every
+/// attribution names a frontier candidate that really dominates, and
+/// every candidate is frontier xor dominated within its network.
+#[test]
+fn clock_axis_frontier_survives_brute_force_dominance_check() {
+    let mut spec = SweepSpec::from_csv(
+        Some("mobilenet_v2,shufflenet_v2"),
+        Some("zc706,zcu102,edge"),
+        Some("fgpm,factorized"),
+    )
+    .unwrap();
+    spec.clocks_hz = SweepSpec::parse_clocks_csv("100,150,200,300").unwrap();
+    let report = spec.run();
+    let analysis = pareto_clocks(&report);
+    let raw = raw_candidates_4d(&report);
+    assert_eq!(analysis.candidates.len(), raw.len(), "12 cells x 4 clocks");
+    assert_eq!(raw.len(), 48);
+    // The library's candidate expansion matches the independent one
+    // value-for-value (same order: cells outer, curve points inner).
+    for (cand, (net, t)) in analysis.candidates.iter().zip(&raw) {
+        assert_eq!(report.cells[cand.cell].network_name(), net);
+        assert_eq!(cand.objectives.sram_bytes, t.0);
+        assert_eq!(cand.objectives.fps, t.1);
+        assert_eq!(cand.objectives.dram_bytes, t.2);
+        assert_eq!(cand.clock_hz, t.3);
+        assert_eq!(cand.objectives.clock_hz, Some(t.3));
+    }
+    let mut seen = 0usize;
+    for front in &analysis.fronts {
+        for i in 0..raw.len() {
+            if raw[i].0 != front.network {
+                continue;
+            }
+            seen += 1;
+            let dominated_bf = (0..raw.len())
+                .any(|j| raw[j].0 == front.network && dominates_bf4(raw[j].1, raw[i].1));
+            assert_eq!(
+                front.frontier.contains(&i),
+                !dominated_bf,
+                "candidate {i} ({}) 4-D frontier membership disagrees with brute force",
+                front.network
+            );
+        }
+        for &(cand, by) in &front.dominated {
+            assert!(front.frontier.contains(&by), "attribution {by} is not a frontier candidate");
+            assert_eq!(raw[cand].0, front.network);
+            assert_eq!(raw[by].0, front.network, "attribution crosses networks");
+            assert!(
+                dominates_bf4(raw[by].1, raw[cand].1),
+                "candidate {by} does not actually dominate candidate {cand} on 4 axes"
+            );
+        }
+        assert_eq!(
+            front.frontier.len() + front.dominated.len(),
+            raw.iter().filter(|(n, _)| *n == front.network).count(),
+            "{}: every candidate is frontier xor dominated",
+            front.network
+        );
+    }
+    assert_eq!(seen, raw.len(), "every candidate belongs to exactly one front");
+    // Sanity on the axis itself: with FPS scaling linearly in clock, two
+    // points of one cell never dominate each other, so every *cell*
+    // keeps at least one candidate... and with four clocks per cell,
+    // dominated candidates must exist across platforms.
+    assert!(
+        analysis.fronts.iter().any(|f| !f.dominated.is_empty()),
+        "expected cross-cell domination in a mixed-granularity clock sweep"
+    );
+    // The JSON embedding indexes candidates consistently.
+    let j = Json::parse(&report.to_json_full(None, Some(&analysis))).unwrap();
+    let pc = j.get("pareto_clocks").unwrap();
+    let n_cand = pc.arr_field("candidates").len();
+    assert_eq!(n_cand, raw.len());
+    let n_cells = j.arr_field("cells").len();
+    for c in pc.arr_field("candidates") {
+        assert!(c.usize_field("cell") < n_cells);
+    }
+    for f in pc.arr_field("fronts") {
+        for idx in f.arr_field("frontier") {
+            assert!(idx.as_usize().unwrap() < n_cand);
+        }
+        for d in f.arr_field("dominated") {
+            assert!(d.usize_field("candidate") < n_cand);
+            assert!(d.usize_field("by") < n_cand);
+        }
+    }
+    // Plain to_json stays free of both analyses (BENCH compatibility).
+    assert!(!report.to_json().contains("\"pareto\""));
+    assert!(!report.to_json().contains("\"pareto_clocks\""));
+}
+
 #[test]
 fn parallel_sweep_is_byte_identical_to_serial_for_any_job_count() {
     // The acceptance criterion for `--jobs N`: identical JSON documents
@@ -193,6 +324,43 @@ fn parallel_sweep_is_byte_identical_to_serial_for_any_job_count() {
                 a.design().to_json(),
                 b.design().to_json(),
                 "jobs={jobs}: golden-baseline artifact bytes must match ({})",
+                a.artifact_file_name()
+            );
+        }
+    }
+}
+
+#[test]
+fn uneven_simulated_cells_stay_byte_identical_across_job_counts() {
+    // The work-stealing stress case: per-cell costs differ by orders of
+    // magnitude (a cycle-simulated MobileNetV2 cell vs a predict-only-ish
+    // tiny ShuffleNetV2/edge cell), so with chunked distribution one
+    // worker's deque starts loaded with the expensive cells and the rest
+    // must steal. Whatever the steal interleaving, `--jobs 1/2/8` must
+    // produce byte-identical documents and per-cell artifacts.
+    let mut serial =
+        SweepSpec::from_csv(Some("mobilenet_v2,shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+    serial.frames = Some(1);
+    let serial_report = serial.run();
+    assert_eq!(serial_report.cells.len(), 4);
+    assert!(
+        serial_report.cells.iter().any(|c| c.sim().is_some()),
+        "premise: the sweep actually simulated"
+    );
+    let mut parallel = serial.clone();
+    for jobs in [2, 8] {
+        parallel.jobs = jobs;
+        let par_report = parallel.run();
+        assert_eq!(
+            serial_report.to_json(),
+            par_report.to_json(),
+            "jobs={jobs}: uneven (sim-enabled) sweep JSON must be byte-identical to serial"
+        );
+        for (a, b) in serial_report.cells.iter().zip(&par_report.cells) {
+            assert_eq!(
+                a.design().to_json(),
+                b.design().to_json(),
+                "jobs={jobs}: artifact bytes must match ({})",
                 a.artifact_file_name()
             );
         }

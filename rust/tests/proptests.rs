@@ -518,3 +518,110 @@ fn prop_window_geometry_matches_brute_force() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// Sweep cell cache: save/load round-trip, no stale hits (ISSUE 5)
+// ---------------------------------------------------------------------
+
+/// One randomly drawn single-cell sweep over a custom platform budget.
+#[derive(Debug, Clone)]
+struct CacheCase {
+    net: &'static str,
+    sram_bytes: u64,
+    dsp_budget: usize,
+    clock_hz: f64,
+    granularity: Granularity,
+    clocks_hz: Vec<f64>,
+}
+
+fn cache_case(r: &mut Rng) -> CacheCase {
+    CacheCase {
+        net: *r.pick(&["mobilenet_v1", "mobilenet_v2", "shufflenet_v1", "shufflenet_v2"]),
+        sram_bytes: r.range(256 * 1024, 4 * 1024 * 1024) as u64,
+        dsp_budget: r.range(64, 2400),
+        clock_hz: r.range(100, 350) as f64 * 1.0e6,
+        granularity: *r.pick(&[Granularity::Fgpm, Granularity::Factorized]),
+        clocks_hz: match r.range(0, 2) {
+            0 => vec![],
+            1 => vec![150.0e6],
+            _ => vec![100.0e6, 250.0e6],
+        },
+    }
+}
+
+fn cache_case_spec(case: &CacheCase, cache_dir: Option<std::path::PathBuf>) -> repro::SweepSpec {
+    repro::SweepSpec {
+        nets: vec![nets::by_name(case.net).unwrap()],
+        platforms: vec![Platform::custom("prop", case.sram_bytes, case.dsp_budget)
+            .with_clock_hz(case.clock_hz)],
+        granularities: vec![case.granularity],
+        clocks_hz: case.clocks_hz.clone(),
+        cache_dir,
+        ..repro::SweepSpec::default()
+    }
+}
+
+#[test]
+fn prop_sweep_cache_round_trips_and_never_serves_stale_cells() {
+    let root = std::env::temp_dir().join("repro_prop_sweep_cache");
+    let _ = std::fs::remove_dir_all(&root);
+    let mut case_no = 0u64;
+    // 8 cases x (3 + 5x2) runs: each case costs ~13 single-cell builds.
+    check("sweep_cache", 8, cache_case, |case| {
+        case_no += 1;
+        let dir = root.join(format!("case{case_no}"));
+        let spec = cache_case_spec(case, Some(dir.clone()));
+        let uncached = cache_case_spec(case, None).run();
+
+        // Round-trip: cold fills, warm serves, bytes never move.
+        let cold = spec.run();
+        if cold.cache != Some(repro::CacheStats { hits: 0, misses: 1 }) {
+            return Err(format!("cold stats {:?}", cold.cache));
+        }
+        let warm = spec.run();
+        if warm.cache != Some(repro::CacheStats { hits: 1, misses: 0 }) {
+            return Err(format!("warm stats {:?}", warm.cache));
+        }
+        for (label, report) in [("cold", &cold), ("warm", &warm)] {
+            if report.to_json() != uncached.to_json() {
+                return Err(format!("{label} cached bytes differ from uncached"));
+            }
+        }
+
+        // No stale hits: perturbing any single key component must MISS
+        // and reproduce the perturbed spec's uncached bytes exactly.
+        let mut mutants: Vec<(&str, CacheCase)> = Vec::new();
+        let mut m = case.clone();
+        m.sram_bytes += 4096;
+        mutants.push(("sram_budget", m));
+        let mut m = case.clone();
+        m.dsp_budget += 2;
+        mutants.push(("dsp_budget", m));
+        let mut m = case.clone();
+        m.clock_hz += 1.0e6;
+        mutants.push(("clock", m));
+        let mut m = case.clone();
+        m.granularity = match case.granularity {
+            Granularity::Fgpm => Granularity::Factorized,
+            Granularity::Factorized => Granularity::Fgpm,
+        };
+        mutants.push(("granularity", m));
+        let mut m = case.clone();
+        m.clocks_hz.push(317.0e6);
+        mutants.push(("clocks_axis", m));
+        for (which, mutant) in mutants {
+            let report = cache_case_spec(&mutant, Some(dir.clone())).run();
+            let stats = report.cache.unwrap();
+            if stats.hits != 0 {
+                return Err(format!("changing {which} still hit the cache: {stats:?}"));
+            }
+            let fresh = cache_case_spec(&mutant, None).run();
+            if report.to_json() != fresh.to_json() {
+                return Err(format!("{which}: mutated cached bytes differ from uncached"));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,15 +1,18 @@
 //! Coverage of the `repro sweep` subcommand's parsing and output
 //! surface, exercised through the same library entry points `main.rs`
-//! delegates to (`SweepSpec::from_csv`, `SweepReport::to_json`,
+//! delegates to (`SweepSpec::from_csv`, `SweepSpec::resolve_cache_flags`,
+//! `sweep::validate_pareto_clocks`, `SweepReport::to_json`,
 //! `SweepReport::save_designs`) — unknown axis names, empty matrices,
-//! JSON that parses back through `util::json`, and `--save-dir`
+//! conflicting flag combinations with helpful messages, JSON that parses
+//! back through `util::json`, and `--save-dir` / `--cache-dir`
 //! round-trips.
 
 use std::collections::BTreeSet;
+use std::path::PathBuf;
 
 use repro::alloc::Granularity;
 use repro::sim::SimOptions;
-use repro::sweep::SweepSpec;
+use repro::sweep::{self, CacheStats, SweepSpec};
 use repro::util::json::Json;
 use repro::{Design, Platform};
 
@@ -171,6 +174,91 @@ fn clocks_axis_parses_like_the_cli_and_flows_into_cells() {
     assert_eq!(pts.len(), 2);
     assert_eq!(pts[0].usize_field("clock_hz"), 150_000_000);
     assert!(pts[0].get("peak_gops").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn cache_flags_resolve_like_the_cli_and_conflicts_explain_themselves() {
+    // Neither flag: no cache. --cache alone: the default directory.
+    // --cache-dir DIR alone: DIR. Both: a helpful conflict error that
+    // names both flags instead of silently preferring one.
+    assert_eq!(SweepSpec::resolve_cache_flags(false, None).unwrap(), None);
+    assert_eq!(
+        SweepSpec::resolve_cache_flags(true, None).unwrap(),
+        Some(PathBuf::from(".sweep-cache"))
+    );
+    assert_eq!(
+        SweepSpec::resolve_cache_flags(false, Some("warm/cells")).unwrap(),
+        Some(PathBuf::from("warm/cells"))
+    );
+    let err = SweepSpec::resolve_cache_flags(true, Some("warm/cells")).unwrap_err();
+    assert!(err.contains("--cache"), "{err}");
+    assert!(err.contains("conflicts with --cache-dir"), "{err}");
+    assert!(err.contains("warm/cells"), "names the directory: {err}");
+    assert!(err.contains("exactly one"), "says how to fix it: {err}");
+}
+
+#[test]
+fn pareto_clocks_without_a_clock_axis_is_rejected_helpfully() {
+    // --pareto-clocks needs the --clocks axis that feeds its fourth
+    // dimension; the error must name the missing flag.
+    assert!(sweep::validate_pareto_clocks(false, &[]).is_ok());
+    assert!(sweep::validate_pareto_clocks(false, &[150.0e6]).is_ok());
+    assert!(sweep::validate_pareto_clocks(true, &[150.0e6, 300.0e6]).is_ok());
+    let err = sweep::validate_pareto_clocks(true, &[]).unwrap_err();
+    assert!(err.contains("--pareto-clocks"), "{err}");
+    assert!(err.contains("--clocks"), "{err}");
+}
+
+#[test]
+fn cache_dir_spec_round_trips_with_stats_and_stable_documents() {
+    let dir = std::env::temp_dir().join("repro_sweep_cli_cache_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+    spec.cache_dir = Some(dir.clone());
+    let cold = spec.run();
+    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2 }));
+    assert_eq!(cold.cache.unwrap().hit_rate(), 0.0);
+    let warm = spec.run();
+    assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0 }));
+    assert_eq!(warm.cache.unwrap().hit_rate(), 1.0);
+    // The stats line CI greps on the warm step.
+    let line = warm.cache.unwrap().summary(&dir);
+    assert!(line.contains("2 hits, 0 misses"), "{line}");
+    assert!(line.contains("100.0% hit rate"), "{line}");
+    // The JSON document never embeds stats — warm/cold stay diffable.
+    assert_eq!(cold.to_json(), warm.to_json());
+    assert!(!cold.to_json().contains("\"cache\""));
+    // The cache directory holds exactly one content-keyed entry per cell.
+    let entries = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".cell.json")
+        })
+        .count();
+    assert_eq!(entries, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pareto_clocks_json_document_embeds_candidates_next_to_cells() {
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+    spec.clocks_hz = SweepSpec::parse_clocks_csv("150,200").unwrap();
+    let report = spec.run();
+    let analysis = report.pareto_clocks();
+    let text = report.to_json_full(None, Some(&analysis));
+    assert!(!text.contains('\n'), "one line");
+    let j = Json::parse(&text).unwrap();
+    let pc = j.get("pareto_clocks").expect("embedded analysis");
+    assert_eq!(pc.arr_field("candidates").len(), 4, "2 cells x 2 clocks");
+    assert_eq!(pc.arr_field("fronts").len(), 1, "one network");
+    for c in pc.arr_field("candidates") {
+        assert!(c.usize_field("cell") < j.arr_field("cells").len());
+        assert!(c.get("fps").unwrap().as_f64().unwrap() > 0.0);
+        let hz = c.get("clock_hz").unwrap().as_f64().unwrap();
+        assert!(hz == 150.0e6 || hz == 200.0e6);
+    }
+    // Without the flag the document stays analysis-free.
+    assert!(!report.to_json().contains("pareto_clocks"));
 }
 
 #[test]
