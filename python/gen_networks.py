@@ -1,0 +1,330 @@
+#!/usr/bin/env python3
+"""Generate the committed ``networks/*.json`` catalog.
+
+This script is the Python twin of the Rust IR front-end (``rust/src/ir``):
+it mirrors ``GraphBuilder`` node-for-node and emits the exact byte format
+of ``ir::to_json`` — fixed key order, one node per line, integral numbers
+— so the committed files diff cleanly and the guard test in
+``rust/tests/ir.rs`` can assert byte-equality between the two writers for
+every zoo network.
+
+Why a Python generator at all: the zoo graphs live in Rust, but the
+catalog also carries networks the zoo does *not* build (MobileNetV2-0.5x
+below), and those need a reproducible, reviewable source rather than a
+hand-typed JSON blob. Regenerate with:
+
+    python3 python/gen_networks.py
+
+which rewrites every file under ``networks/``. The Rust loader
+(``repro net <file>``, ``repro sweep --net-file``) validates each one —
+CI runs that over the whole directory.
+"""
+
+from __future__ import annotations
+
+import os
+
+SCHEMA_FORMAT = "repro-net"
+SCHEMA_VERSION = 1
+
+
+def window_out(in_size: int, k: int, stride: int, pad: int) -> int:
+    """Windowed-op output size; integer division exactly as the Rust IR."""
+    return (in_size + 2 * pad - k) // stride + 1
+
+
+class GraphBuilder:
+    """Line-for-line mirror of ``rust/src/ir/mod.rs``'s ``GraphBuilder``.
+
+    Nodes are stored as ``(name, block, op, inputs, fields)`` where
+    ``fields`` is the ordered list of op-specific (key, value) pairs in
+    the exact order ``ir::to_json`` writes them.
+    """
+
+    def __init__(self, name: str, input_size: int, input_ch: int) -> None:
+        self.name = name
+        self.input_size = input_size
+        self.input_ch = input_ch
+        self.nodes: list[tuple[str, str, str, list[int], list[tuple[str, int]]]] = []
+        self.shapes: list[tuple[int, int]] = []  # (size, ch) per node
+        self._block = ""
+        self.cur: int | None = None
+
+    def block(self, name: str) -> None:
+        self._block = name
+
+    def cursor(self) -> int | None:
+        return self.cur
+
+    def set_cursor(self, at: int | None) -> None:
+        self.cur = at
+
+    def _shape_at(self, at: int | None) -> tuple[int, int]:
+        if at is None:
+            return (self.input_size, self.input_ch)
+        return self.shapes[at]
+
+    def cur_ch(self) -> int:
+        return self._shape_at(self.cur)[1]
+
+    def cur_size(self) -> int:
+        return self._shape_at(self.cur)[0]
+
+    def _push(
+        self,
+        op: str,
+        fields: list[tuple[str, int]],
+        inputs: list[int],
+        out: tuple[int, int],
+    ) -> int:
+        idx = len(self.nodes)
+        self.nodes.append((f"{self._block}_{idx}", self._block, op, inputs, fields))
+        self.shapes.append(out)
+        self.cur = idx
+        return idx
+
+    def _push_linear(self, op: str, fields: list[tuple[str, int]], out: tuple[int, int]) -> int:
+        inputs = [] if self.cur is None else [self.cur]
+        return self._push(op, fields, inputs, out)
+
+    def conv(self, out_ch: int, k: int, stride: int, pad: int) -> int:
+        size = window_out(self.cur_size(), k, stride, pad)
+        fields = [("out_ch", out_ch), ("k", k), ("stride", stride), ("pad", pad)]
+        return self._push_linear("conv", fields, (size, out_ch))
+
+    def dwconv(self, k: int, stride: int, pad: int) -> int:
+        size, ch = self._shape_at(self.cur)
+        fields = [("k", k), ("stride", stride), ("pad", pad)]
+        return self._push_linear("dwconv", fields, (window_out(size, k, stride, pad), ch))
+
+    def pwconv(self, out_ch: int) -> int:
+        return self.gpwconv(out_ch, 1)
+
+    def gpwconv(self, out_ch: int, groups: int) -> int:
+        size = self.cur_size()
+        return self._push_linear("pwconv", [("out_ch", out_ch), ("groups", groups)], (size, out_ch))
+
+    def maxpool(self, k: int, stride: int, pad: int) -> int:
+        size, ch = self._shape_at(self.cur)
+        fields = [("k", k), ("stride", stride), ("pad", pad)]
+        return self._push_linear("maxpool", fields, (window_out(size, k, stride, pad), ch))
+
+    def avgpool(self, k: int, stride: int, pad: int) -> int:
+        size, ch = self._shape_at(self.cur)
+        fields = [("k", k), ("stride", stride), ("pad", pad)]
+        return self._push_linear("avgpool", fields, (window_out(size, k, stride, pad), ch))
+
+    def global_avgpool(self) -> int:
+        return self._push_linear("global_avgpool", [], (1, self.cur_ch()))
+
+    def fc(self, out_ch: int) -> int:
+        return self._push_linear("fc", [("out_ch", out_ch)], (1, out_ch))
+
+    def shuffle(self) -> int:
+        return self._push_linear("shuffle", [], self._shape_at(self.cur))
+
+    def split(self, keep: int) -> int:
+        return self._push_linear("split", [("keep", keep)], (self.cur_size(), keep))
+
+    def add_from(self, shortcut: int) -> int:
+        through = self.cur
+        assert through is not None, "add_from needs a through branch at the cursor"
+        return self._push("add", [], [through, shortcut], self.shapes[through])
+
+    def concat_from(self, shortcut: int) -> int:
+        through = self.cur
+        assert through is not None, "concat_from needs a through branch at the cursor"
+        t_size, t_ch = self.shapes[through]
+        s_ch = self.shapes[shortcut][1]
+        return self._push("concat", [], [through, shortcut], (t_size, t_ch + s_ch))
+
+    def to_json(self) -> str:
+        """The exact byte format of ``ir::to_json`` (guard-tested)."""
+        out = ["{"]
+        out.append(f'  "format": "{SCHEMA_FORMAT}",')
+        out.append(f'  "version": {SCHEMA_VERSION},')
+        out.append(f'  "name": "{self.name}",')
+        out.append(f'  "input": {{"size": {self.input_size}, "channels": {self.input_ch}}},')
+        out.append('  "nodes": [')
+        for i, (name, block, op, inputs, fields) in enumerate(self.nodes):
+            joined = ", ".join(str(j) for j in inputs)
+            line = f'    {{"name": "{name}", "block": "{block}", "op": "{op}", "inputs": [{joined}]'
+            for key, val in fields:
+                line += f', "{key}": {val}'
+            line += "}"
+            if i + 1 < len(self.nodes):
+                line += ","
+            out.append(line)
+        out.append("  ]")
+        out.append("}")
+        return "\n".join(out) + "\n"
+
+
+# --- Zoo graphs: transliterations of rust/src/nets/*.rs ----------------------
+
+
+def mobilenet_v1() -> GraphBuilder:
+    b = GraphBuilder("mobilenet_v1", 224, 3)
+    b.block("stem")
+    b.conv(32, 3, 2, 1)
+    pairs = [
+        (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2), (512, 1),
+        (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2), (1024, 1),
+    ]
+    for i, (out, s) in enumerate(pairs):
+        b.block(f"dsc{i + 1}")
+        b.dwconv(3, s, 1)
+        b.pwconv(out)
+    b.block("head")
+    b.global_avgpool()
+    b.fc(1000)
+    return b
+
+
+#: Inverted-residual settings (t, c, n, s) from Table 2 of the MobileNetV2
+#: paper; ``c`` is scaled by the width multiplier below.
+BOTTLENECKS = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def make_divisible(v: float, divisor: int = 8) -> int:
+    """torchvision's ``_make_divisible``: round channels to the divisor,
+    never dropping more than 10% below the unrounded value."""
+    new_v = max(divisor, int(v + divisor / 2) // divisor * divisor)
+    if new_v < 0.9 * v:
+        new_v += divisor
+    return new_v
+
+
+def mobilenet_v2(name: str = "mobilenet_v2", width: float = 1.0) -> GraphBuilder:
+    """MobileNetV2 at a width multiplier. ``width=1.0`` reproduces the zoo
+    graph byte-for-byte (``make_divisible`` is the identity on the stock
+    channel counts); ``width=0.5`` is the catalog's non-zoo LWCNN."""
+    b = GraphBuilder(name, 224, 3)
+    b.block("stem")
+    b.conv(make_divisible(32 * width), 3, 2, 1)
+    stage = 0
+    for t, c, n, s in BOTTLENECKS:
+        stage += 1
+        c = make_divisible(c * width)
+        for rep in range(n):
+            b.block(f"bneck{stage}_{rep + 1}")
+            stride = s if rep == 0 else 1
+            in_ch = b.cur_ch()
+            residual = stride == 1 and in_ch == c
+            unit_input = b.cursor()
+            if t != 1:
+                b.pwconv(in_ch * t)
+            b.dwconv(3, stride, 1)
+            b.pwconv(c)
+            if residual:
+                b.add_from(unit_input)
+    b.block("head")
+    b.pwconv(make_divisible(1280 * max(1.0, width)))
+    b.global_avgpool()
+    b.fc(1000)
+    return b
+
+
+def shufflenet_v1() -> GraphBuilder:
+    groups = 3
+    stages = [(240, 4), (480, 8), (960, 4)]
+    b = GraphBuilder("shufflenet_v1", 224, 3)
+    b.block("stem")
+    b.conv(24, 3, 2, 1)
+    b.maxpool(3, 2, 1)
+    for stage_idx, (out_ch, repeats) in enumerate(stages):
+        stage = stage_idx + 2
+        for rep in range(repeats):
+            b.block(f"stage{stage}_{rep + 1}")
+            in_ch = b.cur_ch()
+            mid = out_ch // 4
+            unit_input = b.cursor()
+            if rep == 0:
+                g1 = 1 if stage == 2 else groups
+                b.gpwconv(mid, g1)
+                b.shuffle()
+                b.dwconv(3, 2, 1)
+                main_out = b.gpwconv(out_ch - in_ch, groups)
+                b.set_cursor(unit_input)
+                b.avgpool(3, 2, 1)
+                b.concat_from(main_out)
+            else:
+                b.gpwconv(mid, groups)
+                b.shuffle()
+                b.dwconv(3, 1, 1)
+                b.gpwconv(out_ch, groups)
+                b.add_from(unit_input)
+    b.block("head")
+    b.global_avgpool()
+    b.fc(1000)
+    return b
+
+
+def shufflenet_v2() -> GraphBuilder:
+    stages = [(116, 4), (232, 8), (464, 4)]
+    b = GraphBuilder("shufflenet_v2", 224, 3)
+    b.block("stem")
+    b.conv(24, 3, 2, 1)
+    b.maxpool(3, 2, 1)
+    for stage_idx, (out_ch, repeats) in enumerate(stages):
+        stage = stage_idx + 2
+        half = out_ch // 2
+        for rep in range(repeats):
+            b.block(f"stage{stage}_{rep + 1}")
+            if rep == 0:
+                unit_input = b.cursor()
+                b.dwconv(3, 2, 1)
+                a_out = b.pwconv(half)
+                b.set_cursor(unit_input)
+                b.pwconv(half)
+                b.dwconv(3, 2, 1)
+                b.pwconv(half)
+                b.concat_from(a_out)
+                b.shuffle()
+            else:
+                split = b.split(half)
+                b.pwconv(half)
+                b.dwconv(3, 1, 1)
+                b.pwconv(half)
+                b.concat_from(split)
+                b.shuffle()
+    b.block("head")
+    b.pwconv(1024)
+    b.global_avgpool()
+    b.fc(1000)
+    return b
+
+
+def catalog() -> list[GraphBuilder]:
+    return [
+        mobilenet_v1(),
+        mobilenet_v2(),
+        shufflenet_v1(),
+        shufflenet_v2(),
+        # The non-zoo member: MobileNetV2 at a 0.5x width multiplier
+        # (channels 8/16/16/32/48/80/160, stem 16, head 1280) — exercises
+        # the --net-file path end-to-end without a Rust builder.
+        mobilenet_v2("mobilenet_v2_050", 0.5),
+    ]
+
+
+def main() -> None:
+    out_dir = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", "networks"))
+    os.makedirs(out_dir, exist_ok=True)
+    for g in catalog():
+        path = os.path.join(out_dir, f"{g.name}.json")
+        with open(path, "w", encoding="ascii", newline="\n") as f:
+            f.write(g.to_json())
+        print(f"wrote {path} ({len(g.nodes)} nodes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -454,7 +454,7 @@ impl Design {
             .map(|a| Json::Arr(vec![Json::Num(a.pw as f64), Json::Num(a.pf as f64)]))
             .collect();
         let p = &self.performance;
-        obj(vec![
+        let mut fields = vec![
             ("allocs", Json::Arr(allocs)),
             ("boundary", Json::Num(self.ce_plan.boundary as f64)),
             ("boundary_min_sram", Json::Num(self.memory.boundary_min_sram as f64)),
@@ -481,8 +481,18 @@ impl Design {
             ("sram_bytes", Json::Num(self.sram_bytes as f64)),
             ("sram_bytes_alg1", Json::Num(self.memory.sram_bytes as f64)),
             ("version", Json::Num(1.0)),
-        ])
-        .to_string()
+        ];
+        // Networks the reload path cannot rebuild by name (anything that is
+        // not byte-for-byte a zoo member — `--net-file` loads, programmatic
+        // IR graphs) embed their full lowered definition, so
+        // `from_json`/`from_json_unchecked` stay self-contained. Zoo
+        // artifacts stay byte-identical to the pre-IR format.
+        let is_zoo = nets::by_name(&self.net.name)
+            .is_some_and(|z| format!("{z:?}") == format!("{:?}", self.net));
+        if !is_zoo {
+            fields.push(("network_def", nets::network_to_json_value(&self.net)));
+        }
+        obj(fields).to_string()
     }
 
     /// One-line machine-readable summary (stable sorted keys) — the
@@ -517,9 +527,7 @@ impl Design {
                 return Err(format!("design json: unsupported version {v} (this reader supports 1)"));
             }
         }
-        let net_name = str_field(&j, "network")?;
-        let net = nets::by_name(&net_name)
-            .ok_or_else(|| format!("design json: network {net_name:?} is not in the zoo"))?;
+        let net = network_from_design_json(&j)?;
         let platform = Platform::from_json_value(
             j.get("platform").ok_or_else(|| "design json: missing \"platform\"".to_string())?,
         )?;
@@ -589,9 +597,7 @@ impl Design {
             }
             None => return Err("design json: missing number \"version\"".to_string()),
         }
-        let net_name = str_field(&j, "network")?;
-        let net = nets::by_name(&net_name)
-            .ok_or_else(|| format!("design json: network {net_name:?} is not in the zoo"))?;
+        let net = network_from_design_json(&j)?;
         let platform = Platform::from_json_value(
             j.get("platform").ok_or_else(|| "design json: missing \"platform\"".to_string())?,
         )?;
@@ -668,6 +674,31 @@ impl Design {
             dram_bytes: num("dram_bytes")? as u64,
         })
     }
+}
+
+/// Resolve the network a design artifact was built for: an embedded
+/// `network_def` (non-zoo artifacts — `--net-file` loads) takes
+/// precedence and is validated + cross-checked against the artifact's
+/// `network` name; otherwise the name must resolve in the zoo.
+fn network_from_design_json(j: &Json) -> Result<Network, String> {
+    let net_name = str_field(j, "network")?;
+    if let Some(def) = j.get("network_def") {
+        let net = nets::network_from_json_value(def).map_err(|e| format!("design json: {e}"))?;
+        if net.name != net_name {
+            return Err(format!(
+                "design json: embedded network_def describes {:?} but the artifact names \
+                 {net_name:?}",
+                net.name
+            ));
+        }
+        return Ok(net);
+    }
+    nets::by_name(&net_name).ok_or_else(|| {
+        format!(
+            "design json: network {net_name:?} is not in the zoo and the artifact embeds no \
+             network_def"
+        )
+    })
 }
 
 /// Stable wire name of a [`Granularity`].
@@ -839,6 +870,33 @@ mod tests {
             // rust/tests/differential.rs (its own binary, serialized);
             // counter checks here would race sibling unit tests.
         }
+    }
+
+    #[test]
+    fn non_zoo_networks_embed_their_definition_and_reload() {
+        // A renamed zoo net is structurally valid but unknown to by_name —
+        // exactly the shape `--net-file` loads produce.
+        let mut net = nets::mobilenet_v2();
+        net.name = "mobilenet_v2_custom".to_string();
+        let d = Design::builder(&net).build();
+        let text = d.to_json();
+        assert!(text.contains("\"network_def\":"), "non-zoo artifact must embed its network");
+        // Zoo artifacts stay byte-identical to the pre-IR format.
+        let zoo_text = Design::builder(&nets::mobilenet_v2()).build().to_json();
+        assert!(!zoo_text.contains("network_def"));
+        // Both readers rebuild the embedded network, and reload is a fixed
+        // point for each.
+        let checked = Design::from_json(&text).expect("checked reload");
+        assert_eq!(checked.network().name, "mobilenet_v2_custom");
+        assert_eq!(checked.to_json(), text);
+        let unchecked = Design::from_json_unchecked(&text).expect("unchecked reload");
+        assert_eq!(unchecked.to_json(), text, "not a fixed point");
+        // A name/definition mismatch fails loudly.
+        let bad =
+            text.replace("\"network\":\"mobilenet_v2_custom\"", "\"network\":\"mobilenet_v2\"");
+        assert_ne!(bad, text, "replacement should have applied");
+        let err = Design::from_json(&bad).unwrap_err();
+        assert!(err.contains("network_def"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Versioned JSON network descriptions (`format: "repro-net"`).
+//!
+//! [`to_json`] writes a stable, line-per-node document (fixed key order,
+//! integral numbers) so committed `networks/*.json` files diff cleanly;
+//! [`from_json`] parses + validates, rejecting malformed documents with
+//! the same actionable errors as [`Graph::validate`]. The schema is
+//! documented with a worked example in `docs/net_schema.md`.
+
+use crate::util::json::Json;
+
+use super::{Graph, Node, Op, SCHEMA_FORMAT, SCHEMA_VERSION};
+
+/// Serialize a graph as a versioned `repro-net` JSON document: fixed key
+/// order, one node per line, op-specific fields only where the op defines
+/// them. `python/gen_networks.py` emits this byte format exactly, and the
+/// committed-catalog guard test in `rust/tests/ir.rs` pins the two
+/// writers together.
+pub fn to_json(graph: &Graph) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"format\": {},\n", Json::Str(SCHEMA_FORMAT.to_string())));
+    out.push_str(&format!("  \"version\": {SCHEMA_VERSION},\n"));
+    out.push_str(&format!("  \"name\": {},\n", Json::Str(graph.name.clone())));
+    out.push_str(&format!(
+        "  \"input\": {{\"size\": {}, \"channels\": {}}},\n",
+        graph.input_size, graph.input_ch
+    ));
+    out.push_str("  \"nodes\": [\n");
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let inputs =
+            node.inputs.iter().map(|j| j.to_string()).collect::<Vec<_>>().join(", ");
+        let mut line = format!(
+            "    {{\"name\": {}, \"block\": {}, \"op\": {}, \"inputs\": [{inputs}]",
+            Json::Str(node.name.clone()),
+            Json::Str(node.block.clone()),
+            Json::Str(node.op.wire_name().to_string()),
+        );
+        match &node.op {
+            Op::Conv { out_ch, k, stride, pad } => {
+                line.push_str(&format!(
+                    ", \"out_ch\": {out_ch}, \"k\": {k}, \"stride\": {stride}, \"pad\": {pad}"
+                ));
+            }
+            Op::DwConv { k, stride, pad }
+            | Op::MaxPool { k, stride, pad }
+            | Op::AvgPool { k, stride, pad } => {
+                line.push_str(&format!(", \"k\": {k}, \"stride\": {stride}, \"pad\": {pad}"));
+            }
+            Op::PwConv { out_ch, groups } => {
+                line.push_str(&format!(", \"out_ch\": {out_ch}, \"groups\": {groups}"));
+            }
+            Op::Fc { out_ch } => line.push_str(&format!(", \"out_ch\": {out_ch}")),
+            Op::Split { keep } => line.push_str(&format!(", \"keep\": {keep}")),
+            Op::GlobalAvgPool | Op::Add | Op::Concat | Op::Shuffle => {}
+        }
+        line.push('}');
+        if i + 1 < graph.nodes.len() {
+            line.push(',');
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+fn str_field(obj: &Json, key: &str, at: &str) -> Result<String, String> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("{at}: missing or non-string field {key:?}"))
+}
+
+fn usize_field(obj: &Json, key: &str, at: &str) -> Result<usize, String> {
+    let n = obj
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{at}: missing or non-numeric field {key:?}"))?;
+    if n < 0.0 || n.fract() != 0.0 || n >= 9.0e15 {
+        return Err(format!("{at}: field {key:?} must be a non-negative integer, got {n}"));
+    }
+    Ok(n as usize)
+}
+
+/// Parse and validate a `repro-net` JSON document.
+pub fn from_json(text: &str) -> Result<Graph, String> {
+    let doc = Json::parse(text).map_err(|e| format!("network description: {e}"))?;
+    let format = str_field(&doc, "format", "network description")?;
+    if format != SCHEMA_FORMAT {
+        return Err(format!(
+            "network description: format {format:?} is not {SCHEMA_FORMAT:?} (is this a net file?)"
+        ));
+    }
+    let version = usize_field(&doc, "version", "network description")? as u64;
+    if version != SCHEMA_VERSION {
+        return Err(format!(
+            "network description: schema version {version} is not the supported version \
+             {SCHEMA_VERSION}"
+        ));
+    }
+    let name = str_field(&doc, "name", "network description")?;
+    let input = doc
+        .get("input")
+        .ok_or_else(|| format!("network {name:?}: missing \"input\" object"))?;
+    let input_size = usize_field(input, "size", &format!("network {name:?} input"))?;
+    let input_ch = usize_field(input, "channels", &format!("network {name:?} input"))?;
+    let nodes_json = doc
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("network {name:?}: missing \"nodes\" array"))?;
+
+    let mut nodes = Vec::with_capacity(nodes_json.len());
+    for (i, nj) in nodes_json.iter().enumerate() {
+        let at = format!("network {name:?} node {i}");
+        let node_name = str_field(nj, "name", &at)?;
+        let at = format!("network {name:?} node {i} ({node_name:?})");
+        let block = str_field(nj, "block", &at)?;
+        let op_name = str_field(nj, "op", &at)?;
+        let inputs_json = nj
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{at}: missing \"inputs\" array"))?;
+        let mut inputs = Vec::with_capacity(inputs_json.len());
+        for (slot, v) in inputs_json.iter().enumerate() {
+            let n = v
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .ok_or_else(|| format!("{at}: inputs[{slot}] must be a node index, got {v}"))?;
+            inputs.push(n as usize);
+        }
+        let op = match op_name.as_str() {
+            "conv" => Op::Conv {
+                out_ch: usize_field(nj, "out_ch", &at)?,
+                k: usize_field(nj, "k", &at)?,
+                stride: usize_field(nj, "stride", &at)?,
+                pad: usize_field(nj, "pad", &at)?,
+            },
+            "dwconv" => Op::DwConv {
+                k: usize_field(nj, "k", &at)?,
+                stride: usize_field(nj, "stride", &at)?,
+                pad: usize_field(nj, "pad", &at)?,
+            },
+            "pwconv" => Op::PwConv {
+                out_ch: usize_field(nj, "out_ch", &at)?,
+                groups: match nj.get("groups") {
+                    Some(_) => usize_field(nj, "groups", &at)?,
+                    None => 1,
+                },
+            },
+            "maxpool" => Op::MaxPool {
+                k: usize_field(nj, "k", &at)?,
+                stride: usize_field(nj, "stride", &at)?,
+                pad: usize_field(nj, "pad", &at)?,
+            },
+            "avgpool" => Op::AvgPool {
+                k: usize_field(nj, "k", &at)?,
+                stride: usize_field(nj, "stride", &at)?,
+                pad: usize_field(nj, "pad", &at)?,
+            },
+            "global_avgpool" => Op::GlobalAvgPool,
+            "fc" => Op::Fc { out_ch: usize_field(nj, "out_ch", &at)? },
+            "add" => Op::Add,
+            "concat" => Op::Concat,
+            "split" => Op::Split { keep: usize_field(nj, "keep", &at)? },
+            "shuffle" => Op::Shuffle,
+            other => {
+                return Err(format!(
+                    "{at}: unknown op {other:?} (known ops: conv, dwconv, pwconv, maxpool, \
+                     avgpool, global_avgpool, fc, add, concat, split, shuffle)"
+                ))
+            }
+        };
+        nodes.push(Node { name: node_name, block, op, inputs });
+    }
+
+    let graph = Graph { name, input_size, input_ch, nodes };
+    graph.validate()?;
+    Ok(graph)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::GraphBuilder;
+    use super::*;
+
+    fn toy() -> Graph {
+        let mut b = GraphBuilder::new("toy", 8, 3);
+        b.block("stem");
+        b.conv(4, 3, 2, 1);
+        b.block("unit");
+        let start = b.cursor().unwrap();
+        b.pwconv(4);
+        b.dwconv(3, 1, 1);
+        b.add_from(start);
+        b.block("head");
+        b.global_avgpool();
+        b.fc(10);
+        b.finish()
+    }
+
+    #[test]
+    fn to_json_from_json_round_trips() {
+        let g = toy();
+        let text = to_json(&g);
+        let back = from_json(&text).unwrap();
+        assert_eq!(g, back);
+        // Serialization is a fixed point.
+        assert_eq!(to_json(&back), text);
+    }
+
+    #[test]
+    fn version_and_format_are_enforced() {
+        let g = toy();
+        let text = to_json(&g);
+        let wrong_version = text.replace("\"version\": 1", "\"version\": 99");
+        let err = from_json(&wrong_version).unwrap_err();
+        assert!(err.contains("schema version 99"), "{err}");
+        let wrong_format = text.replace("\"format\": \"repro-net\"", "\"format\": \"onnx\"");
+        let err = from_json(&wrong_format).unwrap_err();
+        assert!(err.contains("\"onnx\""), "{err}");
+    }
+
+    #[test]
+    fn unknown_ops_and_bad_fields_are_named() {
+        let g = toy();
+        let text = to_json(&g);
+        let bad_op = text.replace("\"op\": \"dwconv\"", "\"op\": \"winograd\"");
+        let err = from_json(&bad_op).unwrap_err();
+        assert!(err.contains("unknown op \"winograd\""), "{err}");
+        assert!(err.contains("known ops"), "{err}");
+
+        let missing = text.replace(", \"k\": 3, \"stride\": 1, \"pad\": 1", "");
+        let err = from_json(&missing).unwrap_err();
+        assert!(err.contains("\"k\""), "{err}");
+    }
+
+    #[test]
+    fn malformed_graphs_fail_validation_on_load() {
+        let g = toy();
+        // Point the add's shortcut edge at an undefined node.
+        let text = to_json(&g).replace("\"inputs\": [2, 0]", "\"inputs\": [2, 77]");
+        let err = from_json(&text).unwrap_err();
+        assert!(err.contains("dangling edge"), "{err}");
+    }
+
+    #[test]
+    fn pwconv_groups_default_to_one() {
+        let g = toy();
+        let text = to_json(&g).replace(", \"groups\": 1", "");
+        let back = from_json(&text).unwrap();
+        assert_eq!(g, back);
+    }
+}

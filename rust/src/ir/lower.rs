@@ -1,0 +1,282 @@
+//! Lowering: layer-graph IR -> the linear streaming [`Network`] (one CE
+//! per layer + SCB edges) that Alg 1/Alg 2, the Eq 1-14 model, the cycle
+//! simulator, and the sweep engine consume.
+//!
+//! The pass is 1:1 — node `i` becomes layer `i` — so it only has to
+//! resolve *how each node's inputs map onto the streaming order*:
+//!
+//! * an edge from the immediately preceding node is the stream itself
+//!   ([`LayerSrc::Prev`]);
+//! * an edge from an earlier node `j` becomes a tee ([`LayerSrc::Tee`])
+//!   of the first layer whose stream input is `j`'s output (the paper's
+//!   two-branch ShuffleNet units, where both branches read the unit
+//!   input);
+//! * a two-input join (add/concat) must consume the preceding node as its
+//!   through branch; the other edge becomes the [`Scb`] shortcut whose
+//!   snapshot is taken where that producer's output enters the stream.
+//!
+//! Graphs whose edges cannot be expressed this way (a stream no earlier
+//! layer carries) are rejected with an error naming the node — the linear
+//! multi-CE pipeline genuinely cannot stream them.
+
+use crate::nets::{Layer, LayerKind, LayerSrc, Network, Scb};
+
+use super::{Graph, Op, Shape};
+
+/// Lower a validated graph to the streaming network representation.
+/// Lowering the zoo graphs reproduces the pre-IR hand-built networks
+/// field-for-field (`rust/tests/ir.rs` pins this against the golden
+/// baselines).
+pub fn lower(graph: &Graph) -> Result<Network, String> {
+    let shapes = graph.shapes()?;
+    let input_shape = Shape { size: graph.input_size, ch: graph.input_ch };
+    // stream_src[t]: the node whose output layer t consumes as its stream
+    // input (None = the network input), whether via Prev or a tee.
+    let mut stream_src: Vec<Option<usize>> = Vec::with_capacity(graph.nodes.len());
+    let mut layers: Vec<Layer> = Vec::with_capacity(graph.nodes.len());
+    let mut scbs: Vec<Scb> = Vec::new();
+    // Block index = run-length index over consecutive block-name runs,
+    // matching how the zoo builders number their `block()` calls.
+    let mut block = 0usize;
+    let mut prev_block_name: Option<&str> = None;
+
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let at = |msg: String| format!("graph {:?}: node {i} ({:?}): {msg}", graph.name, node.name);
+        if prev_block_name.is_some_and(|p| p != node.block) {
+            block += 1;
+        }
+        prev_block_name = Some(&node.block);
+
+        // Resolve the stream source and (for joins) the SCB shortcut.
+        let (main_in, src) = if node.op.is_join() {
+            let (a, b) = (node.inputs[0], node.inputs[1]);
+            let shortcut = if a + 1 == i {
+                b
+            } else if b + 1 == i {
+                a
+            } else {
+                return Err(at(format!(
+                    "join consumes nodes {a} and {b}, but neither is the immediately preceding \
+                     node {} — the streaming order cannot close this shortcut",
+                    i - 1
+                )));
+            };
+            // The shortcut snapshot is the stream entering layer
+            // `shortcut + 1` (== the output of layer `shortcut`).
+            scbs.push(Scb { from_layer: shortcut + 1, join_layer: i });
+            (Some(i - 1), LayerSrc::Prev)
+        } else {
+            match node.inputs.first().copied() {
+                None if i == 0 => (None, LayerSrc::Prev),
+                None => {
+                    let t = stream_src.iter().position(Option::is_none).ok_or_else(|| {
+                        at("reads the network input, but no earlier layer streams it".to_string())
+                    })?;
+                    (None, LayerSrc::Tee(t))
+                }
+                Some(j) if j + 1 == i => (Some(j), LayerSrc::Prev),
+                Some(j) => {
+                    let t = stream_src.iter().position(|s| *s == Some(j)).ok_or_else(|| {
+                        at(format!(
+                            "reads node {j} ({:?}), but no earlier layer consumes that output as \
+                             its stream input, so there is nothing to tee",
+                            graph.nodes[j].name
+                        ))
+                    })?;
+                    (Some(j), LayerSrc::Tee(t))
+                }
+            }
+        };
+        stream_src.push(main_in);
+
+        let in_shape = match main_in {
+            None => input_shape,
+            Some(j) => shapes[j],
+        };
+        let out_shape = shapes[i];
+        let (kind, k, stride, pad, groups) = match &node.op {
+            Op::Conv { k, stride, pad, .. } => (LayerKind::Stc, *k, *stride, *pad, 1),
+            Op::DwConv { k, stride, pad } => (LayerKind::Dwc, *k, *stride, *pad, 1),
+            Op::PwConv { groups, .. } => (LayerKind::Pwc, 1, 1, 0, *groups),
+            Op::MaxPool { k, stride, pad } => (LayerKind::MaxPool, *k, *stride, *pad, 1),
+            Op::AvgPool { k, stride, pad } => (LayerKind::AvgPool, *k, *stride, *pad, 1),
+            Op::GlobalAvgPool => (LayerKind::AvgPool, in_shape.size, 1, 0, 1),
+            Op::Fc { .. } => (LayerKind::Fc, 1, 1, 0, 1),
+            Op::Add => (LayerKind::Add, 1, 1, 0, 1),
+            Op::Concat => (LayerKind::Concat, 1, 1, 0, 1),
+            Op::Split { .. } => (LayerKind::Split, 1, 1, 0, 1),
+            Op::Shuffle => (LayerKind::Shuffle, 1, 1, 0, 1),
+        };
+        layers.push(Layer {
+            name: node.name.clone(),
+            kind,
+            src,
+            in_ch: in_shape.ch,
+            out_ch: out_shape.ch,
+            in_size: in_shape.size,
+            out_size: out_shape.size,
+            k,
+            stride,
+            pad,
+            groups,
+            block,
+            block_name: node.block.clone(),
+        });
+    }
+
+    let net = Network {
+        name: graph.name.clone(),
+        input_size: graph.input_size,
+        input_ch: graph.input_ch,
+        layers,
+        scbs,
+    };
+    net.validate()?;
+    Ok(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{GraphBuilder, Node};
+    use super::*;
+
+    #[test]
+    fn linear_graph_lowers_to_prev_chain() {
+        let mut b = GraphBuilder::new("toy", 16, 3);
+        b.block("stem");
+        b.conv(8, 3, 2, 1);
+        b.block("body");
+        b.dwconv(3, 1, 1);
+        b.pwconv(16);
+        b.block("head");
+        b.global_avgpool();
+        b.fc(10);
+        let net = lower(&b.finish()).unwrap();
+        assert_eq!(net.layers.len(), 5);
+        assert!(net.layers.iter().all(|l| l.src == LayerSrc::Prev));
+        assert!(net.scbs.is_empty());
+        assert_eq!(net.layers[0].name, "stem_0");
+        assert_eq!(net.layers[0].block, 0);
+        assert_eq!(net.layers[1].block, 1);
+        assert_eq!(net.layers[3].block, 2);
+        // Global average pooling lowers to a full-FM window.
+        assert_eq!(net.layers[3].kind, LayerKind::AvgPool);
+        assert_eq!(net.layers[3].k, 8);
+        assert_eq!(net.layers[3].out_size, 1);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn residual_add_lowers_to_an_scb() {
+        let mut b = GraphBuilder::new("toy", 8, 4);
+        b.block("unit");
+        let u = b.conv(4, 3, 1, 1);
+        b.pwconv(8);
+        b.dwconv(3, 1, 1);
+        b.pwconv(4);
+        b.add_from(u);
+        let net = lower(&b.finish()).unwrap();
+        assert_eq!(net.scbs.len(), 1);
+        assert_eq!(net.scbs[0].from_layer, u + 1);
+        assert_eq!(net.scbs[0].join_layer, 4);
+        assert_eq!(net.layers[4].kind, LayerKind::Add);
+        // The snapshot is the residual input: layer u's output.
+        assert_eq!(net.scbs[0].snapshot_shape(&net), (8, 4));
+    }
+
+    #[test]
+    fn two_branch_unit_lowers_to_a_tee() {
+        // ShuffleNetV2-style stride-2 unit: both branches read the unit
+        // input; the second branch tees the stream the first consumes.
+        let mut b = GraphBuilder::new("toy", 8, 4);
+        b.block("stem");
+        let u = b.conv(4, 3, 1, 1);
+        b.block("unit");
+        b.dwconv(3, 2, 1);
+        let a_out = b.pwconv(6);
+        b.set_cursor(Some(u));
+        let b_first = b.pwconv(6);
+        b.dwconv(3, 2, 1);
+        b.pwconv(6);
+        b.concat_from(a_out);
+        let net = lower(&b.finish()).unwrap();
+        // The second branch's first layer tees the unit input.
+        assert_eq!(net.layers[b_first].src, LayerSrc::Tee(u + 1));
+        assert_eq!(net.scbs.len(), 1);
+        // Snapshot = the first branch's final output (entering layer b_first).
+        assert_eq!(net.scbs[0].from_layer, b_first);
+        assert_eq!(net.layers[6].kind, LayerKind::Concat);
+        assert_eq!(net.layers[6].out_ch, 12);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn unstreamable_joins_are_rejected() {
+        // A join whose through-branch is not the preceding node cannot be
+        // expressed in the linear streaming order.
+        let mut b = GraphBuilder::new("toy", 8, 4);
+        b.block("b");
+        let a = b.conv(4, 3, 1, 1);
+        let x = b.dwconv(3, 1, 1);
+        b.pwconv(4);
+        let mut g = b.finish();
+        g.nodes.push(Node {
+            name: "bad_join".into(),
+            block: "b".into(),
+            op: Op::Add,
+            inputs: vec![a, x], // neither is node 2 (the preceding node)
+        });
+        let err = lower(&g).unwrap_err();
+        assert!(err.contains("streaming order cannot close"), "{err}");
+    }
+
+    #[test]
+    fn untee_able_streams_are_rejected() {
+        // Node 2 reads node 0, but no earlier layer streams node 0's
+        // output (node 1 reads the network input), so there is no tee.
+        let g = Graph {
+            name: "toy".into(),
+            input_size: 8,
+            input_ch: 3,
+            nodes: vec![
+                Node {
+                    name: "a".into(),
+                    block: "b".into(),
+                    op: Op::Conv { out_ch: 4, k: 3, stride: 1, pad: 1 },
+                    inputs: vec![],
+                },
+                Node {
+                    name: "b".into(),
+                    block: "b".into(),
+                    op: Op::Conv { out_ch: 4, k: 3, stride: 1, pad: 1 },
+                    inputs: vec![],
+                },
+                Node {
+                    name: "c".into(),
+                    block: "b".into(),
+                    op: Op::Add,
+                    inputs: vec![1, 0],
+                },
+            ],
+        };
+        // The add itself is fine (node 1 precedes it); push a consumer of
+        // node 0's output that nothing streams, plus a join so every
+        // intermediate output is consumed (the dead-node check must not
+        // fire before the tee resolution does).
+        let mut g = g;
+        g.nodes.push(Node {
+            name: "d".into(),
+            block: "b".into(),
+            op: Op::DwConv { k: 3, stride: 1, pad: 1 },
+            inputs: vec![0],
+        });
+        g.nodes.push(Node {
+            name: "e".into(),
+            block: "b".into(),
+            op: Op::Add,
+            inputs: vec![3, 2],
+        });
+        let err = lower(&g).unwrap_err();
+        assert!(err.contains("nothing to tee"), "{err}");
+    }
+}

@@ -1,0 +1,560 @@
+//! Layer-graph IR — the network front-end that decouples *describing* an
+//! LWCNN from hand-porting it into Rust.
+//!
+//! A [`Graph`] is an explicit-edge DAG of [`Node`]s (conv / dwconv /
+//! pwconv / pools / fc / add / concat / split / shuffle), validated by a
+//! shape-inference pass ([`Graph::shapes`]) that rejects malformed graphs
+//! with actionable, node-named errors. Graphs come from three places:
+//!
+//! * the zoo builders in [`crate::nets`], which construct their graphs
+//!   through [`GraphBuilder`] (the deduplicated successor of the old
+//!   per-network `NetBuilder` topology logic);
+//! * versioned JSON network descriptions ([`from_json`] / [`to_json`],
+//!   schema in `docs/net_schema.md`) — the `repro ... --net-file` path
+//!   and the committed `networks/*.json` catalog;
+//! * programmatic construction for transform passes (fusion, rewrites)
+//!   that only become expressible over an explicit graph.
+//!
+//! Every consumer downstream of the front-end — Algorithm 1/2, the
+//! Eq 1–14 model, the cycle simulator, the sweep engine — keeps running
+//! unchanged on [`crate::nets::Network`]: the lowering pass
+//! ([`lower`], `ir/lower.rs`) turns a validated graph into the linear
+//! streaming order plus SCB edges that representation encodes. Lowering
+//! the four zoo graphs reproduces the pre-IR hand-built networks
+//! field-for-field (pinned against the golden baselines in
+//! `rust/tests/ir.rs`).
+
+mod json;
+mod lower;
+
+pub use json::{from_json, to_json};
+pub use lower::lower;
+
+use crate::nets::Network;
+
+/// Schema version of the JSON network description ([`to_json`] writes it,
+/// [`from_json`] enforces it).
+pub const SCHEMA_VERSION: u64 = 1;
+/// The `"format"` tag of a JSON network description.
+pub const SCHEMA_FORMAT: &str = "repro-net";
+
+/// One graph operation. Spatial ops carry their own kernel geometry;
+/// channel counts of the data-movement ops are inferred from inputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Standard convolution (paper: STC).
+    Conv { out_ch: usize, k: usize, stride: usize, pad: usize },
+    /// Depthwise 3x3-style convolution (paper: DWC); channels preserved.
+    DwConv { k: usize, stride: usize, pad: usize },
+    /// Pointwise 1x1 convolution (paper: PWC); `groups > 1` models the
+    /// grouped 1x1 convolutions of ShuffleNetV1.
+    PwConv { out_ch: usize, groups: usize },
+    /// Windowed max pooling.
+    MaxPool { k: usize, stride: usize, pad: usize },
+    /// Windowed average pooling (ShuffleNetV1's stride-2 shortcut).
+    AvgPool { k: usize, stride: usize, pad: usize },
+    /// Global average pooling: whatever the input spatial size, out is 1x1.
+    GlobalAvgPool,
+    /// Fully connected layer (1x1 PWC on a 1x1 FM).
+    Fc { out_ch: usize },
+    /// Element-wise shortcut addition joining exactly two equal shapes.
+    Add,
+    /// Channel concatenation of exactly two equal-spatial-size streams.
+    Concat,
+    /// Channel split: this node's output keeps `keep` channels; the
+    /// complementary channels are re-read by a later consumer (ShuffleNetV2
+    /// stride-1 units model both halves as readers of the split output).
+    Split { keep: usize },
+    /// Channel shuffle: pure data movement, shape preserved.
+    Shuffle,
+}
+
+impl Op {
+    /// Stable wire name used by the JSON schema (`docs/net_schema.md`).
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            Op::Conv { .. } => "conv",
+            Op::DwConv { .. } => "dwconv",
+            Op::PwConv { .. } => "pwconv",
+            Op::MaxPool { .. } => "maxpool",
+            Op::AvgPool { .. } => "avgpool",
+            Op::GlobalAvgPool => "global_avgpool",
+            Op::Fc { .. } => "fc",
+            Op::Add => "add",
+            Op::Concat => "concat",
+            Op::Split { .. } => "split",
+            Op::Shuffle => "shuffle",
+        }
+    }
+
+    /// Whether the op joins two streams (and therefore lowers to an SCB).
+    pub fn is_join(&self) -> bool {
+        matches!(self, Op::Add | Op::Concat)
+    }
+}
+
+/// One node of the layer graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Node {
+    /// Unique human-readable name (the lowered layer keeps it).
+    pub name: String,
+    /// Block the node belongs to (Fig 3 aggregates per block).
+    pub block: String,
+    pub op: Op,
+    /// Indices of the producing nodes. Empty = the node reads the network
+    /// input. Joins name exactly two producers; everything else at most one.
+    pub inputs: Vec<usize>,
+}
+
+/// A layer-graph network description: named input dims plus a
+/// topologically-ordered node list with explicit edges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    pub name: String,
+    /// Square input feature map: `input_size` x `input_size`.
+    pub input_size: usize,
+    pub input_ch: usize,
+    pub nodes: Vec<Node>,
+}
+
+/// Inferred output shape of one node (square FMs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub size: usize,
+    pub ch: usize,
+}
+
+/// Windowed-op output size, matching [`crate::nets::Network::validate`]'s
+/// formula exactly (integer division).
+fn window_out(in_size: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (in_size + 2 * pad - k) / stride + 1
+}
+
+impl Graph {
+    /// Shape-inference + validation pass: infer every node's output shape,
+    /// rejecting malformed graphs (dangling edges, forward edges/cycles,
+    /// arity violations, shape mismatches at joins, degenerate kernel
+    /// geometry, dead nodes) with errors that name the offending node.
+    pub fn shapes(&self) -> Result<Vec<Shape>, String> {
+        if self.name.is_empty() {
+            return Err("graph: empty network name".to_string());
+        }
+        if self.input_size == 0 || self.input_ch == 0 {
+            return Err(format!(
+                "graph {:?}: input must be non-empty, got {}x{}x{}",
+                self.name, self.input_size, self.input_size, self.input_ch
+            ));
+        }
+        if self.nodes.is_empty() {
+            return Err(format!("graph {:?}: no nodes", self.name));
+        }
+        let mut names = std::collections::BTreeSet::new();
+        let mut consumed = vec![false; self.nodes.len()];
+        let mut shapes: Vec<Shape> = Vec::with_capacity(self.nodes.len());
+        let input_shape = Shape { size: self.input_size, ch: self.input_ch };
+        for (i, node) in self.nodes.iter().enumerate() {
+            let at = |msg: String| format!("graph {:?}: node {i} ({:?}): {msg}", self.name, node.name);
+            if node.name.is_empty() {
+                return Err(format!("graph {:?}: node {i}: empty name", self.name));
+            }
+            if !names.insert(node.name.clone()) {
+                return Err(at("duplicate node name".to_string()));
+            }
+            // Edge sanity first: every named producer must exist (no
+            // dangling edges) and precede this node (a forward edge means
+            // the node list is not topologically ordered — i.e. the graph
+            // has a cycle, or was emitted unsorted).
+            for &j in &node.inputs {
+                if j >= self.nodes.len() {
+                    return Err(at(format!(
+                        "dangling edge: references undefined node {j} (graph has {} nodes)",
+                        self.nodes.len()
+                    )));
+                }
+                if j >= i {
+                    return Err(at(format!(
+                        "edge from node {j} ({:?}) points forward: nodes must be listed in \
+                         topological order, so a forward edge means the graph has a cycle",
+                        self.nodes[j].name
+                    )));
+                }
+                consumed[j] = true;
+            }
+            if node.inputs.len() == 2 && node.inputs[0] == node.inputs[1] {
+                return Err(at(format!("both inputs name the same node {}", node.inputs[0])));
+            }
+            // Arity.
+            let arity_ok = if node.op.is_join() {
+                node.inputs.len() == 2
+            } else {
+                node.inputs.len() <= 1
+            };
+            if !arity_ok {
+                return Err(at(format!(
+                    "op {:?} takes {} input(s), got {}",
+                    node.op.wire_name(),
+                    if node.op.is_join() { "exactly 2" } else { "0 or 1" },
+                    node.inputs.len()
+                )));
+            }
+            let in_shape =
+                |slot: usize| if node.inputs.is_empty() { input_shape } else { shapes[node.inputs[slot]] };
+            let spatial = |k: usize, stride: usize, pad: usize| -> Result<usize, String> {
+                let s = in_shape(0);
+                if k == 0 || stride == 0 {
+                    return Err(at(format!("kernel/stride must be >= 1, got k={k} stride={stride}")));
+                }
+                if s.size + 2 * pad < k {
+                    return Err(at(format!(
+                        "kernel {k} exceeds padded input {} ({}+2*{pad})",
+                        s.size + 2 * pad,
+                        s.size
+                    )));
+                }
+                Ok(window_out(s.size, k, stride, pad))
+            };
+            let out = match &node.op {
+                Op::Conv { out_ch, k, stride, pad } => {
+                    if *out_ch == 0 {
+                        return Err(at("conv with 0 output channels".to_string()));
+                    }
+                    Shape { size: spatial(*k, *stride, *pad)?, ch: *out_ch }
+                }
+                Op::DwConv { k, stride, pad } => {
+                    Shape { size: spatial(*k, *stride, *pad)?, ch: in_shape(0).ch }
+                }
+                Op::PwConv { out_ch, groups } => {
+                    let s = in_shape(0);
+                    if *out_ch == 0 || *groups == 0 {
+                        return Err(at(format!("pwconv needs out_ch/groups >= 1, got {out_ch}/{groups}")));
+                    }
+                    if s.ch % groups != 0 {
+                        return Err(at(format!("groups {groups} does not divide in_ch {}", s.ch)));
+                    }
+                    Shape { size: s.size, ch: *out_ch }
+                }
+                Op::MaxPool { k, stride, pad } | Op::AvgPool { k, stride, pad } => {
+                    Shape { size: spatial(*k, *stride, *pad)?, ch: in_shape(0).ch }
+                }
+                Op::GlobalAvgPool => Shape { size: 1, ch: in_shape(0).ch },
+                Op::Fc { out_ch } => {
+                    if *out_ch == 0 {
+                        return Err(at("fc with 0 output channels".to_string()));
+                    }
+                    Shape { size: 1, ch: *out_ch }
+                }
+                Op::Add => {
+                    let (a, b) = (in_shape(0), in_shape(1));
+                    if a != b {
+                        return Err(at(format!(
+                            "shape mismatch at add: {}x{}x{} vs {}x{}x{} (element-wise add needs \
+                             identical branch shapes)",
+                            a.size, a.size, a.ch, b.size, b.size, b.ch
+                        )));
+                    }
+                    a
+                }
+                Op::Concat => {
+                    let (a, b) = (in_shape(0), in_shape(1));
+                    if a.size != b.size {
+                        return Err(at(format!(
+                            "shape mismatch at concat: cannot concatenate {}x{} with {}x{} branches \
+                             (spatial sizes must match)",
+                            a.size, a.size, b.size, b.size
+                        )));
+                    }
+                    Shape { size: a.size, ch: a.ch + b.ch }
+                }
+                Op::Split { keep } => {
+                    let s = in_shape(0);
+                    if *keep == 0 || *keep >= s.ch {
+                        return Err(at(format!(
+                            "split keeps {keep} of {} channels (need 1 <= keep < in_ch)",
+                            s.ch
+                        )));
+                    }
+                    Shape { size: s.size, ch: *keep }
+                }
+                Op::Shuffle => in_shape(0),
+            };
+            shapes.push(out);
+        }
+        // Dead nodes: only the last node (the network output) may go
+        // unconsumed — anything else is a disconnected CE.
+        for (i, c) in consumed.iter().enumerate().take(self.nodes.len() - 1) {
+            if !c {
+                return Err(format!(
+                    "graph {:?}: node {i} ({:?}): output is never consumed (only the last node may \
+                     be the network output)",
+                    self.name, self.nodes[i].name
+                ));
+            }
+        }
+        Ok(shapes)
+    }
+
+    /// Validate without keeping the shapes.
+    pub fn validate(&self) -> Result<(), String> {
+        self.shapes().map(|_| ())
+    }
+}
+
+/// Incremental [`Graph`] constructor — the deduplicated topology logic the
+/// zoo builders share (successor of the old `nets::NetBuilder`). The
+/// builder tracks a *cursor* (the node the next pushed op consumes);
+/// branches rewind it with [`GraphBuilder::set_cursor`] and joins name the
+/// other branch explicitly.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    name: String,
+    input_size: usize,
+    input_ch: usize,
+    nodes: Vec<Node>,
+    shapes: Vec<Shape>,
+    block: String,
+    cur: Option<usize>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, input_size: usize, input_ch: usize) -> GraphBuilder {
+        GraphBuilder {
+            name: name.to_string(),
+            input_size,
+            input_ch,
+            nodes: Vec::new(),
+            shapes: Vec::new(),
+            block: String::new(),
+            cur: None,
+        }
+    }
+
+    /// Start a new named block; subsequent nodes belong to it.
+    pub fn block(&mut self, name: &str) -> &mut Self {
+        self.block = name.to_string();
+        self
+    }
+
+    /// The current cursor: `None` means the network input.
+    pub fn cursor(&self) -> Option<usize> {
+        self.cur
+    }
+
+    /// Rewind the cursor to an earlier point (a branch start); the next
+    /// pushed node consumes that stream.
+    pub fn set_cursor(&mut self, at: Option<usize>) -> &mut Self {
+        self.cur = at;
+        self
+    }
+
+    fn shape_at(&self, at: Option<usize>) -> Shape {
+        match at {
+            None => Shape { size: self.input_size, ch: self.input_ch },
+            Some(i) => self.shapes[i],
+        }
+    }
+
+    /// Channels at the cursor.
+    pub fn cur_ch(&self) -> usize {
+        self.shape_at(self.cur).ch
+    }
+
+    /// Spatial size at the cursor.
+    pub fn cur_size(&self) -> usize {
+        self.shape_at(self.cur).size
+    }
+
+    fn push(&mut self, op: Op, inputs: Vec<usize>, out: Shape) -> usize {
+        let idx = self.nodes.len();
+        self.nodes.push(Node {
+            name: format!("{}_{}", self.block, idx),
+            block: self.block.clone(),
+            op,
+            inputs,
+        });
+        self.shapes.push(out);
+        self.cur = Some(idx);
+        idx
+    }
+
+    fn push_linear(&mut self, op: Op, out: Shape) -> usize {
+        let inputs = self.cur.into_iter().collect();
+        self.push(op, inputs, out)
+    }
+
+    pub fn conv(&mut self, out_ch: usize, k: usize, stride: usize, pad: usize) -> usize {
+        let size = window_out(self.cur_size(), k, stride, pad);
+        self.push_linear(Op::Conv { out_ch, k, stride, pad }, Shape { size, ch: out_ch })
+    }
+
+    pub fn dwconv(&mut self, k: usize, stride: usize, pad: usize) -> usize {
+        let s = self.shape_at(self.cur);
+        let size = window_out(s.size, k, stride, pad);
+        self.push_linear(Op::DwConv { k, stride, pad }, Shape { size, ch: s.ch })
+    }
+
+    pub fn pwconv(&mut self, out_ch: usize) -> usize {
+        self.gpwconv(out_ch, 1)
+    }
+
+    pub fn gpwconv(&mut self, out_ch: usize, groups: usize) -> usize {
+        let size = self.cur_size();
+        self.push_linear(Op::PwConv { out_ch, groups }, Shape { size, ch: out_ch })
+    }
+
+    pub fn maxpool(&mut self, k: usize, stride: usize, pad: usize) -> usize {
+        let s = self.shape_at(self.cur);
+        let size = window_out(s.size, k, stride, pad);
+        self.push_linear(Op::MaxPool { k, stride, pad }, Shape { size, ch: s.ch })
+    }
+
+    /// Windowed average pooling (ShuffleNetV1's stride-2 shortcut branch).
+    pub fn avgpool(&mut self, k: usize, stride: usize, pad: usize) -> usize {
+        let s = self.shape_at(self.cur);
+        let size = window_out(s.size, k, stride, pad);
+        self.push_linear(Op::AvgPool { k, stride, pad }, Shape { size, ch: s.ch })
+    }
+
+    pub fn global_avgpool(&mut self) -> usize {
+        let ch = self.cur_ch();
+        self.push_linear(Op::GlobalAvgPool, Shape { size: 1, ch })
+    }
+
+    pub fn fc(&mut self, out_ch: usize) -> usize {
+        self.push_linear(Op::Fc { out_ch }, Shape { size: 1, ch: out_ch })
+    }
+
+    pub fn shuffle(&mut self) -> usize {
+        let s = self.shape_at(self.cur);
+        self.push_linear(Op::Shuffle, s)
+    }
+
+    pub fn split(&mut self, keep: usize) -> usize {
+        let size = self.cur_size();
+        self.push_linear(Op::Split { keep }, Shape { size, ch: keep })
+    }
+
+    /// Element-wise Add joining the cursor (through branch) with the
+    /// output of `shortcut`.
+    pub fn add_from(&mut self, shortcut: usize) -> usize {
+        let through = self.cur.expect("add_from needs a through branch at the cursor");
+        let out = self.shapes[through];
+        self.push(Op::Add, vec![through, shortcut], out)
+    }
+
+    /// Concat joining the cursor (through branch) with the output of
+    /// `shortcut`; output channels are the sum.
+    pub fn concat_from(&mut self, shortcut: usize) -> usize {
+        let through = self.cur.expect("concat_from needs a through branch at the cursor");
+        let t = self.shapes[through];
+        let s = self.shapes[shortcut];
+        self.push(Op::Concat, vec![through, shortcut], Shape { size: t.size, ch: t.ch + s.ch })
+    }
+
+    pub fn finish(self) -> Graph {
+        Graph {
+            name: self.name,
+            input_size: self.input_size,
+            input_ch: self.input_ch,
+            nodes: self.nodes,
+        }
+    }
+}
+
+/// Load a JSON network description from disk and lower it to the
+/// streaming [`Network`] every downstream subsystem consumes — the
+/// `--net-file` path of the CLI.
+pub fn load_file(path: &std::path::Path) -> Result<Network, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let graph = from_json(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    lower(&graph).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_graph() -> Graph {
+        let mut b = GraphBuilder::new("toy", 8, 3);
+        b.block("stem");
+        b.conv(4, 3, 1, 1);
+        b.block("head");
+        b.global_avgpool();
+        b.fc(10);
+        b.finish()
+    }
+
+    #[test]
+    fn builder_tracks_shapes_and_names() {
+        let g = linear_graph();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[0].name, "stem_0");
+        assert_eq!(g.nodes[2].name, "head_2");
+        let shapes = g.shapes().unwrap();
+        assert_eq!(shapes[0], Shape { size: 8, ch: 4 });
+        assert_eq!(shapes[2], Shape { size: 1, ch: 10 });
+    }
+
+    #[test]
+    fn dangling_edge_is_rejected_with_the_node_named() {
+        let mut g = linear_graph();
+        g.nodes[2].inputs = vec![9];
+        let err = g.validate().unwrap_err();
+        assert!(err.contains("dangling edge"), "{err}");
+        assert!(err.contains("head_2"), "{err}");
+    }
+
+    #[test]
+    fn forward_edges_cycles_are_rejected() {
+        let mut g = linear_graph();
+        g.nodes[1].inputs = vec![2]; // 1 -> 2 -> 1: a cycle
+        let err = g.validate().unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn add_shape_mismatch_is_actionable() {
+        let mut b = GraphBuilder::new("toy", 8, 3);
+        b.block("b");
+        let a = b.conv(4, 3, 1, 1);
+        b.set_cursor(None);
+        b.conv(8, 3, 2, 1);
+        let g = {
+            let mut g = b.finish();
+            g.nodes.push(Node {
+                name: "bad_add".into(),
+                block: "b".into(),
+                op: Op::Add,
+                inputs: vec![1, a],
+            });
+            g
+        };
+        let err = g.validate().unwrap_err();
+        assert!(err.contains("shape mismatch at add"), "{err}");
+    }
+
+    #[test]
+    fn dead_nodes_are_rejected() {
+        let mut b = GraphBuilder::new("toy", 8, 3);
+        b.block("b");
+        b.conv(4, 3, 1, 1);
+        b.set_cursor(None);
+        b.conv(8, 3, 2, 1); // first conv now dangles unconsumed
+        let err = b.finish().validate().unwrap_err();
+        assert!(err.contains("never consumed"), "{err}");
+    }
+
+    #[test]
+    fn split_and_group_constraints() {
+        let mut b = GraphBuilder::new("toy", 8, 6);
+        b.block("b");
+        b.split(6); // keep == in_ch: invalid
+        let err = b.finish().validate().unwrap_err();
+        assert!(err.contains("split keeps 6 of 6"), "{err}");
+
+        let mut b = GraphBuilder::new("toy", 8, 5);
+        b.block("b");
+        b.gpwconv(9, 3); // 3 does not divide 5
+        let err = b.finish().validate().unwrap_err();
+        assert!(err.contains("groups 3 does not divide in_ch 5"), "{err}");
+    }
+}

@@ -31,7 +31,13 @@
 //!
 //! # Subsystems
 //!
-//! * [`nets`] — the LWCNN zoo (MobileNetV1/V2, ShuffleNetV1/V2).
+//! * [`ir`] — the layer-graph IR front-end: explicit-edge `Graph`/`Node`
+//!   networks with shape-inference validation, a versioned JSON
+//!   loader/exporter (`networks/*.json`, `--net-file` on the CLI; schema
+//!   in `docs/net_schema.md`), and the lowering pass that produces the
+//!   streaming [`nets::Network`] every downstream subsystem consumes.
+//! * [`nets`] — the LWCNN zoo (MobileNetV1/V2, ShuffleNetV1/V2), built as
+//!   [`ir`] graphs and lowered through the same path as loaded files.
 //! * [`model`] — the analytical performance model (Eqs 1-14: MAC/access
 //!   costs, SRAM/DRAM models, throughput).
 //! * [`alloc`] — FGPM parallel spaces, Algorithm 1 (balanced memory
@@ -63,6 +69,7 @@
 pub mod alloc;
 pub mod coordinator;
 pub mod design;
+pub mod ir;
 pub mod model;
 pub mod nets;
 pub mod report;

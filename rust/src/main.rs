@@ -13,16 +13,24 @@
 //!   (`--load FILE` re-simulates a saved design).
 //! * `sweep` — the design-space sweep: the full pipeline over a
 //!   {networks} x {platforms} x {granularities} matrix (defaults: whole
-//!   zoo x whole catalog x FGPM). `--json` emits the stable sorted-key
-//!   document, `--save-dir DIR` persists one `Design` artifact per cell,
+//!   zoo x whole catalog x FGPM). `--net-file FILE,..` adds networks
+//!   loaded from JSON graph descriptions (`docs/net_schema.md`) to the
+//!   network axis, `--json` emits the stable sorted-key document,
+//!   `--save-dir DIR` persists one `Design` artifact per cell,
 //!   `--frames N` also cycle-simulates each cell, `--jobs N` evaluates
 //!   cells on N work-stealing workers (byte-identical output for any N),
 //!   `--cache` / `--cache-dir DIR` memoize cells across invocations in a
 //!   content-keyed cache (hit/miss stats on stderr, zero Alg 1/Alg 2
-//!   re-derivation on hits), `--clocks MHZ,..` adds an FPS-vs-clock curve
-//!   per cell, `--pareto` layers the per-network {SRAM, FPS, DRAM}
-//!   Pareto-frontier analysis on top, and `--pareto-clocks` (with
-//!   `--clocks`) promotes frequency to a fourth Pareto axis.
+//!   re-derivation on hits), `--cache-gc N` trims the cache to its N
+//!   most-recently-used entries after the run, `--clocks MHZ,..` adds an
+//!   FPS-vs-clock curve per cell, `--pareto` layers the per-network
+//!   {SRAM, FPS, DRAM} Pareto-frontier analysis on top, and
+//!   `--pareto-clocks` (with `--clocks`) promotes frequency to a fourth
+//!   Pareto axis.
+//! * `net <FILE>` — load and validate a JSON network description through
+//!   the [`repro::ir`] front-end and print its lowered summary (`--json`
+//!   for a stable one-line document); CI runs this over every committed
+//!   `networks/*.json`.
 //! * `infer <short> [--frames N]` — sequential PJRT inference vs golden.
 //! * `stream <short> [--frames N] [--workers N]` — the threaded streaming
 //!   coordinator (the end-to-end system path).
@@ -35,19 +43,22 @@ use std::process::ExitCode;
 
 use repro::design::{Design, Platform};
 use repro::sweep::{self, SweepSpec};
+use repro::util::json::Json;
 use repro::{alloc, coordinator, nets, report, runtime, sim};
 
 fn usage() -> ExitCode {
     eprintln!(
         "usage: repro <command>\n\
          \x20 report <fig1|fig3|tab1|fig10|fig12|fig13|fig14|fig15|fig16|fig17|tab2|tab3|tab4|tab5|ablation|all>\n\
-         \x20 allocate <mbv1|mbv2|snv1|snv2> [--platform zc706] [--sram-mb F] [--dsp N] [--factorized]\n\
-         \x20          [--json] [--save FILE] [--load FILE]\n\
-         \x20 simulate <mbv1|mbv2|snv1|snv2> [--platform zc706] [--sram-mb F] [--dsp N] [--factorized]\n\
-         \x20          [--frames N] [--baseline] [--save FILE] [--load FILE]\n\
-         \x20 sweep  [--nets a,b,..] [--platforms zc706,zcu102,edge] [--granularities fgpm,factorized]\n\
-         \x20          [--frames N] [--jobs N] [--clocks MHZ,MHZ,..] [--pareto] [--pareto-clocks]\n\
-         \x20          [--cache | --cache-dir DIR] [--json] [--save-dir DIR]\n\
+         \x20 allocate <mbv1|mbv2|snv1|snv2> [--net-file FILE] [--platform zc706] [--sram-mb F]\n\
+         \x20          [--dsp N] [--factorized] [--json] [--save FILE] [--load FILE]\n\
+         \x20 simulate <mbv1|mbv2|snv1|snv2> [--net-file FILE] [--platform zc706] [--sram-mb F]\n\
+         \x20          [--dsp N] [--factorized] [--frames N] [--baseline] [--save FILE] [--load FILE]\n\
+         \x20 sweep  [--nets a,b,..] [--net-file FILE,..] [--platforms zc706,zcu102,edge]\n\
+         \x20          [--granularities fgpm,factorized] [--frames N] [--jobs N] [--clocks MHZ,MHZ,..]\n\
+         \x20          [--pareto] [--pareto-clocks] [--cache | --cache-dir DIR] [--cache-gc N]\n\
+         \x20          [--json] [--save-dir DIR]\n\
+         \x20 net    <FILE.json> [--json]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
     );
@@ -115,7 +126,7 @@ fn platform_from_args(args: &[String]) -> Result<Platform, String> {
 }
 
 /// Flags that consume the following argument as their value.
-const VALUE_FLAGS: [&str; 14] = [
+const VALUE_FLAGS: [&str; 16] = [
     "--platform",
     "--sram-mb",
     "--dsp",
@@ -124,12 +135,14 @@ const VALUE_FLAGS: [&str; 14] = [
     "--save",
     "--load",
     "--nets",
+    "--net-file",
     "--platforms",
     "--granularities",
     "--save-dir",
     "--jobs",
     "--clocks",
     "--cache-dir",
+    "--cache-gc",
 ];
 
 /// First positional argument after the subcommand, skipping flags and the
@@ -172,10 +185,10 @@ fn check_flags(args: &[String], value_flags: &[&str], bool_flags: &[&str]) -> Re
 /// Build (or `--load`) the design point shared by `allocate`/`simulate`.
 fn design_from_args(args: &[String], opts: sim::SimOptions) -> Result<Design, String> {
     if let Some(path) = flag_val(args, "--load")? {
-        // A loaded design carries its own platform/granularity; silently
-        // ignoring build flags next to --load would contradict the
-        // fail-loudly flag parsing, so reject the combination.
-        let conflicting: Vec<&str> = ["--platform", "--sram-mb", "--dsp", "--factorized"]
+        // A loaded design carries its own platform/granularity/network;
+        // silently ignoring build flags next to --load would contradict
+        // the fail-loudly flag parsing, so reject the combination.
+        let conflicting: Vec<&str> = ["--platform", "--sram-mb", "--dsp", "--factorized", "--net-file"]
             .into_iter()
             .filter(|f| args.iter().any(|a| a == f))
             .collect();
@@ -189,7 +202,7 @@ fn design_from_args(args: &[String], opts: sim::SimOptions) -> Result<Design, St
         let d = Design::from_json(&text)?;
         // A positional <net> next to --load is a cross-check, not an input.
         if let Some(name) = positional(args) {
-            let expect = nets::by_name(name).ok_or_else(|| format!("unknown network {name:?}"))?;
+            let expect = nets::resolve(name)?;
             if expect.name != d.network().name {
                 return Err(format!(
                     "--load {path}: design is for {:?}, not {:?}",
@@ -200,10 +213,26 @@ fn design_from_args(args: &[String], opts: sim::SimOptions) -> Result<Design, St
         }
         return Ok(d);
     }
-    let Some(name) = positional(args) else {
-        return Err("missing <net> (or --load FILE)".to_string());
+    let net = match flag_val(args, "--net-file")? {
+        Some(path) => {
+            // The file *is* the network; a positional <net> next to it
+            // would be ambiguous, so reject the combination.
+            if let Some(name) = positional(args) {
+                return Err(format!(
+                    "--net-file: conflicts with positional network {name:?} (the file already \
+                     names the network)"
+                ));
+            }
+            repro::ir::load_file(std::path::Path::new(&path))
+                .map_err(|e| format!("--net-file {e}"))?
+        }
+        None => {
+            let Some(name) = positional(args) else {
+                return Err("missing <net> (or --net-file FILE, or --load FILE)".to_string());
+            };
+            nets::resolve(name)?
+        }
     };
-    let net = nets::by_name(name).ok_or_else(|| format!("unknown network {name:?}"))?;
     let granularity = if args.iter().any(|a| a == "--factorized") {
         alloc::Granularity::Factorized
     } else {
@@ -231,22 +260,54 @@ fn main() -> ExitCode {
     let Some(cmd) = args.first() else { return usage() };
     match cmd.as_str() {
         "report" => {
-            let id = args.get(1).map(String::as_str).unwrap_or("all");
+            if let Err(e) = check_flags(&args, &["--net-file"], &[]) {
+                return fail(&e);
+            }
+            let id = positional(&args).map(String::as_str).unwrap_or("all");
+            // The per-network renderers accept any lowered network, so
+            // `--net-file` points them at a loaded graph instead of the
+            // zoo; the aggregate/paper-comparison ids only make sense for
+            // the paper's networks and reject it.
+            let loaded = match flag_val(&args, "--net-file") {
+                Err(e) => return fail(&e),
+                Ok(None) => None,
+                Ok(Some(path)) => {
+                    if !matches!(id, "fig3" | "fig12" | "fig15") {
+                        return fail(&format!(
+                            "--net-file: only the per-network renderers (fig3, fig12, fig15) \
+                             accept a loaded network, not {id:?}"
+                        ));
+                    }
+                    match repro::ir::load_file(std::path::Path::new(&path)) {
+                        Ok(net) => Some(net),
+                        Err(e) => return fail(&format!("--net-file {e}")),
+                    }
+                }
+            };
             let out = match id {
                 "fig1" => report::fig1(),
-                "fig3" => {
-                    let mut s = String::new();
-                    for net in [nets::mobilenet_v2(), nets::shufflenet_v2()] {
-                        s.push_str(&report::fig3(&net));
+                "fig3" => match &loaded {
+                    Some(net) => report::fig3(net),
+                    None => {
+                        let mut s = String::new();
+                        for net in [nets::mobilenet_v2(), nets::shufflenet_v2()] {
+                            s.push_str(&report::fig3(&net));
+                        }
+                        s
                     }
-                    s
-                }
+                },
                 "tab1" => report::tab1(),
                 "fig10" => report::fig10(),
-                "fig12" => nets::all_networks().iter().map(report::fig12).collect(),
+                "fig12" => match &loaded {
+                    Some(net) => report::fig12(net),
+                    None => nets::all_networks().iter().map(report::fig12).collect(),
+                },
                 "fig13" => report::fig13(),
                 "fig14" => report::fig14(),
-                "fig15" => nets::all_networks().iter().map(report::fig15).collect(),
+                "fig15" => match &loaded {
+                    Some(net) => report::fig15(net),
+                    None => nets::all_networks().iter().map(report::fig15).collect(),
+                },
                 "fig16" => report::fig16(),
                 "fig17" => report::fig17(),
                 "tab2" => report::tab2(),
@@ -263,7 +324,7 @@ fn main() -> ExitCode {
         "allocate" => {
             if let Err(e) = check_flags(
                 &args,
-                &["--platform", "--sram-mb", "--dsp", "--save", "--load"],
+                &["--net-file", "--platform", "--sram-mb", "--dsp", "--save", "--load"],
                 &["--factorized", "--json"],
             ) {
                 return fail(&e);
@@ -304,7 +365,7 @@ fn main() -> ExitCode {
         "simulate" => {
             if let Err(e) = check_flags(
                 &args,
-                &["--platform", "--sram-mb", "--dsp", "--frames", "--save", "--load"],
+                &["--net-file", "--platform", "--sram-mb", "--dsp", "--frames", "--save", "--load"],
                 &["--factorized", "--baseline"],
             ) {
                 return fail(&e);
@@ -355,6 +416,7 @@ fn main() -> ExitCode {
                 &args,
                 &[
                     "--nets",
+                    "--net-file",
                     "--platforms",
                     "--granularities",
                     "--frames",
@@ -362,6 +424,7 @@ fn main() -> ExitCode {
                     "--clocks",
                     "--save-dir",
                     "--cache-dir",
+                    "--cache-gc",
                 ],
                 &["--json", "--pareto", "--pareto-clocks", "--cache"],
             ) {
@@ -372,9 +435,10 @@ fn main() -> ExitCode {
             }
             // Validate every flag (including --save-dir) before the
             // potentially expensive matrix run starts.
-            let parsed = (|| -> Result<(SweepSpec, Option<String>), String> {
-                let mut spec = SweepSpec::from_csv(
+            let parsed = (|| -> Result<(SweepSpec, Option<String>, Option<usize>), String> {
+                let mut spec = SweepSpec::from_cli(
                     flag_val(&args, "--nets")?.as_deref(),
+                    flag_val(&args, "--net-file")?.as_deref(),
                     flag_val(&args, "--platforms")?.as_deref(),
                     flag_val(&args, "--granularities")?.as_deref(),
                 )?;
@@ -401,9 +465,23 @@ fn main() -> ExitCode {
                     args.iter().any(|a| a == "--cache"),
                     flag_val(&args, "--cache-dir")?.as_deref(),
                 )?;
-                Ok((spec, flag_val(&args, "--save-dir")?))
+                let cache_gc = parse_opt::<usize>(&args, "--cache-gc")?;
+                if let Some(n) = cache_gc {
+                    if spec.cache_dir.is_none() {
+                        return Err(
+                            "--cache-gc: requires the cache (pass --cache or --cache-dir DIR)"
+                                .to_string(),
+                        );
+                    }
+                    if n == 0 {
+                        return Err("--cache-gc: must be >= 1 (0 would evict this run's own \
+                                    cells)"
+                            .to_string());
+                    }
+                }
+                Ok((spec, flag_val(&args, "--save-dir")?, cache_gc))
             })();
-            let (spec, save_dir) = match parsed {
+            let (spec, save_dir, cache_gc) = match parsed {
                 Ok(p) => p,
                 Err(e) => return fail(&e),
             };
@@ -437,6 +515,11 @@ fn main() -> ExitCode {
                 // must stay byte-identical (CI greps this line instead).
                 eprintln!("{}", stats.summary(dir));
             }
+            if let (Some(n), Some(dir)) = (cache_gc, &spec.cache_dir) {
+                // After the run, so this run's (just stored or just
+                // touched) cells rank most recent and are never evicted.
+                eprintln!("{}", sweep::CellCache::open(dir).gc(n).summary(dir));
+            }
             if let Some(dir) = save_dir {
                 match sweep_report.save_designs(std::path::Path::new(&dir)) {
                     Ok(paths) => eprintln!("saved {} design artifacts to {dir}", paths.len()),
@@ -461,6 +544,47 @@ fn main() -> ExitCode {
                 if let Some(analysis) = &pareto_clocks {
                     println!("{}", report::pareto_clocks_table(&sweep_report, analysis));
                 }
+            }
+        }
+        "net" => {
+            if let Err(e) = check_flags(&args, &[], &["--json"]) {
+                return fail(&e);
+            }
+            let Some(path) = positional(&args) else {
+                return fail("missing <FILE.json> (a network description; see docs/net_schema.md)");
+            };
+            // Loading runs the full IR pipeline — parse, shape-inference
+            // validation, lowering — so a zero exit *is* the validation
+            // result CI wants for every committed networks/*.json.
+            let net = match repro::ir::load_file(std::path::Path::new(path)) {
+                Ok(n) => n,
+                Err(e) => return fail(&e),
+            };
+            if args.iter().any(|a| a == "--json") {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("blocks".to_string(), Json::Num(net.num_blocks() as f64));
+                m.insert("input_ch".to_string(), Json::Num(net.input_ch as f64));
+                m.insert("input_size".to_string(), Json::Num(net.input_size as f64));
+                m.insert("layers".to_string(), Json::Num(net.layers.len() as f64));
+                m.insert("name".to_string(), Json::Str(net.name.clone()));
+                m.insert("scbs".to_string(), Json::Num(net.scbs.len() as f64));
+                m.insert("total_macs".to_string(), Json::Num(net.total_macs() as f64));
+                m.insert("weight_bytes".to_string(), Json::Num(net.total_weight_bytes() as f64));
+                println!("{}", Json::Obj(m));
+            } else {
+                println!(
+                    "{}: {}x{}x{} input, {} layers in {} blocks, {:.1} MMACs/frame, {:.2} MB \
+                     weights (8-bit), {} SCB edge(s)",
+                    net.name,
+                    net.input_size,
+                    net.input_size,
+                    net.input_ch,
+                    net.layers.len(),
+                    net.num_blocks(),
+                    net.total_macs() as f64 / 1e6,
+                    net.total_weight_bytes() as f64 / 1048576.0,
+                    net.scbs.len()
+                );
             }
         }
         "infer" => {

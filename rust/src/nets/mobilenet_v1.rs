@@ -3,13 +3,16 @@
 //! Stem STC + 13 depthwise-separable pairs + avgpool + FC. No SCBs: the
 //! network is the pure-DSC member of the zoo (Fig 1's DSC-only bar).
 
-use super::{NetBuilder, Network};
+use crate::ir::{lower, Graph, GraphBuilder};
 
-pub fn mobilenet_v1() -> Network {
-    let mut b = NetBuilder::new("mobilenet_v1", 224, 3);
+use super::Network;
+
+/// The layer-graph description (the zoo's source of truth; lowered below).
+pub(crate) fn graph() -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v1", 224, 3);
 
     b.block("stem");
-    b.stc(32, 3, 2, 1); // 224 -> 112
+    b.conv(32, 3, 2, 1); // 224 -> 112
 
     // (pwc_out_channels, dwc_stride) for the 13 DSC pairs.
     let pairs: [(usize, usize); 13] = [
@@ -29,14 +32,18 @@ pub fn mobilenet_v1() -> Network {
     ];
     for (i, (out, s)) in pairs.iter().enumerate() {
         b.block(&format!("dsc{}", i + 1));
-        b.dwc(3, *s, 1);
-        b.pwc(*out);
+        b.dwconv(3, *s, 1);
+        b.pwconv(*out);
     }
 
     b.block("head");
-    b.avgpool();
+    b.global_avgpool();
     b.fc(1000);
     b.finish()
+}
+
+pub fn mobilenet_v1() -> Network {
+    lower(&graph()).expect("zoo graph lowers")
 }
 
 #[cfg(test)]

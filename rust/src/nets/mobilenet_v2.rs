@@ -5,7 +5,9 @@
 //! an identity SCB over the (expand, dwc, project) main branch — exactly
 //! the pw/dw/pw SCB the paper's Fig 6 timing analysis uses.
 
-use super::{NetBuilder, Network};
+use crate::ir::{lower, Graph, GraphBuilder};
+
+use super::Network;
 
 /// Inverted-residual settings (t, c, n, s) from Table 2 of the paper.
 pub const BOTTLENECKS: [(usize, usize, usize, usize); 7] = [
@@ -18,11 +20,12 @@ pub const BOTTLENECKS: [(usize, usize, usize, usize); 7] = [
     (6, 320, 1, 1),
 ];
 
-pub fn mobilenet_v2() -> Network {
-    let mut b = NetBuilder::new("mobilenet_v2", 224, 3);
+/// The layer-graph description (the zoo's source of truth; lowered below).
+pub(crate) fn graph() -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v2", 224, 3);
 
     b.block("stem");
-    b.stc(32, 3, 2, 1); // 224 -> 112
+    b.conv(32, 3, 2, 1); // 224 -> 112
 
     let mut stage = 0;
     for (t, c, n, s) in BOTTLENECKS {
@@ -32,23 +35,28 @@ pub fn mobilenet_v2() -> Network {
             let stride = if rep == 0 { s } else { 1 };
             let in_ch = b.cur_ch();
             let residual = stride == 1 && in_ch == c;
-            let branch_start = b.len();
+            // The residual shortcut reads the unit input node.
+            let unit_input = b.cursor().expect("stem precedes every bottleneck");
             if t != 1 {
-                b.pwc(in_ch * t);
+                b.pwconv(in_ch * t);
             }
-            b.dwc(3, stride, 1);
-            b.pwc(c);
+            b.dwconv(3, stride, 1);
+            b.pwconv(c);
             if residual {
-                b.add_scb(branch_start);
+                b.add_from(unit_input);
             }
         }
     }
 
     b.block("head");
-    b.pwc(1280);
-    b.avgpool();
+    b.pwconv(1280);
+    b.global_avgpool();
     b.fc(1000);
     b.finish()
+}
+
+pub fn mobilenet_v2() -> Network {
+    lower(&graph()).expect("zoo graph lowers")
 }
 
 #[cfg(test)]

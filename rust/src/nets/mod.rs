@@ -366,177 +366,160 @@ impl Network {
     }
 }
 
-/// Incremental builder used by the per-network constructors.
-pub(crate) struct NetBuilder {
-    name: String,
-    layers: Vec<Layer>,
-    scbs: Vec<Scb>,
-    cur_ch: usize,
-    cur_size: usize,
-    input_size: usize,
-    input_ch: usize,
-    block: usize,
-    block_name: String,
-    pending_src: Option<LayerSrc>,
+/// Wire name of a [`LayerKind`] in the embedded `network_def` object of
+/// saved design artifacts ([`network_to_json_value`]).
+fn kind_wire_name(kind: LayerKind) -> &'static str {
+    match kind {
+        LayerKind::Stc => "stc",
+        LayerKind::Dwc => "dwc",
+        LayerKind::Pwc => "pwc",
+        LayerKind::Add => "add",
+        LayerKind::MaxPool => "maxpool",
+        LayerKind::AvgPool => "avgpool",
+        LayerKind::Fc => "fc",
+        LayerKind::Shuffle => "shuffle",
+        LayerKind::Split => "split",
+        LayerKind::Concat => "concat",
+    }
 }
 
-impl NetBuilder {
-    pub fn new(name: &str, input_size: usize, input_ch: usize) -> Self {
-        NetBuilder {
-            name: name.to_string(),
-            layers: Vec::new(),
-            scbs: Vec::new(),
-            cur_ch: input_ch,
-            cur_size: input_size,
-            input_size,
-            input_ch,
-            block: 0,
-            block_name: String::new(),
-            pending_src: None,
-        }
-    }
+fn kind_from_wire(name: &str) -> Option<LayerKind> {
+    Some(match name {
+        "stc" => LayerKind::Stc,
+        "dwc" => LayerKind::Dwc,
+        "pwc" => LayerKind::Pwc,
+        "add" => LayerKind::Add,
+        "maxpool" => LayerKind::MaxPool,
+        "avgpool" => LayerKind::AvgPool,
+        "fc" => LayerKind::Fc,
+        "shuffle" => LayerKind::Shuffle,
+        "split" => LayerKind::Split,
+        "concat" => LayerKind::Concat,
+        _ => return None,
+    })
+}
 
-    pub fn block(&mut self, name: &str) -> &mut Self {
-        if !self.layers.is_empty() || !self.block_name.is_empty() {
-            self.block += if self.block_name.is_empty() { 0 } else { 1 };
-        }
-        self.block_name = name.to_string();
-        self
-    }
+/// Serialize a lowered [`Network`] as a JSON value — the `network_def`
+/// key design artifacts embed when their network is not a zoo member, so
+/// reloading ([`crate::Design::from_json`] and the sweep cache's warm
+/// path) can rebuild `--net-file` networks without the source file.
+pub(crate) fn network_to_json_value(net: &Network) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let layers: Vec<Json> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(l.name.clone()));
+            o.insert("kind".to_string(), Json::Str(kind_wire_name(l.kind).to_string()));
+            o.insert(
+                "src".to_string(),
+                match l.src {
+                    LayerSrc::Prev => Json::Str("prev".to_string()),
+                    LayerSrc::Tee(i) => Json::Num(i as f64),
+                },
+            );
+            o.insert("in_ch".to_string(), Json::Num(l.in_ch as f64));
+            o.insert("out_ch".to_string(), Json::Num(l.out_ch as f64));
+            o.insert("in_size".to_string(), Json::Num(l.in_size as f64));
+            o.insert("out_size".to_string(), Json::Num(l.out_size as f64));
+            o.insert("k".to_string(), Json::Num(l.k as f64));
+            o.insert("stride".to_string(), Json::Num(l.stride as f64));
+            o.insert("pad".to_string(), Json::Num(l.pad as f64));
+            o.insert("groups".to_string(), Json::Num(l.groups as f64));
+            o.insert("block".to_string(), Json::Num(l.block as f64));
+            o.insert("block_name".to_string(), Json::Str(l.block_name.clone()));
+            Json::Obj(o)
+        })
+        .collect();
+    let scbs: Vec<Json> = net
+        .scbs
+        .iter()
+        .map(|s| Json::Arr(vec![Json::Num(s.from_layer as f64), Json::Num(s.join_layer as f64)]))
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("input_ch".to_string(), Json::Num(net.input_ch as f64));
+    o.insert("input_size".to_string(), Json::Num(net.input_size as f64));
+    o.insert("layers".to_string(), Json::Arr(layers));
+    o.insert("name".to_string(), Json::Str(net.name.clone()));
+    o.insert("scbs".to_string(), Json::Arr(scbs));
+    Json::Obj(o)
+}
 
-    pub fn cur_ch(&self) -> usize {
-        self.cur_ch
-    }
-
-    pub fn len(&self) -> usize {
-        self.layers.len()
-    }
-
-    /// Redirect the next pushed layer's input to the tee of layer `i`'s
-    /// input (second branch of a two-branch unit). The builder's current
-    /// channel/size state is rewound to that tee point.
-    pub fn from_tee(&mut self, i: usize) -> &mut Self {
-        self.pending_src = Some(LayerSrc::Tee(i));
-        self.cur_ch = self.layers[i].in_ch;
-        self.cur_size = self.layers[i].in_size;
-        self
-    }
-
-    fn push(&mut self, kind: LayerKind, out_ch: usize, k: usize, stride: usize, pad: usize, groups: usize) -> usize {
-        let out_size = match kind {
-            LayerKind::AvgPool => 1,
-            LayerKind::Fc => 1,
-            _ => (self.cur_size + 2 * pad - k) / stride + 1,
+/// Rebuild a [`Network`] from an embedded `network_def` value; validates
+/// the result so a hand-edited artifact cannot smuggle in a malformed
+/// network.
+pub(crate) fn network_from_json_value(j: &crate::util::json::Json) -> Result<Network, String> {
+    use crate::util::json::Json;
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("network_def: missing name")?
+        .to_string();
+    let need = |key: &str, o: &Json, at: &str| -> Result<usize, String> {
+        o.get(key)
+            .and_then(Json::as_f64)
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| n as usize)
+            .ok_or_else(|| format!("network_def {at}: missing integer field {key:?}"))
+    };
+    let input_size = need("input_size", j, "")?;
+    let input_ch = need("input_ch", j, "")?;
+    let layers_json =
+        j.get("layers").and_then(Json::as_arr).ok_or("network_def: missing layers array")?;
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (i, lj) in layers_json.iter().enumerate() {
+        let at = format!("layer {i}");
+        let layer_name = lj
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("network_def {at}: missing name"))?
+            .to_string();
+        let kind_name = lj
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("network_def {at}: missing kind"))?;
+        let kind = kind_from_wire(kind_name)
+            .ok_or_else(|| format!("network_def {at}: unknown layer kind {kind_name:?}"))?;
+        let src = match lj.get("src") {
+            Some(Json::Str(s)) if s == "prev" => LayerSrc::Prev,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => LayerSrc::Tee(*n as usize),
+            _ => return Err(format!("network_def {at}: src must be \"prev\" or a layer index")),
         };
-        let name = format!("{}{}_{}", self.block_name, "", self.layers.len());
-        let src = self.pending_src.take().unwrap_or(LayerSrc::Prev);
-        self.layers.push(Layer {
-            name,
+        layers.push(Layer {
+            name: layer_name,
             kind,
             src,
-            in_ch: self.cur_ch,
-            out_ch,
-            in_size: self.cur_size,
-            out_size,
-            k,
-            stride,
-            pad,
-            groups,
-            block: self.block,
-            block_name: self.block_name.clone(),
+            in_ch: need("in_ch", lj, &at)?,
+            out_ch: need("out_ch", lj, &at)?,
+            in_size: need("in_size", lj, &at)?,
+            out_size: need("out_size", lj, &at)?,
+            k: need("k", lj, &at)?,
+            stride: need("stride", lj, &at)?,
+            pad: need("pad", lj, &at)?,
+            groups: need("groups", lj, &at)?,
+            block: need("block", lj, &at)?,
+            block_name: lj
+                .get("block_name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("network_def {at}: missing block_name"))?
+                .to_string(),
         });
-        self.cur_ch = out_ch;
-        self.cur_size = out_size;
-        self.layers.len() - 1
     }
-
-    pub fn stc(&mut self, out_ch: usize, k: usize, stride: usize, pad: usize) -> usize {
-        self.push(LayerKind::Stc, out_ch, k, stride, pad, 1)
-    }
-
-    pub fn dwc(&mut self, k: usize, stride: usize, pad: usize) -> usize {
-        let ch = self.cur_ch;
-        self.push(LayerKind::Dwc, ch, k, stride, pad, 1)
-    }
-
-    pub fn pwc(&mut self, out_ch: usize) -> usize {
-        self.push(LayerKind::Pwc, out_ch, 1, 1, 0, 1)
-    }
-
-    pub fn gpwc(&mut self, out_ch: usize, groups: usize) -> usize {
-        self.push(LayerKind::Pwc, out_ch, 1, 1, 0, groups)
-    }
-
-    pub fn maxpool(&mut self, k: usize, stride: usize, pad: usize) -> usize {
-        let ch = self.cur_ch;
-        self.push(LayerKind::MaxPool, ch, k, stride, pad, 1)
-    }
-
-    pub fn avgpool(&mut self) -> usize {
-        let ch = self.cur_ch;
-        let k = self.cur_size;
-        self.push(LayerKind::AvgPool, ch, k, 1, 0, 1)
-    }
-
-    /// Spatial average pooling with an explicit window (ShuffleNetV1
-    /// stride-2 shortcut branch).
-    pub fn avgpool_spatial(&mut self, k: usize, stride: usize, pad: usize) -> usize {
-        let ch = self.cur_ch;
-        let out_size = (self.cur_size + 2 * pad - k) / stride + 1;
-        let idx = self.push(LayerKind::MaxPool, ch, k, stride, pad, 1);
-        // Reuse the windowed-pool sizing but tag the kind correctly.
-        self.layers[idx].kind = LayerKind::AvgPool;
-        self.layers[idx].out_size = out_size;
-        self.cur_size = out_size;
-        idx
-    }
-
-    pub fn fc(&mut self, out: usize) -> usize {
-        self.push(LayerKind::Fc, out, 1, 1, 0, 1)
-    }
-
-    pub fn shuffle(&mut self) -> usize {
-        let ch = self.cur_ch;
-        self.push(LayerKind::Shuffle, ch, 1, 1, 0, 1)
-    }
-
-    /// Channel split: continues on `keep` channels (the branch that flows
-    /// through subsequent layers); the complementary half is re-joined by a
-    /// later `concat_scb`.
-    pub fn split(&mut self, keep: usize) -> usize {
-        self.push(LayerKind::Split, keep, 1, 1, 0, 1)
-    }
-
-    /// Element-wise SCB join with the FM snapshot taken at `from_layer`'s
-    /// input.
-    pub fn add_scb(&mut self, from_layer: usize) -> usize {
-        let ch = self.cur_ch;
-        let idx = self.push(LayerKind::Add, ch, 1, 1, 0, 1);
-        self.scbs.push(Scb { from_layer, join_layer: idx });
-        idx
-    }
-
-    /// Concat join (ShuffleNet): output channels = through + shortcut.
-    pub fn concat_scb(&mut self, from_layer: usize, shortcut_ch: usize) -> usize {
-        let ch = self.cur_ch + shortcut_ch;
-        let idx = self.push(LayerKind::Concat, ch, 1, 1, 0, 1);
-        self.scbs.push(Scb { from_layer, join_layer: idx });
-        idx
-    }
-
-    pub fn finish(self) -> Network {
-        let net = Network {
-            name: self.name,
-            input_size: self.input_size,
-            input_ch: self.input_ch,
-            layers: self.layers,
-            scbs: self.scbs,
-        };
-        if let Err(e) = net.validate() {
-            panic!("invalid network: {e}");
+    let scbs_json =
+        j.get("scbs").and_then(Json::as_arr).ok_or("network_def: missing scbs array")?;
+    let mut scbs = Vec::with_capacity(scbs_json.len());
+    for (i, sj) in scbs_json.iter().enumerate() {
+        let pair = sj.usize_vec();
+        if pair.len() != 2 || sj.as_arr().map(|a| a.len()) != Some(2) {
+            return Err(format!("network_def scb {i}: expected [from_layer, join_layer]"));
         }
-        net
+        scbs.push(Scb { from_layer: pair[0], join_layer: pair[1] });
     }
+    let net = Network { name, input_size, input_ch, layers, scbs };
+    net.validate()?;
+    Ok(net)
 }
 
 /// All four zoo networks, by canonical name.
@@ -546,6 +529,32 @@ pub fn by_name(name: &str) -> Option<Network> {
         "mobilenet_v2" | "mbv2" => Some(mobilenet_v2()),
         "shufflenet_v1" | "snv1" => Some(shufflenet_v1()),
         "shufflenet_v2" | "snv2" => Some(shufflenet_v2()),
+        _ => None,
+    }
+}
+
+/// Resolve a zoo network by name with the catalog-listing error UX of
+/// [`crate::Platform::resolve`]: an unknown name lists the zoo and points
+/// at the `--net-file` escape hatch for non-zoo networks.
+pub fn resolve(name: &str) -> Result<Network, String> {
+    by_name(name).ok_or_else(|| {
+        format!(
+            "unknown network {name:?} (known networks: {}; or load a JSON network \
+             description with --net-file)",
+            zoo_names().join(", ")
+        )
+    })
+}
+
+/// The layer-graph IR of a zoo network ([`crate::ir::Graph`]) — what the
+/// committed `networks/*.json` catalog is generated from, and what
+/// [`by_name`] lowers.
+pub fn zoo_graph(name: &str) -> Option<crate::ir::Graph> {
+    match name {
+        "mobilenet_v1" | "mbv1" => Some(mobilenet_v1::graph()),
+        "mobilenet_v2" | "mbv2" => Some(mobilenet_v2::graph()),
+        "shufflenet_v1" | "snv1" => Some(shufflenet_v1::graph()),
+        "shufflenet_v2" | "snv2" => Some(shufflenet_v2::graph()),
         _ => None,
     }
 }
@@ -669,6 +678,38 @@ mod tests {
     fn zoo_names_match_all_networks() {
         let names: Vec<String> = all_networks().into_iter().map(|n| n.name).collect();
         assert_eq!(names, zoo_names());
+    }
+
+    #[test]
+    fn resolve_lists_the_zoo_and_mentions_net_file() {
+        assert_eq!(resolve("mbv2").unwrap().name, "mobilenet_v2");
+        let err = resolve("resnet50").unwrap_err();
+        assert!(err.contains("unknown network \"resnet50\""), "{err}");
+        for name in zoo_names() {
+            assert!(err.contains(name), "{err}");
+        }
+        assert!(err.contains("--net-file"), "{err}");
+    }
+
+    #[test]
+    fn zoo_graphs_validate_and_lower_to_the_zoo_networks() {
+        for name in zoo_names() {
+            let g = zoo_graph(name).unwrap();
+            g.validate().unwrap();
+            let lowered = crate::ir::lower(&g).unwrap();
+            assert_eq!(format!("{lowered:?}"), format!("{:?}", by_name(name).unwrap()));
+        }
+        assert!(zoo_graph("resnet50").is_none());
+    }
+
+    #[test]
+    fn network_def_round_trips_every_zoo_network() {
+        for net in all_networks() {
+            let text = network_to_json_value(&net).to_string();
+            let parsed = crate::util::json::Json::parse(&text).unwrap();
+            let back = network_from_json_value(&parsed).unwrap();
+            assert_eq!(format!("{back:?}"), format!("{net:?}"));
+        }
     }
 
     #[test]

@@ -6,17 +6,20 @@
 //! with a 3x3/s2 average-pooled shortcut (modelled as a teed AvgPool layer
 //! feeding the Concat join).
 
-use super::{NetBuilder, Network};
+use crate::ir::{lower, Graph, GraphBuilder};
+
+use super::Network;
 
 const GROUPS: usize = 3;
 /// (output channels, repeats) per stage for g = 3.
 const STAGES: [(usize, usize); 3] = [(240, 4), (480, 8), (960, 4)];
 
-pub fn shufflenet_v1() -> Network {
-    let mut b = NetBuilder::new("shufflenet_v1", 224, 3);
+/// The layer-graph description (the zoo's source of truth; lowered below).
+pub(crate) fn graph() -> Graph {
+    let mut b = GraphBuilder::new("shufflenet_v1", 224, 3);
 
     b.block("stem");
-    b.stc(24, 3, 2, 1); // 224 -> 112
+    b.conv(24, 3, 2, 1); // 224 -> 112
     b.maxpool(3, 2, 1); // 112 -> 56
 
     for (stage_idx, (out_ch, repeats)) in STAGES.iter().enumerate() {
@@ -25,38 +28,41 @@ pub fn shufflenet_v1() -> Network {
             b.block(&format!("stage{}_{}", stage, rep + 1));
             let in_ch = b.cur_ch();
             let mid = out_ch / 4;
+            let unit_input = b.cursor().expect("stem precedes every unit");
             if rep == 0 {
                 // Stride-2 unit: main branch narrows to out_ch - in_ch so the
                 // pooled shortcut concat restores out_ch.
-                let branch_start = b.len();
                 // First grouped PWC of stage2 unit1 operates on 24 input
                 // channels and is conventionally ungrouped.
                 let g1 = if stage == 2 { 1 } else { GROUPS };
-                b.gpwc(mid, g1);
+                b.gpwconv(mid, g1);
                 b.shuffle();
-                b.dwc(3, 2, 1);
-                b.gpwc(out_ch - in_ch, GROUPS);
+                b.dwconv(3, 2, 1);
+                let main_out = b.gpwconv(out_ch - in_ch, GROUPS);
                 // Shortcut branch: 3x3/s2 avgpool on the unit input; the
                 // main branch output is buffered (snapshot) until the pooled
                 // stream joins it at the Concat.
-                b.from_tee(branch_start);
-                let ap = b.avgpool_spatial(3, 2, 1);
-                b.concat_scb(ap, out_ch - in_ch);
+                b.set_cursor(Some(unit_input));
+                b.avgpool(3, 2, 1);
+                b.concat_from(main_out);
             } else {
-                let branch_start = b.len();
-                b.gpwc(mid, GROUPS);
+                b.gpwconv(mid, GROUPS);
                 b.shuffle();
-                b.dwc(3, 1, 1);
-                b.gpwc(*out_ch, GROUPS);
-                b.add_scb(branch_start);
+                b.dwconv(3, 1, 1);
+                b.gpwconv(*out_ch, GROUPS);
+                b.add_from(unit_input);
             }
         }
     }
 
     b.block("head");
-    b.avgpool();
+    b.global_avgpool();
     b.fc(1000);
     b.finish()
+}
+
+pub fn shufflenet_v1() -> Network {
+    lower(&graph()).expect("zoo graph lowers")
 }
 
 #[cfg(test)]

@@ -7,19 +7,22 @@
 //! * Stride-2 unit: both branches consume the unit input — branch A
 //!   (shortcut-side) is dwc3x3/s2 -> pwc, branch B is pwc -> dwc3x3/s2 ->
 //!   pwc; Concat doubles the channels; shuffle follows. Branch B is
-//!   expressed with a [`LayerSrc::Tee`] back to the unit input, and branch
-//!   A's output is the buffered SCB snapshot.
+//!   expressed with a [`crate::nets::LayerSrc::Tee`] back to the unit
+//!   input, and branch A's output is the buffered SCB snapshot.
 
-use super::{NetBuilder, Network};
+use crate::ir::{lower, Graph, GraphBuilder};
+
+use super::Network;
 
 /// (output channels, repeats) per stage for the 1.0x model.
 const STAGES: [(usize, usize); 3] = [(116, 4), (232, 8), (464, 4)];
 
-pub fn shufflenet_v2() -> Network {
-    let mut b = NetBuilder::new("shufflenet_v2", 224, 3);
+/// The layer-graph description (the zoo's source of truth; lowered below).
+pub(crate) fn graph() -> Graph {
+    let mut b = GraphBuilder::new("shufflenet_v2", 224, 3);
 
     b.block("stem");
-    b.stc(24, 3, 2, 1); // 224 -> 112
+    b.conv(24, 3, 2, 1); // 224 -> 112
     b.maxpool(3, 2, 1); // 112 -> 56
 
     for (stage_idx, (out_ch, repeats)) in STAGES.iter().enumerate() {
@@ -30,36 +33,38 @@ pub fn shufflenet_v2() -> Network {
             if rep == 0 {
                 // Stride-2 unit. Branch A (shortcut side) first in stream
                 // order; its output is buffered while branch B computes.
-                let unit_start = b.len();
-                b.dwc(3, 2, 1);
-                b.pwc(half);
-                // Branch B re-reads the unit input through a tee. The SCB
-                // snapshot (buffered stream) is branch A's output, i.e. the
-                // output of the layer preceding the first tee layer.
-                b.from_tee(unit_start);
-                let b_first = b.pwc(half);
-                b.dwc(3, 2, 1);
-                b.pwc(half);
-                b.concat_scb(b_first, half);
+                let unit_input = b.cursor().expect("stem precedes every unit");
+                b.dwconv(3, 2, 1);
+                let a_out = b.pwconv(half);
+                // Branch B re-reads the unit input through a tee; the SCB
+                // snapshot (buffered stream) is branch A's output.
+                b.set_cursor(Some(unit_input));
+                b.pwconv(half);
+                b.dwconv(3, 2, 1);
+                b.pwconv(half);
+                b.concat_from(a_out);
                 b.shuffle();
             } else {
                 // Stride-1 unit: split, through-branch, concat, shuffle.
-                b.split(half);
-                let branch_start = b.len();
-                b.pwc(half);
-                b.dwc(3, 1, 1);
-                b.pwc(half);
-                b.concat_scb(branch_start, half);
+                let split = b.split(half);
+                b.pwconv(half);
+                b.dwconv(3, 1, 1);
+                b.pwconv(half);
+                b.concat_from(split);
                 b.shuffle();
             }
         }
     }
 
     b.block("head");
-    b.pwc(1024);
-    b.avgpool();
+    b.pwconv(1024);
+    b.global_avgpool();
     b.fc(1000);
     b.finish()
+}
+
+pub fn shufflenet_v2() -> Network {
+    lower(&graph()).expect("zoo graph lowers")
 }
 
 #[cfg(test)]

@@ -99,7 +99,7 @@ use crate::sim::SimOptions;
 use crate::util::json::Json;
 use crate::util::pool;
 
-pub use cache::{CacheStats, CellCache};
+pub use cache::{CacheStats, CellCache, GcStats};
 
 /// The matrix a sweep runs over, plus per-cell simulation depth.
 #[derive(Debug, Clone)]
@@ -206,17 +206,7 @@ impl SweepSpec {
             if names.is_empty() {
                 return Err("--nets: empty network list".to_string());
             }
-            spec.nets = names
-                .iter()
-                .map(|n| {
-                    nets::by_name(n).ok_or_else(|| {
-                        format!(
-                            "unknown network {n:?} (known networks: {})",
-                            nets::zoo_names().join(", ")
-                        )
-                    })
-                })
-                .collect::<Result<_, _>>()?;
+            spec.nets = names.iter().map(|n| nets::resolve(n)).collect::<Result<_, _>>()?;
         }
         if let Some(csv) = platforms_csv {
             let names = split_csv(csv);
@@ -239,6 +229,43 @@ impl SweepSpec {
             "--granularities",
             spec.granularities.iter().map(|g| granularity_name(*g).to_string()),
         )?;
+        Ok(spec)
+    }
+
+    /// Build a spec from the CLI's full network-selection surface:
+    /// [`SweepSpec::from_csv`] plus `--net-file`, a comma-separated list
+    /// of JSON network-description paths ([`crate::ir::from_json`],
+    /// schema in `docs/net_schema.md`), each loaded, validated, and
+    /// lowered through [`crate::ir::load_file`].
+    ///
+    /// `--net-file` alone sweeps exactly the loaded networks (the default
+    /// zoo axis would bury them); combined with `--nets` the loaded
+    /// networks are appended to the named ones, with duplicates rejected
+    /// across the union.
+    pub fn from_cli(
+        nets_csv: Option<&str>,
+        net_files_csv: Option<&str>,
+        platforms_csv: Option<&str>,
+        granularities_csv: Option<&str>,
+    ) -> Result<SweepSpec, String> {
+        let mut spec = SweepSpec::from_csv(nets_csv, platforms_csv, granularities_csv)?;
+        if let Some(csv) = net_files_csv {
+            let paths = split_csv(csv);
+            if paths.is_empty() {
+                return Err("--net-file: empty file list".to_string());
+            }
+            let mut loaded = Vec::with_capacity(paths.len());
+            for p in paths {
+                loaded
+                    .push(crate::ir::load_file(Path::new(p)).map_err(|e| format!("--net-file {e}"))?);
+            }
+            if nets_csv.is_none() {
+                spec.nets = loaded;
+            } else {
+                spec.nets.extend(loaded);
+            }
+            reject_duplicates("--nets/--net-file", spec.nets.iter().map(|n| n.name.clone()))?;
+        }
         Ok(spec)
     }
 
@@ -344,10 +371,12 @@ impl SweepSpec {
                 let key = self.cell_key(net, platform, granularity, frames_req);
                 if let Some(cell) = cache.load(&key) {
                     // The trusted reloader rebuilds the network by zoo
-                    // name; a *custom* Network sharing a zoo name (or any
+                    // name or from the artifact's embedded network_def
+                    // (non-zoo `--net-file` cells); either way, a *custom*
+                    // Network sharing a stored cell's name (or any
                     // structural drift the key somehow missed) must not be
-                    // served a zoo-net cell. Verbatim structural equality
-                    // with the probe network, or it's a miss.
+                    // served that cell. Verbatim structural equality with
+                    // the probe network, or it's a miss.
                     if format!("{:?}", cell.design().network()) == format!("{net:?}") {
                         hits.fetch_add(1, Ordering::Relaxed);
                         return cell;

@@ -29,11 +29,20 @@
 //! callers that want fail-loudly semantics probe the directory first, as
 //! the `repro sweep --cache-dir` CLI path does.
 //!
-//! Only **zoo** networks are warm-servable: the trusted reloader rebuilds
-//! the network by name from [`crate::nets`], and [`super::SweepSpec::run`]
-//! re-checks the rebuilt network verbatim against the probe's at hit
-//! time. A sweep over a custom `Network` therefore stays correct but
-//! permanently cold (stored, never served).
+//! Every network is warm-servable: zoo cells reload by rebuilding the
+//! network by name from [`crate::nets`], and non-zoo cells (a `--net-file`
+//! graph) reload from the `network_def` object their design artifact
+//! embeds. Either way [`super::SweepSpec::run`] re-checks the reloaded
+//! network verbatim against the probe's at hit time, so a renamed or
+//! edited network file degrades to a miss, never a wrong cell.
+//!
+//! # Eviction
+//!
+//! The cache grows one file per distinct cell until [`CellCache::gc`]
+//! (the CLI's `repro sweep --cache-gc <max-entries>`) trims it to a
+//! budget. Eviction is LRU: serving a hit re-writes the entry's bytes to
+//! bump its mtime, and `gc` deletes oldest-first beyond the budget — so
+//! the working set of a sweep that just ran is always retained.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -123,9 +132,16 @@ impl CellCache {
     /// is byte-equal to `key` and whose cell deserializes cleanly. Every
     /// other outcome (absent file, I/O error, version or key mismatch,
     /// malformed cell) is a miss.
+    ///
+    /// A hit also *touches* the entry (rewrites the identical bytes via
+    /// the same temp-file-and-rename path as [`CellCache::store`], best
+    /// effort) so its mtime records the access — that recency is what
+    /// [`CellCache::gc`]'s newest-first retention order keys on, making
+    /// eviction LRU rather than insertion-order.
     pub(super) fn load(&self, key: &Json) -> Option<SweepCell> {
         let key_text = key.to_string();
-        let text = std::fs::read_to_string(self.entry_path(&key_text)).ok()?;
+        let path = self.entry_path(&key_text);
+        let text = std::fs::read_to_string(&path).ok()?;
         let entry = Json::parse(&text).ok()?;
         if entry.field_f64("version") != Some(ENTRY_VERSION) {
             return None;
@@ -133,7 +149,9 @@ impl CellCache {
         if entry.get("key")?.to_string() != key_text {
             return None; // hash collision or hand-edited entry: treat as cold
         }
-        cell_from_json(entry.get("cell")?).ok()
+        let cell = cell_from_json(entry.get("cell")?).ok()?;
+        self.write_entry(&path, text); // touch: bump mtime for LRU recency
+        Some(cell)
     }
 
     /// Persist `cell` under `key`, best-effort (failures leave the cache
@@ -148,11 +166,72 @@ impl CellCache {
         m.insert("version".to_string(), Json::Num(ENTRY_VERSION));
         let mut text = Json::Obj(m).to_string();
         text.push('\n');
-        let path = self.entry_path(&key_text);
+        self.write_entry(&self.entry_path(&key_text), text);
+    }
+
+    /// Atomic best-effort entry write (temp sibling + rename), shared by
+    /// [`CellCache::store`] and the touch-on-hit path in
+    /// [`CellCache::load`].
+    fn write_entry(&self, path: &Path, text: String) {
         let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-        if std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, &path).is_err() {
+        if std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, path).is_err() {
             let _ = std::fs::remove_file(&tmp);
         }
+    }
+
+    /// Shrink the cache to at most `max_entries` entries, evicting the
+    /// **least recently used** first: entries are ranked newest-mtime
+    /// first (file name breaks ties deterministically) and the tail is
+    /// deleted. Because [`CellCache::load`] touches every entry it
+    /// serves, an entry the very next identical run would hit is by
+    /// construction among the most recent and is never evicted — the
+    /// invariant `gc_keeps_every_entry_the_next_run_hits` pins.
+    ///
+    /// Unreadable metadata ranks a file oldest (evicted first); I/O
+    /// errors while deleting are ignored. Non-entry files (temp files,
+    /// strays) are never counted or touched. The CLI exposes this as
+    /// `repro sweep --cache-gc <max-entries>`.
+    pub fn gc(&self, max_entries: usize) -> GcStats {
+        let mut entries: Vec<(std::time::SystemTime, String, PathBuf)> = Vec::new();
+        let Ok(dir) = std::fs::read_dir(&self.dir) else {
+            return GcStats { kept: 0, evicted: 0 };
+        };
+        for e in dir.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if !name.ends_with(".cell.json") {
+                continue;
+            }
+            let mtime = e
+                .metadata()
+                .and_then(|m| m.modified())
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            entries.push((mtime, name, e.path()));
+        }
+        // Newest first; names (content-hash derived, unique) break ties.
+        entries.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+        let mut stats = GcStats { kept: entries.len().min(max_entries), evicted: 0 };
+        for (_, _, path) in entries.iter().skip(max_entries) {
+            let _ = std::fs::remove_file(path);
+            stats.evicted += 1;
+        }
+        stats
+    }
+}
+
+/// What [`CellCache::gc`] did: how many entries survived and how many
+/// were deleted. Printed to stderr by `repro sweep --cache-gc`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GcStats {
+    /// Entries retained (the `min(entries, max_entries)` newest).
+    pub kept: usize,
+    /// Entries deleted (oldest first beyond `max_entries`).
+    pub evicted: usize,
+}
+
+impl GcStats {
+    /// The one-line rendering `repro sweep --cache-gc` prints to stderr.
+    pub fn summary(&self, dir: &Path) -> String {
+        format!("cache gc: kept {}, evicted {} at {}", self.kept, self.evicted, dir.display())
     }
 }
 
@@ -295,6 +374,68 @@ mod tests {
             std::fs::read_to_string(&path).unwrap().replace("\"key\":\"k\"", "\"key\":\"q\"");
         std::fs::write(&path, swapped).unwrap();
         assert!(cache.load(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn entry_names(dir: &Path) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".cell.json"))
+            .collect();
+        names.sort();
+        names
+    }
+
+    #[test]
+    fn gc_keeps_every_entry_the_next_run_hits() {
+        let dir = tmp_cache("gc_lru");
+        let cache = CellCache::open(&dir);
+        // Plant stale lookalike entries *before* the real run, so they are
+        // strictly older than anything the run stores or touches.
+        for i in 0..3 {
+            std::fs::write(
+                dir.join(format!("{:032x}.cell.json", 0xdead_beef_u64 + i)),
+                "{\"version\":1,\"key\":\"stale\",\"cell\":{}}\n",
+            )
+            .unwrap();
+        }
+        let mut spec =
+            SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), Some("fgpm")).unwrap();
+        spec.clocks_hz = SweepSpec::parse_clocks_csv("100,200").unwrap();
+        spec.cache_dir = Some(dir.clone());
+        let cold = spec.run();
+        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2 }));
+        assert_eq!(entry_names(&dir).len(), 5, "2 live + 3 stale entries");
+        // A warm run touches both live entries, marking them most recent.
+        assert_eq!(spec.run().cache, Some(CacheStats { hits: 2, misses: 0 }));
+        // GC down to exactly the working set: the 3 stale entries go, and
+        // nothing the very next identical run would hit is evicted.
+        let stats = cache.gc(2);
+        assert_eq!(stats, GcStats { kept: 2, evicted: 3 });
+        assert_eq!(stats.summary(&dir), format!("cache gc: kept 2, evicted 3 at {}", dir.display()));
+        assert_eq!(entry_names(&dir).len(), 2);
+        let after = spec.run();
+        assert_eq!(after.cache, Some(CacheStats { hits: 2, misses: 0 }), "gc evicted a live cell");
+        assert_eq!(after.to_json(), cold.to_json(), "gc must never change sweep bytes");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_with_headroom_evicts_nothing() {
+        let dir = tmp_cache("gc_headroom");
+        let cache = CellCache::open(&dir);
+        let mut spec = SweepSpec::from_csv(Some("mbv1"), Some("edge"), Some("fgpm")).unwrap();
+        spec.clocks_hz = SweepSpec::parse_clocks_csv("150").unwrap();
+        spec.cache_dir = Some(dir.clone());
+        spec.run();
+        let before = entry_names(&dir);
+        assert_eq!(before.len(), 1);
+        assert_eq!(cache.gc(1), GcStats { kept: 1, evicted: 0 });
+        assert_eq!(cache.gc(usize::MAX), GcStats { kept: 1, evicted: 0 });
+        assert_eq!(entry_names(&dir), before, "gc under budget must not delete entries");
+        // An empty or unreadable directory reports zeros instead of erroring.
+        assert_eq!(CellCache::open(&dir.join("missing")).gc(4), GcStats { kept: 0, evicted: 0 });
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,237 @@
+//! IR front-end integration tests: the layer-graph `Graph` description,
+//! its JSON wire format, and the lowering pass, pinned against both the
+//! committed `networks/*.json` catalog and the golden design baselines.
+//!
+//! The contract under test, end to end:
+//!
+//! * `ir::to_json` -> `ir::from_json` -> `ir::lower` is equivalent to
+//!   lowering the zoo graph directly, for every zoo network;
+//! * the committed catalog files are byte-identical to what the Rust
+//!   writer emits (so `python/gen_networks.py` and `ir::to_json` can
+//!   never drift apart silently);
+//! * a `Design` built from an IR-lowered zoo network reproduces the
+//!   committed golden baseline byte-for-byte — the IR refactor moved the
+//!   zoo's construction path without moving a single derived figure;
+//! * a committed non-zoo network (`mobilenet_v2_050.json`) flows through
+//!   the whole pipeline: load, design (with an embedded `network_def`),
+//!   both artifact readers, and a cached sweep that goes 100% warm on
+//!   re-run and cold again when the graph content changes;
+//! * malformed documents die with actionable, node-named errors.
+
+use std::path::PathBuf;
+
+use repro::design::{Design, Platform};
+use repro::sweep::{CacheStats, SweepSpec};
+use repro::{ir, nets};
+
+fn networks_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("networks")
+}
+
+fn baselines_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("baselines")
+}
+
+/// (full name, baseline short name) for the whole zoo.
+const ZOO: [(&str, &str); 4] = [
+    ("mobilenet_v1", "mbv1"),
+    ("mobilenet_v2", "mbv2"),
+    ("shufflenet_v1", "snv1"),
+    ("shufflenet_v2", "snv2"),
+];
+
+#[test]
+fn zoo_graphs_round_trip_through_json_and_lower_identically() {
+    for (name, _) in ZOO {
+        let graph = nets::zoo_graph(name).expect("zoo graph");
+        let text = ir::to_json(&graph);
+        let back = ir::from_json(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(graph, back, "{name}: from_json(to_json(g)) must be the identity");
+        // Serialization is a fixed point, so committed files re-export
+        // byte-identically no matter which side wrote them.
+        assert_eq!(ir::to_json(&back), text, "{name}: to_json must be a fixed point");
+        let direct = nets::by_name(name).expect("zoo network");
+        let via_json = ir::lower(&back).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(
+            format!("{direct:?}"),
+            format!("{via_json:?}"),
+            "{name}: lowering a JSON round-tripped graph diverged from the zoo network"
+        );
+    }
+}
+
+#[test]
+fn committed_catalog_matches_the_rust_writer_byte_for_byte() {
+    for (name, _) in ZOO {
+        let path = networks_dir().join(format!("{name}.json"));
+        let committed = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!("{}: {e} (regenerate with `python3 python/gen_networks.py`)", path.display())
+        });
+        let expected = ir::to_json(&nets::zoo_graph(name).expect("zoo graph"));
+        assert_eq!(
+            committed,
+            expected,
+            "{}: stale against the Rust builder — regenerate with `python3 python/gen_networks.py`",
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn every_committed_network_loads_validates_and_lowers() {
+    let mut loaded = Vec::new();
+    for entry in std::fs::read_dir(networks_dir()).expect("networks/ directory") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let net = ir::load_file(&path).unwrap_or_else(|e| panic!("{e}"));
+        net.validate().unwrap_or_else(|e| panic!("{}: lowered network invalid: {e}", path.display()));
+        loaded.push(net.name.clone());
+    }
+    loaded.sort();
+    // The four zoo networks plus at least one non-zoo LWCNN.
+    for (name, _) in ZOO {
+        assert!(loaded.iter().any(|n| n == name), "catalog is missing {name}: {loaded:?}");
+    }
+    assert!(
+        loaded.iter().any(|n| nets::by_name(n).is_none()),
+        "catalog must carry at least one non-zoo network, found only {loaded:?}"
+    );
+}
+
+#[test]
+fn ir_lowered_designs_match_committed_golden_baselines() {
+    // The acceptance bar of the IR refactor: every zoo network, lowered
+    // through the IR path, produces byte-identical design artifacts to
+    // the committed pre-IR golden baselines on every catalog platform.
+    for (name, short) in ZOO {
+        let net = ir::lower(&nets::zoo_graph(name).expect("zoo graph")).expect("zoo graph lowers");
+        for platform in Platform::list() {
+            let path = baselines_dir().join(format!("{short}_{}_fgpm.design.json", platform.name));
+            let committed = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            let design = Design::builder(&net).platform(platform.clone()).build();
+            assert_eq!(
+                committed.trim_end_matches('\n'),
+                design.to_json(),
+                "{name} on {}: IR-lowered design diverged from the golden baseline",
+                platform.name
+            );
+        }
+    }
+}
+
+/// A minimal `repro-net` document with the given node lines.
+fn doc(nodes: &str) -> String {
+    format!(
+        "{{\n  \"format\": \"repro-net\",\n  \"version\": 1,\n  \"name\": \"t\",\n  \
+         \"input\": {{\"size\": 8, \"channels\": 4}},\n  \"nodes\": [\n{nodes}\n  ]\n}}\n"
+    )
+}
+
+#[test]
+fn malformed_documents_fail_with_actionable_errors() {
+    // Shape mismatch at a concat: one branch strides down to 4x4, the
+    // other stays 8x8.
+    let mismatch = doc(
+        r#"    {"name": "a", "block": "b", "op": "conv", "inputs": [], "out_ch": 4, "k": 3, "stride": 2, "pad": 1},
+    {"name": "c", "block": "b", "op": "conv", "inputs": [], "out_ch": 4, "k": 3, "stride": 1, "pad": 1},
+    {"name": "join", "block": "b", "op": "concat", "inputs": [1, 0]}"#,
+    );
+    let err = ir::from_json(&mismatch).unwrap_err();
+    assert!(err.contains("shape mismatch at concat"), "{err}");
+    assert!(err.contains("\"join\""), "error must name the node: {err}");
+
+    // Dangling edge: references a node index past the end of the list.
+    let dangling = doc(
+        r#"    {"name": "a", "block": "b", "op": "conv", "inputs": [], "out_ch": 4, "k": 3, "stride": 1, "pad": 1},
+    {"name": "out", "block": "b", "op": "fc", "inputs": [7], "out_ch": 10}"#,
+    );
+    let err = ir::from_json(&dangling).unwrap_err();
+    assert!(err.contains("dangling edge"), "{err}");
+    assert!(err.contains("undefined node 7"), "{err}");
+
+    // Cycle: a forward edge means the topological order cannot exist.
+    let cycle = doc(
+        r#"    {"name": "a", "block": "b", "op": "conv", "inputs": [1], "out_ch": 4, "k": 3, "stride": 1, "pad": 1},
+    {"name": "c", "block": "b", "op": "conv", "inputs": [0], "out_ch": 4, "k": 3, "stride": 1, "pad": 1}"#,
+    );
+    let err = ir::from_json(&cycle).unwrap_err();
+    assert!(err.contains("cycle"), "{err}");
+
+    // Loader-level failures point at the file.
+    let err = ir::load_file(&networks_dir().join("no_such_network.json")).unwrap_err();
+    assert!(err.contains("no_such_network.json"), "{err}");
+}
+
+#[test]
+fn sweep_from_cli_threads_net_files_onto_the_network_axis() {
+    let file = networks_dir().join("mobilenet_v2_050.json");
+    let file = file.to_str().expect("utf-8 path");
+
+    // --net-file alone replaces the default zoo axis.
+    let solo = SweepSpec::from_cli(None, Some(file), Some("zc706"), Some("fgpm")).unwrap();
+    assert_eq!(solo.nets.len(), 1);
+    assert_eq!(solo.nets[0].name, "mobilenet_v2_050");
+
+    // Next to --nets it extends the axis instead.
+    let both = SweepSpec::from_cli(Some("mbv1"), Some(file), Some("zc706"), Some("fgpm")).unwrap();
+    assert_eq!(both.nets.len(), 2);
+    assert_eq!((both.nets[0].name.as_str(), both.nets[1].name.as_str()),
+               ("mobilenet_v1", "mobilenet_v2_050"));
+
+    // A missing file fails loudly, naming the flag and the path.
+    let err = SweepSpec::from_cli(None, Some("networks/absent.json"), None, None).unwrap_err();
+    assert!(err.contains("--net-file"), "{err}");
+    assert!(err.contains("absent.json"), "{err}");
+
+    // The resolver behind --nets lists the zoo and mentions --net-file.
+    let err = SweepSpec::from_cli(Some("resnet50"), None, None, None).unwrap_err();
+    assert!(err.contains("unknown network \"resnet50\""), "{err}");
+    assert!(err.contains("--net-file"), "{err}");
+}
+
+#[test]
+fn non_zoo_network_designs_embed_their_definition_and_sweep_warm() {
+    let path = networks_dir().join("mobilenet_v2_050.json");
+    let net = ir::load_file(&path).expect("catalog loads");
+    assert!(nets::by_name(&net.name).is_none(), "mobilenet_v2_050 must stay out of the zoo");
+
+    // The design artifact is self-contained: it embeds the network
+    // definition, and both readers rebuild it bit-for-bit.
+    let design = Design::builder(&net).build();
+    let text = design.to_json();
+    assert!(text.contains("\"network_def\""), "non-zoo artifact must embed its network");
+    let checked = Design::from_json(&text).expect("checked reload");
+    assert_eq!(format!("{:?}", checked.network()), format!("{net:?}"));
+    let trusted = Design::from_json_unchecked(&text).expect("trusted reload");
+    assert_eq!(trusted.to_json(), text, "trusted reload must be a byte-identical fixed point");
+
+    // Cached sweep: cold run stores, identical re-run is 100% warm, and
+    // the documents are byte-identical.
+    let dir = std::env::temp_dir().join("repro_ir_netfile_cache");
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = SweepSpec {
+        nets: vec![net],
+        platforms: vec![Platform::zc706()],
+        cache_dir: Some(dir.clone()),
+        ..SweepSpec::default()
+    };
+    let cold = spec.run();
+    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 1 }));
+    let warm = spec.run();
+    assert_eq!(warm.cache, Some(CacheStats { hits: 1, misses: 0 }));
+    assert_eq!(cold.to_json(), warm.to_json(), "warm document must be byte-identical");
+
+    // Editing the network file changes the content key: the same sweep
+    // over the edited graph misses instead of serving the stale cell.
+    let edited_text = std::fs::read_to_string(&path)
+        .unwrap()
+        .replace("\"out_ch\": 1000", "\"out_ch\": 1001");
+    let edited_graph = ir::from_json(&edited_text).expect("edited graph still valid");
+    let edited = ir::lower(&edited_graph).expect("edited graph lowers");
+    let respec = SweepSpec { nets: vec![edited], ..spec };
+    assert_eq!(respec.run().cache, Some(CacheStats { hits: 0, misses: 1 }));
+    let _ = std::fs::remove_dir_all(&dir);
+}
