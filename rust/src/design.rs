@@ -64,6 +64,7 @@ use crate::model::memory::{self, CePlan, FmScheme, MemoryModelCfg, SramReport};
 use crate::model::throughput::{self, Performance};
 use crate::nets::{self, Network};
 use crate::sim::{self, Deadlock, PaddingMode, SimOptions, SimStats};
+use crate::util::error::ReproError;
 use crate::util::json::Json;
 use crate::{edge, zc706, zcu102, CLOCK_HZ};
 
@@ -180,9 +181,12 @@ impl Platform {
     /// let err = Platform::resolve("vu9p").unwrap_err();
     /// assert!(err.contains("known platforms: zc706, zcu102, edge"));
     /// ```
-    pub fn resolve(name: &str) -> Result<Platform, String> {
+    pub fn resolve(name: &str) -> Result<Platform, ReproError> {
         Platform::by_name(name).ok_or_else(|| {
-            format!("unknown platform {name:?} (known platforms: {})", Platform::known_names())
+            ReproError::config(format!(
+                "unknown platform {name:?} (known platforms: {})",
+                Platform::known_names()
+            ))
         })
     }
 
@@ -222,7 +226,7 @@ impl Platform {
         ])
     }
 
-    pub(crate) fn from_json_value(j: &Json) -> Result<Platform, String> {
+    pub(crate) fn from_json_value(j: &Json) -> Result<Platform, ReproError> {
         Ok(Platform {
             name: str_field(j, "name")?,
             sram_bytes: num_field(j, "sram_bytes")? as u64,
@@ -520,20 +524,24 @@ impl Design {
     /// platform, granularity, sim options) and cross-checks the stored
     /// derived figures, so stale artifacts fail loudly instead of silently
     /// drifting from the current algorithms.
-    pub fn from_json(text: &str) -> Result<Design, String> {
-        let j = Json::parse(text).map_err(|e| e.to_string())?;
+    pub fn from_json(text: &str) -> Result<Design, ReproError> {
+        let j = Json::parse(text).map_err(|e| ReproError::config(e.to_string()))?;
         if let Some(v) = j.get("version").and_then(Json::as_f64) {
             if v != 1.0 {
-                return Err(format!("design json: unsupported version {v} (this reader supports 1)"));
+                return Err(ReproError::config(format!(
+                    "design json: unsupported version {v} (this reader supports 1)"
+                )));
             }
         }
         let net = network_from_design_json(&j)?;
         let platform = Platform::from_json_value(
-            j.get("platform").ok_or_else(|| "design json: missing \"platform\"".to_string())?,
+            j.get("platform")
+                .ok_or_else(|| ReproError::config("design json: missing \"platform\""))?,
         )?;
         let granularity = parse_granularity(&str_field(&j, "granularity")?)?;
         let sim_options = sim_options_from_json(
-            j.get("sim_options").ok_or_else(|| "design json: missing \"sim_options\"".to_string())?,
+            j.get("sim_options")
+                .ok_or_else(|| ReproError::config("design json: missing \"sim_options\""))?,
         )?;
         let d = Design::builder(&net)
             .platform(platform)
@@ -552,19 +560,19 @@ impl Design {
         for (key, recomputed) in checks {
             if let Some(stored) = j.get(key).and_then(Json::as_f64) {
                 if stored != recomputed {
-                    return Err(format!(
+                    return Err(ReproError::config(format!(
                         "design json: stored {key}={stored} disagrees with recomputed {recomputed} \
                          (stale artifact? regenerate with `repro allocate --save`)"
-                    ));
+                    )));
                 }
             }
         }
         if let Some(t) = j.get("performance").and_then(|p| p.get("t_max")).and_then(Json::as_f64) {
             if t != d.performance.t_max as f64 {
-                return Err(format!(
+                return Err(ReproError::config(format!(
                     "design json: stored t_max={t} disagrees with recomputed {}",
                     d.performance.t_max
-                ));
+                )));
             }
         }
         Ok(d)
@@ -588,27 +596,31 @@ impl Design {
     /// (an inputs-only seed is rejected), and
     /// `Design::from_json_unchecked(d.to_json())?.to_json()` is
     /// byte-identical to `d.to_json()`.
-    pub fn from_json_unchecked(text: &str) -> Result<Design, String> {
-        let j = Json::parse(text).map_err(|e| e.to_string())?;
+    pub fn from_json_unchecked(text: &str) -> Result<Design, ReproError> {
+        let j = Json::parse(text).map_err(|e| ReproError::config(e.to_string()))?;
         match j.field_f64("version") {
             Some(v) if v == 1.0 => {}
             Some(v) => {
-                return Err(format!("design json: unsupported version {v} (this reader supports 1)"))
+                return Err(ReproError::config(format!(
+                    "design json: unsupported version {v} (this reader supports 1)"
+                )))
             }
-            None => return Err("design json: missing number \"version\"".to_string()),
+            None => return Err(ReproError::config("design json: missing number \"version\"")),
         }
         let net = network_from_design_json(&j)?;
         let platform = Platform::from_json_value(
-            j.get("platform").ok_or_else(|| "design json: missing \"platform\"".to_string())?,
+            j.get("platform")
+                .ok_or_else(|| ReproError::config("design json: missing \"platform\""))?,
         )?;
         let granularity = parse_granularity(&str_field(&j, "granularity")?)?;
         let sim_options = sim_options_from_json(
-            j.get("sim_options").ok_or_else(|| "design json: missing \"sim_options\"".to_string())?,
+            j.get("sim_options")
+                .ok_or_else(|| ReproError::config("design json: missing \"sim_options\""))?,
         )?;
         let allocs = j
             .get("allocs")
             .and_then(Json::as_arr)
-            .ok_or_else(|| "design json: missing array \"allocs\"".to_string())?
+            .ok_or_else(|| ReproError::config("design json: missing array \"allocs\""))?
             .iter()
             .map(|a| match a.as_arr() {
                 Some([pw, pf]) => match (pw.as_f64(), pf.as_f64()) {
@@ -616,27 +628,29 @@ impl Design {
                         pw: pw as usize,
                         pf: pf as usize,
                     }),
-                    _ => Err("design json: non-numeric alloc pair".to_string()),
+                    _ => Err(ReproError::config("design json: non-numeric alloc pair")),
                 },
-                _ => Err("design json: alloc entries must be [pw, pf] pairs".to_string()),
+                _ => Err(ReproError::config("design json: alloc entries must be [pw, pf] pairs")),
             })
             .collect::<Result<Vec<_>, _>>()?;
         if allocs.len() != net.layers.len() {
-            return Err(format!(
+            return Err(ReproError::config(format!(
                 "design json: {} allocs for a {}-layer network",
                 allocs.len(),
                 net.layers.len()
-            ));
+            )));
         }
         let num = |key: &str| {
-            j.field_f64(key).ok_or_else(|| format!("design json: missing number {key:?}"))
+            j.field_f64(key)
+                .ok_or_else(|| ReproError::config(format!("design json: missing number {key:?}")))
         };
         let p = j
             .get("performance")
-            .ok_or_else(|| "design json: missing \"performance\"".to_string())?;
+            .ok_or_else(|| ReproError::config("design json: missing \"performance\""))?;
         let pnum = |key: &str| {
-            p.field_f64(key)
-                .ok_or_else(|| format!("design json: missing number performance/{key:?}"))
+            p.field_f64(key).ok_or_else(|| {
+                ReproError::config(format!("design json: missing number performance/{key:?}"))
+            })
         };
         let performance = Performance {
             t_max: pnum("t_max")? as u64,
@@ -680,24 +694,25 @@ impl Design {
 /// `network_def` (non-zoo artifacts — `--net-file` loads) takes
 /// precedence and is validated + cross-checked against the artifact's
 /// `network` name; otherwise the name must resolve in the zoo.
-fn network_from_design_json(j: &Json) -> Result<Network, String> {
+fn network_from_design_json(j: &Json) -> Result<Network, ReproError> {
     let net_name = str_field(j, "network")?;
     if let Some(def) = j.get("network_def") {
-        let net = nets::network_from_json_value(def).map_err(|e| format!("design json: {e}"))?;
+        let net = nets::network_from_json_value(def)
+            .map_err(|e| ReproError::config(format!("design json: {e}")))?;
         if net.name != net_name {
-            return Err(format!(
+            return Err(ReproError::config(format!(
                 "design json: embedded network_def describes {:?} but the artifact names \
                  {net_name:?}",
                 net.name
-            ));
+            )));
         }
         return Ok(net);
     }
     nets::by_name(&net_name).ok_or_else(|| {
-        format!(
+        ReproError::config(format!(
             "design json: network {net_name:?} is not in the zoo and the artifact embeds no \
              network_def"
-        )
+        ))
     })
 }
 
@@ -710,11 +725,13 @@ pub fn granularity_name(g: Granularity) -> &'static str {
 }
 
 /// Parse the wire name produced by [`granularity_name`].
-pub fn parse_granularity(s: &str) -> Result<Granularity, String> {
+pub fn parse_granularity(s: &str) -> Result<Granularity, ReproError> {
     match s {
         "fgpm" => Ok(Granularity::Fgpm),
         "factorized" => Ok(Granularity::Factorized),
-        _ => Err(format!("unknown granularity {s:?} (expected \"fgpm\" or \"factorized\")")),
+        _ => Err(ReproError::config(format!(
+            "unknown granularity {s:?} (expected \"fgpm\" or \"factorized\")"
+        ))),
     }
 }
 
@@ -734,20 +751,20 @@ pub(crate) fn sim_options_to_json(o: &SimOptions) -> Json {
     ])
 }
 
-fn sim_options_from_json(j: &Json) -> Result<SimOptions, String> {
+fn sim_options_from_json(j: &Json) -> Result<SimOptions, ReproError> {
     let padding = match str_field(j, "padding")?.as_str() {
         "direct_insert" => PaddingMode::DirectInsert,
         "address_generated" => PaddingMode::AddressGenerated,
-        other => return Err(format!("unknown padding mode {other:?}")),
+        other => return Err(ReproError::config(format!("unknown padding mode {other:?}"))),
     };
     let scheme = match str_field(j, "scheme")?.as_str() {
         "fully_reused_fm" => FmScheme::FullyReusedFm,
         "line_based" => FmScheme::LineBased,
-        other => return Err(format!("unknown FM scheme {other:?}")),
+        other => return Err(ReproError::config(format!("unknown FM scheme {other:?}"))),
     };
     let stride_extra_line = match j.get("stride_extra_line") {
         Some(Json::Bool(b)) => *b,
-        _ => return Err("design json: missing bool \"stride_extra_line\"".to_string()),
+        _ => return Err(ReproError::config("design json: missing bool \"stride_extra_line\"")),
     };
     Ok(SimOptions { padding, scheme, stride_extra_line })
 }
@@ -760,17 +777,17 @@ fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(m)
 }
 
-fn num_field(j: &Json, key: &str) -> Result<f64, String> {
+fn num_field(j: &Json, key: &str) -> Result<f64, ReproError> {
     j.get(key)
         .and_then(Json::as_f64)
-        .ok_or_else(|| format!("design json: missing number {key:?}"))
+        .ok_or_else(|| ReproError::config(format!("design json: missing number {key:?}")))
 }
 
-fn str_field(j: &Json, key: &str) -> Result<String, String> {
+fn str_field(j: &Json, key: &str) -> Result<String, ReproError> {
     j.get(key)
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| format!("design json: missing string {key:?}"))
+        .ok_or_else(|| ReproError::config(format!("design json: missing string {key:?}")))
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 //! the same actionable errors as [`Graph::validate`]. The schema is
 //! documented with a worked example in `docs/net_schema.md`.
 
+use crate::util::error::ReproError;
 use crate::util::json::Json;
 
 use super::{Graph, Node, Op, SCHEMA_FORMAT, SCHEMA_VERSION};
@@ -83,8 +84,16 @@ fn usize_field(obj: &Json, key: &str, at: &str) -> Result<usize, String> {
     Ok(n as usize)
 }
 
-/// Parse and validate a `repro-net` JSON document.
-pub fn from_json(text: &str) -> Result<Graph, String> {
+/// Parse and validate a `repro-net` JSON document. All failures — parse
+/// errors, schema violations, and the [`Graph::validate`] pass — are
+/// [`ReproError::Network`] errors.
+pub fn from_json(text: &str) -> Result<Graph, ReproError> {
+    let graph = parse_graph(text).map_err(ReproError::network)?;
+    graph.validate()?;
+    Ok(graph)
+}
+
+fn parse_graph(text: &str) -> Result<Graph, String> {
     let doc = Json::parse(text).map_err(|e| format!("network description: {e}"))?;
     let format = str_field(&doc, "format", "network description")?;
     if format != SCHEMA_FORMAT {
@@ -174,9 +183,7 @@ pub fn from_json(text: &str) -> Result<Graph, String> {
         nodes.push(Node { name: node_name, block, op, inputs });
     }
 
-    let graph = Graph { name, input_size, input_ch, nodes };
-    graph.validate()?;
-    Ok(graph)
+    Ok(Graph { name, input_size, input_ch, nodes })
 }
 
 #[cfg(test)]

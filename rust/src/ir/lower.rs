@@ -20,14 +20,16 @@
 //! multi-CE pipeline genuinely cannot stream them.
 
 use crate::nets::{Layer, LayerKind, LayerSrc, Network, Scb};
+use crate::util::error::ReproError;
 
 use super::{Graph, Op, Shape};
 
 /// Lower a validated graph to the streaming network representation.
 /// Lowering the zoo graphs reproduces the pre-IR hand-built networks
 /// field-for-field (`rust/tests/ir.rs` pins this against the golden
-/// baselines).
-pub fn lower(graph: &Graph) -> Result<Network, String> {
+/// baselines). Unstreamable graphs are rejected with
+/// [`ReproError::Network`].
+pub fn lower(graph: &Graph) -> Result<Network, ReproError> {
     let shapes = graph.shapes()?;
     let input_shape = Shape { size: graph.input_size, ch: graph.input_ch };
     // stream_src[t]: the node whose output layer t consumes as its stream
@@ -55,11 +57,11 @@ pub fn lower(graph: &Graph) -> Result<Network, String> {
             } else if b + 1 == i {
                 a
             } else {
-                return Err(at(format!(
+                return Err(ReproError::network(at(format!(
                     "join consumes nodes {a} and {b}, but neither is the immediately preceding \
                      node {} — the streaming order cannot close this shortcut",
                     i - 1
-                )));
+                ))));
             };
             // The shortcut snapshot is the stream entering layer
             // `shortcut + 1` (== the output of layer `shortcut`).
@@ -70,18 +72,20 @@ pub fn lower(graph: &Graph) -> Result<Network, String> {
                 None if i == 0 => (None, LayerSrc::Prev),
                 None => {
                     let t = stream_src.iter().position(Option::is_none).ok_or_else(|| {
-                        at("reads the network input, but no earlier layer streams it".to_string())
+                        ReproError::network(at(
+                            "reads the network input, but no earlier layer streams it".to_string(),
+                        ))
                     })?;
                     (None, LayerSrc::Tee(t))
                 }
                 Some(j) if j + 1 == i => (Some(j), LayerSrc::Prev),
                 Some(j) => {
                     let t = stream_src.iter().position(|s| *s == Some(j)).ok_or_else(|| {
-                        at(format!(
+                        ReproError::network(at(format!(
                             "reads node {j} ({:?}), but no earlier layer consumes that output as \
                              its stream input, so there is nothing to tee",
                             graph.nodes[j].name
-                        ))
+                        )))
                     })?;
                     (Some(j), LayerSrc::Tee(t))
                 }
@@ -131,7 +135,7 @@ pub fn lower(graph: &Graph) -> Result<Network, String> {
         layers,
         scbs,
     };
-    net.validate()?;
+    net.validate().map_err(ReproError::network)?;
     Ok(net)
 }
 

@@ -31,6 +31,7 @@ pub use json::{from_json, to_json};
 pub use lower::lower;
 
 use crate::nets::Network;
+use crate::util::error::ReproError;
 
 /// Schema version of the JSON network description ([`to_json`] writes it,
 /// [`from_json`] enforces it).
@@ -134,8 +135,13 @@ impl Graph {
     /// Shape-inference + validation pass: infer every node's output shape,
     /// rejecting malformed graphs (dangling edges, forward edges/cycles,
     /// arity violations, shape mismatches at joins, degenerate kernel
-    /// geometry, dead nodes) with errors that name the offending node.
-    pub fn shapes(&self) -> Result<Vec<Shape>, String> {
+    /// geometry, dead nodes) with [`ReproError::Network`] errors that name
+    /// the offending node.
+    pub fn shapes(&self) -> Result<Vec<Shape>, ReproError> {
+        self.shapes_impl().map_err(ReproError::network)
+    }
+
+    fn shapes_impl(&self) -> Result<Vec<Shape>, String> {
         if self.name.is_empty() {
             return Err("graph: empty network name".to_string());
         }
@@ -294,7 +300,7 @@ impl Graph {
     }
 
     /// Validate without keeping the shapes.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), ReproError> {
         self.shapes().map(|_| ())
     }
 }
@@ -462,11 +468,15 @@ impl GraphBuilder {
 
 /// Load a JSON network description from disk and lower it to the
 /// streaming [`Network`] every downstream subsystem consumes — the
-/// `--net-file` path of the CLI.
-pub fn load_file(path: &std::path::Path) -> Result<Network, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
-    let graph = from_json(&text).map_err(|e| format!("{}: {e}", path.display()))?;
-    lower(&graph).map_err(|e| format!("{}: {e}", path.display()))
+/// `--net-file` path of the CLI. All failures — unreadable file, schema
+/// violation, shape inference, lowering — are [`ReproError::Network`]
+/// errors prefixed with the offending path.
+pub fn load_file(path: &std::path::Path) -> Result<Network, ReproError> {
+    let prefix = format!("{}: ", path.display());
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ReproError::network(format!("{}{e}", prefix)))?;
+    let graph = from_json(&text).map_err(|e| e.prefixed(&prefix))?;
+    lower(&graph).map_err(|e| e.prefixed(&prefix))
 }
 
 #[cfg(test)]

@@ -65,6 +65,11 @@
 //!   executables with FM channels and a DRAM weight streamer.
 //! * [`report`] — paper-style table/figure renderers with the paper's
 //!   reference numbers side by side.
+//! * [`util`] — the offline-build support layer, including the typed
+//!   error taxonomy ([`util::error::ReproError`]) every fallible pipeline
+//!   stage reports through, and the deterministic fault-injection harness
+//!   ([`util::fault`], armed via `REPRO_FAULTS`) that the robustness
+//!   tests drive (`docs/robustness.md`).
 
 pub mod alloc;
 pub mod coordinator;
@@ -79,7 +84,8 @@ pub mod sweep;
 pub mod util;
 
 pub use design::{Design, Platform};
-pub use sweep::{CacheStats, ClockParetoReport, ParetoReport, SweepReport, SweepSpec};
+pub use sweep::{CacheStats, CellFailure, ClockParetoReport, ParetoReport, SweepReport, SweepSpec};
+pub use util::error::ReproError;
 
 /// Clock frequency of the evaluated design (the paper implements at 200 MHz).
 pub const CLOCK_HZ: f64 = 200.0e6;

@@ -26,7 +26,12 @@
 //!   FPS-vs-clock curve per cell, `--pareto` layers the per-network
 //!   {SRAM, FPS, DRAM} Pareto-frontier analysis on top, and
 //!   `--pareto-clocks` (with `--clocks`) promotes frequency to a fourth
-//!   Pareto axis.
+//!   Pareto axis. Cells are fault-isolated: a failing cell degrades the
+//!   run (partial report, stderr failure summary, exit code
+//!   [`sweep::EXIT_PARTIAL_FAILURE`]) instead of aborting it; `--strict`
+//!   refuses partial results and fails hard on the first failure. The
+//!   `REPRO_FAULTS` environment variable arms the deterministic
+//!   fault-injection harness (`docs/robustness.md`).
 //! * `net <FILE>` — load and validate a JSON network description through
 //!   the [`repro::ir`] front-end and print its lowered summary (`--json`
 //!   for a stable one-line document); CI runs this over every committed
@@ -43,6 +48,7 @@ use std::process::ExitCode;
 
 use repro::design::{Design, Platform};
 use repro::sweep::{self, SweepSpec};
+use repro::util::fault;
 use repro::util::json::Json;
 use repro::{alloc, coordinator, nets, report, runtime, sim};
 
@@ -57,7 +63,7 @@ fn usage() -> ExitCode {
          \x20 sweep  [--nets a,b,..] [--net-file FILE,..] [--platforms zc706,zcu102,edge]\n\
          \x20          [--granularities fgpm,factorized] [--frames N] [--jobs N] [--clocks MHZ,MHZ,..]\n\
          \x20          [--pareto] [--pareto-clocks] [--cache | --cache-dir DIR] [--cache-gc N]\n\
-         \x20          [--json] [--save-dir DIR]\n\
+         \x20          [--json] [--save-dir DIR] [--strict]\n\
          \x20 net    <FILE.json> [--json]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
@@ -426,13 +432,24 @@ fn main() -> ExitCode {
                     "--cache-dir",
                     "--cache-gc",
                 ],
-                &["--json", "--pareto", "--pareto-clocks", "--cache"],
+                &["--json", "--pareto", "--pareto-clocks", "--cache", "--strict"],
             ) {
                 return fail(&e);
             }
             if let Some(p) = positional(&args) {
                 return fail(&format!("sweep takes no positional argument, found {p:?}"));
             }
+            // The library silently disarms an unparsable REPRO_FAULTS (it
+            // cannot assume a CLI context); the CLI validates it loudly up
+            // front so a typo'd injection spec never runs fault-free and
+            // masquerades as a passed experiment.
+            if let Some(fault_spec) = fault::env_spec() {
+                if let Err(e) = fault::FaultPlan::parse(&fault_spec) {
+                    return fail(&format!("REPRO_FAULTS: {e}"));
+                }
+                eprintln!("sweep: fault injection armed: REPRO_FAULTS={fault_spec}");
+            }
+            let strict = args.iter().any(|a| a == "--strict");
             // Validate every flag (including --save-dir) before the
             // potentially expensive matrix run starts.
             let parsed = (|| -> Result<(SweepSpec, Option<String>, Option<usize>), String> {
@@ -510,6 +527,31 @@ fn main() -> ExitCode {
                 }
             }
             let sweep_report = spec.run();
+            // --strict refuses partial results: the first failure (in
+            // matrix order) becomes a hard error before any report,
+            // artifact, or cache line is emitted.
+            if strict {
+                if let Some(f) = sweep_report.failures.first() {
+                    return fail(&format!(
+                        "sweep --strict: cell {} failed ({}): {}",
+                        f.label(),
+                        f.error.kind(),
+                        f.error
+                    ));
+                }
+            }
+            if !sweep_report.failures.is_empty() {
+                // Stderr, like the cache stats: the JSON document carries
+                // the same data under its `failures` key.
+                eprintln!(
+                    "sweep: {} of {} cells failed:",
+                    sweep_report.failures.len(),
+                    spec.cell_count()
+                );
+                for f in &sweep_report.failures {
+                    eprintln!("  {} [{}]: {}", f.label(), f.error.kind(), f.error);
+                }
+            }
             if let (Some(stats), Some(dir)) = (&sweep_report.cache, &spec.cache_dir) {
                 // Stderr, not the JSON document: warm and cold documents
                 // must stay byte-identical (CI greps this line instead).
@@ -522,7 +564,14 @@ fn main() -> ExitCode {
             }
             if let Some(dir) = save_dir {
                 match sweep_report.save_designs(std::path::Path::new(&dir)) {
-                    Ok(paths) => eprintln!("saved {} design artifacts to {dir}", paths.len()),
+                    Ok(paths) if sweep_report.failures.is_empty() => {
+                        eprintln!("saved {} design artifacts to {dir}", paths.len())
+                    }
+                    Ok(paths) => eprintln!(
+                        "saved {} design artifacts to {dir} ({} cells failed, skipped)",
+                        paths.len(),
+                        sweep_report.failures.len()
+                    ),
                     Err(e) => return fail(&format!("--save-dir: {e}")),
                 }
             }
@@ -545,6 +594,14 @@ fn main() -> ExitCode {
                     println!("{}", report::pareto_clocks_table(&sweep_report, analysis));
                 }
             }
+            // After the partial report has been emitted in full:
+            // EXIT_PARTIAL_FAILURE (3) when any cell failed, 0 otherwise,
+            // so scripts can distinguish "degraded" from "clean" and from
+            // usage errors (2).
+            let code = sweep::exit_code(&sweep_report);
+            if code != 0 {
+                return ExitCode::from(code);
+            }
         }
         "net" => {
             if let Err(e) = check_flags(&args, &[], &["--json"]) {
@@ -558,7 +615,7 @@ fn main() -> ExitCode {
             // result CI wants for every committed networks/*.json.
             let net = match repro::ir::load_file(std::path::Path::new(path)) {
                 Ok(n) => n,
-                Err(e) => return fail(&e),
+                Err(e) => return fail(e.message()),
             };
             if args.iter().any(|a| a == "--json") {
                 let mut m = std::collections::BTreeMap::new();
@@ -603,12 +660,27 @@ fn main() -> ExitCode {
                     return ExitCode::FAILURE;
                 }
             };
-            let input = engine.manifest.read_f32(&engine.manifest.golden_input).unwrap();
-            let golden = engine.manifest.read_f32(&engine.manifest.golden_logits).unwrap();
+            // Golden artifacts are user-provided files: a missing or
+            // truncated tensor is a reportable error, not a panic.
+            let input = match engine.manifest.read_f32(&engine.manifest.golden_input) {
+                Ok(v) => v,
+                Err(e) => {
+                    return fail(&format!("golden input {}: {e:#}", engine.manifest.golden_input))
+                }
+            };
+            let golden = match engine.manifest.read_f32(&engine.manifest.golden_logits) {
+                Ok(v) => v,
+                Err(e) => {
+                    return fail(&format!("golden logits {}: {e:#}", engine.manifest.golden_logits))
+                }
+            };
             let t0 = std::time::Instant::now();
             let mut out = Vec::new();
             for _ in 0..frames {
-                out = engine.infer(&input).unwrap();
+                out = match engine.infer(&input) {
+                    Ok(v) => v,
+                    Err(e) => return fail(&format!("inference failed: {e:#}")),
+                };
             }
             let dt = t0.elapsed().as_secs_f64();
             let err = out.iter().zip(&golden).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);

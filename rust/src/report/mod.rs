@@ -696,7 +696,10 @@ pub fn ablation() -> String {
 /// — one row per (network, platform, granularity) cell with the headline
 /// figures (FRCE/WRCE boundary, DSP utilization, SRAM fit, predicted FPS
 /// at each platform's own clock, and simulated FPS when the sweep ran the
-/// cycle simulator). The text twin of `repro sweep --json`.
+/// cycle simulator). Failed cells ([`crate::sweep::CellFailure`]) render
+/// as `FAILED(kind)` rows interleaved at their matrix position, so a
+/// degraded run still shows the full requested matrix. The text twin of
+/// `repro sweep --json`.
 pub fn sweep_matrix(report: &crate::sweep::SweepReport) -> String {
     let mut s = String::new();
     header(&mut s, "Design-space sweep: networks x platforms x granularities");
@@ -718,7 +721,26 @@ pub fn sweep_matrix(report: &crate::sweep::SweepReport) -> String {
         "eff%",
         "sim FPS"
     );
-    for cell in &report.cells {
+    // Walk the requested matrix in combination order: successful cells
+    // are stored in that order, and each failure records the matrix
+    // `index` it would have occupied, so the two streams zip back into
+    // the full matrix.
+    let mut cells = report.cells.iter();
+    let total = report.cells.len() + report.failures.len();
+    for index in 0..total {
+        if let Some(f) = report.failures.iter().find(|f| f.index == index) {
+            let _ = writeln!(
+                s,
+                "{:16} {:8} {:10} FAILED({}): {}",
+                f.network,
+                f.platform,
+                crate::design::granularity_name(f.granularity),
+                f.error.kind(),
+                f.error
+            );
+            continue;
+        }
+        let Some(cell) = cells.next() else { break };
         let d = cell.design();
         let sim_fps = match (cell.sim(), cell.sim_error()) {
             (Some(f), _) => format!("{:.1}", f.fps),
@@ -752,6 +774,13 @@ pub fn sweep_matrix(report: &crate::sweep::SweepReport) -> String {
         s,
         " fits=NO marks parts whose SRAM budget is below even this network's allocation)"
     );
+    if !report.failures.is_empty() {
+        let _ = writeln!(
+            s,
+            "({} cell(s) FAILED — see the stderr summary or the JSON `failures` section)",
+            report.failures.len()
+        );
+    }
     s
 }
 
@@ -805,6 +834,13 @@ pub fn pareto_table(
         s,
         " MHz is each platform's own clock — pass --pareto-clocks to trade frequency as an axis)"
     );
+    if !report.failures.is_empty() {
+        let _ = writeln!(
+            s,
+            "({} FAILED cell(s) are excluded from the frontier analysis)",
+            report.failures.len()
+        );
+    }
     s
 }
 
@@ -863,6 +899,13 @@ pub fn pareto_clocks_table(
         s,
         " candidate stays on the frontier unless something matches its FPS at ≤ SRAM/DRAM/MHz)"
     );
+    if !report.failures.is_empty() {
+        let _ = writeln!(
+            s,
+            "({} FAILED cell(s) are excluded from the frontier analysis)",
+            report.failures.len()
+        );
+    }
     s
 }
 

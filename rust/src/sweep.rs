@@ -25,6 +25,22 @@
 //! golden-baseline artifacts to the serial path for any `N` (asserted in
 //! `rust/tests/pareto.rs`).
 //!
+//! # Fault isolation
+//!
+//! One pathological cell — a degenerate custom budget, a panicking
+//! allocation, a corrupt cache entry — must not take down the whole
+//! matrix. Cells are evaluated through the panic-safe
+//! [`crate::util::pool::parallel_map_fallible`] path: a cell that fails
+//! (typed [`ReproError`], including captured panics) becomes one entry of
+//! [`SweepReport::failures`] while every other cell's bytes are exactly
+//! what a fault-free run produces. Failed cells are excluded from the
+//! Pareto analyses and from [`SweepReport::save_designs`]; the JSON
+//! document gains a `failures` section only when at least one cell
+//! failed, so clean-run output stays byte-identical to earlier
+//! trajectories. The failure paths themselves are exercised by the
+//! deterministic injection harness in [`crate::util::fault`]
+//! (`REPRO_FAULTS`, `rust/tests/faults.rs`).
+//!
 //! # Memoization
 //!
 //! [`SweepSpec::cache_dir`] points the run at a content-keyed per-cell
@@ -96,6 +112,8 @@ use crate::design::{granularity_name, parse_granularity, Design, Platform};
 use crate::model::throughput::{self, ClockPoint};
 use crate::nets::{self, Network};
 use crate::sim::SimOptions;
+use crate::util::error::ReproError;
+use crate::util::fault;
 use crate::util::json::Json;
 use crate::util::pool;
 
@@ -161,13 +179,16 @@ fn split_csv(csv: &str) -> Vec<&str> {
 /// Reject axis entries that resolve to the same canonical element
 /// (`mbv2,mobilenet_v2`, `zc706,ZC706`, ...) — they would produce
 /// duplicate cells and clashing artifact file names.
-fn reject_duplicates(flag: &str, keys: impl IntoIterator<Item = String>) -> Result<(), String> {
+fn reject_duplicates(
+    flag: &str,
+    keys: impl IntoIterator<Item = String>,
+) -> Result<(), ReproError> {
     let mut seen = std::collections::BTreeSet::new();
     for k in keys {
         if !seen.insert(k.clone()) {
-            return Err(format!(
+            return Err(ReproError::config(format!(
                 "{flag}: duplicate entry {k:?} (two names resolve to the same element)"
-            ));
+            )));
         }
     }
     Ok(())
@@ -199,26 +220,29 @@ impl SweepSpec {
         nets_csv: Option<&str>,
         platforms_csv: Option<&str>,
         granularities_csv: Option<&str>,
-    ) -> Result<SweepSpec, String> {
+    ) -> Result<SweepSpec, ReproError> {
         let mut spec = SweepSpec::default();
         if let Some(csv) = nets_csv {
             let names = split_csv(csv);
             if names.is_empty() {
-                return Err("--nets: empty network list".to_string());
+                return Err(ReproError::config("--nets: empty network list"));
             }
-            spec.nets = names.iter().map(|n| nets::resolve(n)).collect::<Result<_, _>>()?;
+            spec.nets = names
+                .iter()
+                .map(|n| nets::resolve(n).map_err(ReproError::network))
+                .collect::<Result<_, _>>()?;
         }
         if let Some(csv) = platforms_csv {
             let names = split_csv(csv);
             if names.is_empty() {
-                return Err("--platforms: empty platform list".to_string());
+                return Err(ReproError::config("--platforms: empty platform list"));
             }
             spec.platforms = names.iter().map(|n| Platform::resolve(n)).collect::<Result<_, _>>()?;
         }
         if let Some(csv) = granularities_csv {
             let names = split_csv(csv);
             if names.is_empty() {
-                return Err("--granularities: empty granularity list".to_string());
+                return Err(ReproError::config("--granularities: empty granularity list"));
             }
             spec.granularities =
                 names.iter().map(|g| parse_granularity(g)).collect::<Result<_, _>>()?;
@@ -247,17 +271,18 @@ impl SweepSpec {
         net_files_csv: Option<&str>,
         platforms_csv: Option<&str>,
         granularities_csv: Option<&str>,
-    ) -> Result<SweepSpec, String> {
+    ) -> Result<SweepSpec, ReproError> {
         let mut spec = SweepSpec::from_csv(nets_csv, platforms_csv, granularities_csv)?;
         if let Some(csv) = net_files_csv {
             let paths = split_csv(csv);
             if paths.is_empty() {
-                return Err("--net-file: empty file list".to_string());
+                return Err(ReproError::config("--net-file: empty file list"));
             }
             let mut loaded = Vec::with_capacity(paths.len());
             for p in paths {
-                loaded
-                    .push(crate::ir::load_file(Path::new(p)).map_err(|e| format!("--net-file {e}"))?);
+                loaded.push(
+                    crate::ir::load_file(Path::new(p)).map_err(|e| e.prefixed("--net-file "))?,
+                );
             }
             if nets_csv.is_none() {
                 spec.nets = loaded;
@@ -286,21 +311,24 @@ impl SweepSpec {
     /// assert!(SweepSpec::parse_clocks_csv("0,200").is_err());
     /// assert!(SweepSpec::parse_clocks_csv("200,200").is_err());
     /// ```
-    pub fn parse_clocks_csv(csv: &str) -> Result<Vec<f64>, String> {
+    pub fn parse_clocks_csv(csv: &str) -> Result<Vec<f64>, ReproError> {
         let points = split_csv(csv);
         if points.is_empty() {
-            return Err("--clocks: empty clock list".to_string());
+            return Err(ReproError::config("--clocks: empty clock list"));
         }
         let mut hz = Vec::with_capacity(points.len());
         for p in points {
-            let mhz: f64 =
-                p.parse().map_err(|_| format!("--clocks: cannot parse MHz value {p:?}"))?;
+            let mhz: f64 = p
+                .parse()
+                .map_err(|_| ReproError::config(format!("--clocks: cannot parse MHz value {p:?}")))?;
             if !mhz.is_finite() || mhz <= 0.0 {
-                return Err(format!("--clocks: MHz points must be positive, got {p:?}"));
+                return Err(ReproError::config(format!(
+                    "--clocks: MHz points must be positive, got {p:?}"
+                )));
             }
             let v = mhz * 1.0e6;
             if hz.contains(&v) {
-                return Err(format!("--clocks: duplicate entry {p:?}"));
+                return Err(ReproError::config(format!("--clocks: duplicate entry {p:?}")));
             }
             hz.push(v);
         }
@@ -329,12 +357,12 @@ impl SweepSpec {
     pub fn resolve_cache_flags(
         cache: bool,
         cache_dir: Option<&str>,
-    ) -> Result<Option<PathBuf>, String> {
+    ) -> Result<Option<PathBuf>, ReproError> {
         match (cache, cache_dir) {
-            (true, Some(dir)) => Err(format!(
+            (true, Some(dir)) => Err(ReproError::config(format!(
                 "--cache: conflicts with --cache-dir {dir:?} (--cache-dir already enables the \
                  cache there; pass exactly one of the two)"
-            )),
+            ))),
             (true, None) => Ok(Some(PathBuf::from(".sweep-cache"))),
             (false, Some(dir)) => Ok(Some(PathBuf::from(dir))),
             (false, None) => Ok(None),
@@ -353,6 +381,14 @@ impl SweepSpec {
     /// byte-identical for any job count, and — when
     /// [`SweepSpec::cache_dir`] is set — for any mix of cache hits and
     /// cold evaluations.
+    ///
+    /// Cells are fault-isolated: a cell whose evaluation fails — a typed
+    /// [`ReproError`] from [`SweepSpec::eval_cell`] *or a panic*, caught
+    /// by [`pool::parallel_map_fallible`] — becomes one
+    /// [`SweepReport::failures`] entry (carrying its matrix position and
+    /// error) while every other cell completes and keeps the exact bytes
+    /// a fault-free run gives it. Cache store failures never fail a cell;
+    /// they surface as [`CacheStats::store_errors`].
     pub fn run(&self) -> SweepReport {
         let frames_req = self.frames.filter(|&f| f > 0);
         let mut combos = Vec::with_capacity(self.cell_count());
@@ -366,35 +402,67 @@ impl SweepSpec {
         let cache = self.cache_dir.as_deref().map(CellCache::open);
         let hits = AtomicU64::new(0);
         let misses = AtomicU64::new(0);
-        let cells = pool::parallel_map(self.jobs, &combos, |_, &(net, platform, granularity)| {
-            if let Some(cache) = &cache {
-                let key = self.cell_key(net, platform, granularity, frames_req);
-                if let Some(cell) = cache.load(&key) {
-                    // The trusted reloader rebuilds the network by zoo
-                    // name or from the artifact's embedded network_def
-                    // (non-zoo `--net-file` cells); either way, a *custom*
-                    // Network sharing a stored cell's name (or any
-                    // structural drift the key somehow missed) must not be
-                    // served that cell. Verbatim structural equality with
-                    // the probe network, or it's a miss.
-                    if format!("{:?}", cell.design().network()) == format!("{net:?}") {
-                        hits.fetch_add(1, Ordering::Relaxed);
-                        return cell;
+        let store_errors = AtomicU64::new(0);
+        // Injection sites key on the cell's content key — never on worker
+        // identity — so an injected run reproduces at any job count. The
+        // key render is skipped entirely on the uncached disarmed path
+        // (the common case), where nothing consumes it.
+        let faults_armed = fault::armed();
+        let outcomes =
+            pool::parallel_map_fallible(self.jobs, &combos, |_, &(net, platform, granularity)| {
+                if let Some(cache) = &cache {
+                    let key = self.cell_key(net, platform, granularity, frames_req);
+                    let key_text = key.to_string();
+                    if let Some(cell) = cache.load(&key) {
+                        // The trusted reloader rebuilds the network by zoo
+                        // name or from the artifact's embedded network_def
+                        // (non-zoo `--net-file` cells); either way, a *custom*
+                        // Network sharing a stored cell's name (or any
+                        // structural drift the key somehow missed) must not be
+                        // served that cell. Verbatim structural equality with
+                        // the probe network, or it's a miss.
+                        if format!("{:?}", cell.design().network()) == format!("{net:?}") {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                            return Ok(cell);
+                        }
                     }
+                    let cell = self.eval_cell(net, platform, granularity, frames_req, &key_text)?;
+                    if cache.store(&key, &cell).is_err() {
+                        store_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    misses.fetch_add(1, Ordering::Relaxed);
+                    Ok(cell)
+                } else {
+                    let key_text = if faults_armed {
+                        self.cell_key(net, platform, granularity, frames_req).to_string()
+                    } else {
+                        String::new()
+                    };
+                    self.eval_cell(net, platform, granularity, frames_req, &key_text)
                 }
-                let cell = self.eval_cell(net, platform, granularity, frames_req);
-                cache.store(&key, &cell);
-                misses.fetch_add(1, Ordering::Relaxed);
-                cell
-            } else {
-                self.eval_cell(net, platform, granularity, frames_req)
+            });
+        let mut cells = Vec::with_capacity(combos.len());
+        let mut failures = Vec::new();
+        for (index, (outcome, &(net, platform, granularity))) in
+            outcomes.into_iter().zip(&combos).enumerate()
+        {
+            match outcome {
+                Ok(cell) => cells.push(cell),
+                Err(error) => failures.push(CellFailure {
+                    index,
+                    network: net.name.clone(),
+                    platform: platform.name.clone(),
+                    granularity,
+                    error,
+                }),
             }
-        });
+        }
         let cache_stats = cache.map(|_| CacheStats {
             hits: hits.into_inner(),
             misses: misses.into_inner(),
+            store_errors: store_errors.into_inner(),
         });
-        SweepReport { cells, cache: cache_stats }
+        SweepReport { cells, failures, cache: cache_stats }
     }
 
     /// Content key of one cell for the [`cache`] layer: every input that
@@ -458,18 +526,50 @@ impl SweepSpec {
     /// cycle-simulate it, and attach the clock-scaling curve. Pure —
     /// shares nothing mutable, so the pool may run any number of these
     /// concurrently.
+    ///
+    /// Fallible per-cell: a degenerate platform budget is a typed
+    /// [`ReproError::Allocation`] error instead of a downstream panic,
+    /// and the `eval.alloc` / `eval.sim` injection sites
+    /// ([`crate::util::fault`]) fail exactly the cells whose content key
+    /// (`fault_key`) their trigger selects. An *organic* simulator
+    /// deadlock is deliberately **not** a cell failure — it is a
+    /// measurement, recorded in-cell as [`SweepCell::sim_error`].
     fn eval_cell(
         &self,
         net: &Network,
         platform: &Platform,
         granularity: Granularity,
         frames_req: Option<u64>,
-    ) -> SweepCell {
+        fault_key: &str,
+    ) -> Result<SweepCell, ReproError> {
+        if platform.sram_bytes == 0 || platform.dsp_budget == 0 {
+            return Err(ReproError::allocation(format!(
+                "platform {:?}: degenerate budget (sram_bytes={}, dsp_budget={}) — Algorithm 1/2 \
+                 need nonzero SRAM and DSP budgets",
+                platform.name, platform.sram_bytes, platform.dsp_budget
+            )));
+        }
+        if fault::trip(fault::Site::EvalAlloc, fault_key) {
+            panic!(
+                "injected fault: eval.alloc for cell {}/{}/{}",
+                net.name,
+                platform.name,
+                granularity_name(granularity)
+            );
+        }
         let mut builder = Design::builder(net).platform(platform.clone()).granularity(granularity);
         if let Some(opts) = self.sim_options {
             builder = builder.sim_options(opts);
         }
         let design = builder.build();
+        if fault::trip(fault::Site::EvalSim, fault_key) {
+            return Err(ReproError::simulation(format!(
+                "injected fault: eval.sim for cell {}/{}/{}",
+                net.name,
+                platform.name,
+                granularity_name(granularity)
+            )));
+        }
         // A deadlocked simulation (possible only under non-default
         // `sim_options`) is recorded as an explicit per-cell error,
         // distinguishable from a model-only sweep, rather than poisoning
@@ -490,7 +590,7 @@ impl SweepSpec {
         };
         let clock_curve =
             throughput::clock_curve(design.network(), design.allocs(), &self.clocks_hz);
-        SweepCell { design, sim, sim_error, clock_curve }
+        Ok(SweepCell { design, sim, sim_error, clock_curve })
     }
 }
 
@@ -657,11 +757,61 @@ impl SweepCell {
     }
 }
 
-/// The result of a sweep: one [`SweepCell`] per matrix combination, in
-/// the spec's deterministic iteration order.
+/// One matrix cell that failed to evaluate: its position and axes plus
+/// the typed [`ReproError`] that killed it (a returned error or a caught
+/// panic — [`crate::util::pool::parallel_map_fallible`] makes no
+/// distinction downstream). Collected into [`SweepReport::failures`] so
+/// one pathological cell degrades the run instead of aborting it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellFailure {
+    /// Position in the spec's deterministic nets-outer / platforms /
+    /// granularities-inner combination order — the row this cell *would*
+    /// have occupied. Not an index into [`SweepReport::cells`] (failed
+    /// cells are absent there); renderers use it to interleave failure
+    /// rows at the right matrix position.
+    pub index: usize,
+    pub network: String,
+    pub platform: String,
+    pub granularity: Granularity,
+    pub error: ReproError,
+}
+
+impl CellFailure {
+    /// `net/platform/granularity` — the human-readable cell label used in
+    /// stderr failure summaries and the matrix table.
+    pub fn label(&self) -> String {
+        format!("{}/{}/{}", self.network, self.platform, granularity_name(self.granularity))
+    }
+
+    /// Stable sorted-key JSON value — one element of the `failures` array
+    /// in `repro sweep --json` output (the array appears only when at
+    /// least one cell failed).
+    pub fn to_json_value(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("error".to_string(), self.error.to_json_value());
+        m.insert(
+            "granularity".to_string(),
+            Json::Str(granularity_name(self.granularity).to_string()),
+        );
+        m.insert("index".to_string(), Json::Num(self.index as f64));
+        m.insert("network".to_string(), Json::Str(self.network.clone()));
+        m.insert("platform".to_string(), Json::Str(self.platform.clone()));
+        Json::Obj(m)
+    }
+}
+
+/// The result of a sweep: one [`SweepCell`] per matrix combination that
+/// evaluated successfully, in the spec's deterministic iteration order,
+/// plus a [`CellFailure`] record for every combination that did not.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
     pub cells: Vec<SweepCell>,
+    /// Cells that failed to evaluate (typed error or caught panic), in
+    /// matrix order. Empty on a clean run — and only then is the report's
+    /// JSON byte-identical to pre-fault-isolation trajectories. Failed
+    /// cells are excluded from the Pareto analyses and from
+    /// [`SweepReport::save_designs`].
+    pub failures: Vec<CellFailure>,
     /// Hit/miss stats of the run against [`SweepSpec::cache_dir`]'s
     /// [`cache::CellCache`]; `None` when the sweep ran uncached. A fully
     /// warm run reports `misses == 0` and
@@ -717,6 +867,14 @@ impl SweepReport {
             "cells".to_string(),
             Json::Arr(self.cells.iter().map(SweepCell::to_json_value).collect()),
         );
+        // Clean runs carry no `failures` key at all, keeping their
+        // documents byte-identical to pre-fault-isolation trajectories.
+        if !self.failures.is_empty() {
+            m.insert(
+                "failures".to_string(),
+                Json::Arr(self.failures.iter().map(CellFailure::to_json_value).collect()),
+            );
+        }
         if let Some(p) = pareto {
             m.insert("pareto".to_string(), p.to_json_value());
         }
@@ -738,16 +896,21 @@ impl SweepReport {
         pareto_clocks(self)
     }
 
-    /// Persist every cell's full [`Design::to_json`] artifact into `dir`
-    /// (created if missing), returning the paths written in cell order.
-    pub fn save_designs(&self, dir: &Path) -> Result<Vec<PathBuf>, String> {
-        std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    /// Persist every *successful* cell's full [`Design::to_json`] artifact
+    /// into `dir` (created if missing), returning the paths written in
+    /// cell order. Failed cells ([`SweepReport::failures`]) have no design
+    /// to save and are skipped — the CLI reports the skip count next to
+    /// the saved count.
+    pub fn save_designs(&self, dir: &Path) -> Result<Vec<PathBuf>, ReproError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| ReproError::config(format!("{}: {e}", dir.display())))?;
         let mut paths = Vec::with_capacity(self.cells.len());
         for cell in &self.cells {
             let path = dir.join(cell.artifact_file_name());
             let mut text = cell.design.to_json();
             text.push('\n');
-            std::fs::write(&path, text).map_err(|e| format!("{}: {e}", path.display()))?;
+            std::fs::write(&path, text)
+                .map_err(|e| ReproError::config(format!("{}: {e}", path.display())))?;
             paths.push(path);
         }
         Ok(paths)
@@ -1165,15 +1328,45 @@ pub fn pareto_clocks(report: &SweepReport) -> ClockParetoReport {
 /// let err = validate_pareto_clocks(true, &[]).unwrap_err();
 /// assert!(err.contains("--clocks"));
 /// ```
-pub fn validate_pareto_clocks(requested: bool, clocks_hz: &[f64]) -> Result<(), String> {
+pub fn validate_pareto_clocks(requested: bool, clocks_hz: &[f64]) -> Result<(), ReproError> {
     if requested && clocks_hz.is_empty() {
-        return Err(
+        return Err(ReproError::config(
             "--pareto-clocks: requires --clocks MHZ[,MHZ..] — the clock axis supplies the \
-             frequency dimension of the 4-D frontier"
-                .to_string(),
-        );
+             frequency dimension of the 4-D frontier",
+        ));
     }
     Ok(())
+}
+
+/// Documented process exit code of a *partially failed* `repro sweep` run:
+/// at least one cell failed, the report (and any `--save-dir` artifacts)
+/// covers only the survivors. Distinct from `2` — usage/configuration
+/// errors, where nothing ran at all — so CI and scripts can tell a bad
+/// invocation from a degraded run. Documented in `docs/robustness.md`.
+pub const EXIT_PARTIAL_FAILURE: u8 = 3;
+
+/// The `repro sweep` exit code for a completed (non-`--strict`) run:
+/// `0` when every cell evaluated, [`EXIT_PARTIAL_FAILURE`] when the
+/// report is partial. `--strict` runs never reach this policy — they
+/// refuse partial results and fail hard on the first recorded failure.
+///
+/// # Examples
+///
+/// ```
+/// use repro::sweep::{exit_code, SweepSpec, EXIT_PARTIAL_FAILURE};
+///
+/// let clean = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None)
+///     .unwrap()
+///     .run();
+/// assert_eq!(exit_code(&clean), 0);
+/// assert_eq!(EXIT_PARTIAL_FAILURE, 3);
+/// ```
+pub fn exit_code(report: &SweepReport) -> u8 {
+    if report.failures.is_empty() {
+        0
+    } else {
+        EXIT_PARTIAL_FAILURE
+    }
 }
 
 #[cfg(test)]
@@ -1247,11 +1440,11 @@ mod tests {
             ..SweepSpec::default()
         };
         let cold = spec.run();
-        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 1 }));
+        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 1, store_errors: 0 }));
         let rerun = spec.run();
         assert_eq!(
             rerun.cache,
-            Some(CacheStats { hits: 0, misses: 1 }),
+            Some(CacheStats { hits: 0, misses: 1, store_errors: 0 }),
             "a lookalike custom network must never warm-hit"
         );
         assert_eq!(cold.to_json(), rerun.to_json());
@@ -1262,8 +1455,8 @@ mod tests {
             cache_dir: Some(dir.clone()),
             ..SweepSpec::default()
         };
-        assert_eq!(stock.run().cache, Some(CacheStats { hits: 0, misses: 1 }));
-        assert_eq!(stock.run().cache, Some(CacheStats { hits: 1, misses: 0 }));
+        assert_eq!(stock.run().cache, Some(CacheStats { hits: 0, misses: 1, store_errors: 0 }));
+        assert_eq!(stock.run().cache, Some(CacheStats { hits: 1, misses: 0, store_errors: 0 }));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -1276,9 +1469,9 @@ mod tests {
         assert!(cold_uncached.cache.is_none(), "uncached runs carry no stats");
         spec.cache_dir = Some(dir.clone());
         let cold = spec.run();
-        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2 }));
+        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2, store_errors: 0 }));
         let warm = spec.run();
-        assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0 }));
+        assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0, store_errors: 0 }));
         assert!((warm.cache.unwrap().hit_rate() - 1.0).abs() < 1e-12);
         // The cache changes *where* cells come from, never their bytes —
         // and the JSON document embeds no stats, so all three agree.
@@ -1359,6 +1552,60 @@ mod tests {
         assert_eq!(cell.design().to_json(), direct.to_json());
         assert_eq!(cell.artifact_file_name(), "snv2_zcu102_fgpm.design.json");
         assert!(cell.dsp_utilization() > 0.0 && cell.dsp_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn degenerate_platform_budget_is_an_isolated_cell_failure() {
+        let spec = SweepSpec {
+            nets: vec![nets::shufflenet_v2()],
+            platforms: vec![Platform::zc706(), Platform::custom("broken", 0, 0)],
+            ..SweepSpec::default()
+        };
+        let report = spec.run();
+        assert_eq!(report.cells.len(), 1, "the healthy cell survives");
+        assert_eq!(report.failures.len(), 1);
+        let f = &report.failures[0];
+        assert_eq!(f.index, 1, "matrix position of the broken cell");
+        assert_eq!(f.label(), "shufflenet_v2/broken/fgpm");
+        assert_eq!(f.error.kind(), "allocation");
+        assert!(f.error.contains("degenerate budget"), "{}", f.error);
+        // The surviving cell's bytes match a sweep that never saw the
+        // broken platform at all.
+        let healthy = SweepSpec {
+            nets: vec![nets::shufflenet_v2()],
+            platforms: vec![Platform::zc706()],
+            ..SweepSpec::default()
+        };
+        assert_eq!(
+            report.cells[0].to_json_value().to_string(),
+            healthy.run().cells[0].to_json_value().to_string()
+        );
+        let json = report.to_json();
+        assert!(json.contains("\"failures\""));
+        assert!(json.contains("\"kind\":\"allocation\""));
+        assert!(
+            !healthy.run().to_json().contains("\"failures\""),
+            "clean runs must not carry a failures key"
+        );
+        assert_eq!(exit_code(&report), EXIT_PARTIAL_FAILURE);
+        assert_eq!(exit_code(&healthy.run()), 0);
+    }
+
+    #[test]
+    fn failed_cells_are_skipped_by_save_designs() {
+        let dir = std::env::temp_dir().join("repro_sweep_save_partial_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = SweepSpec {
+            nets: vec![nets::shufflenet_v2()],
+            platforms: vec![Platform::custom("broken", 0, 0), Platform::edge()],
+            ..SweepSpec::default()
+        };
+        let report = spec.run();
+        assert_eq!(report.failures.len(), 1);
+        let paths = report.save_designs(&dir).unwrap();
+        assert_eq!(paths.len(), 1, "only the surviving cell has an artifact");
+        assert!(paths[0].ends_with("snv2_edge_fgpm.design.json"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

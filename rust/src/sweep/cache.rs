@@ -19,15 +19,23 @@
 //! clock, name), granularity, simulated frame count, simulator options,
 //! and the `--clocks` curve axis. The key hashes (twice-seeded FNV-1a)
 //! into the entry file name, **and** is stored verbatim inside the entry:
-//! a load only hits when the stored key equals the probe key exactly, so
-//! hash collisions, stale schema versions, and truncated files all
-//! degrade to misses, never to wrong cells (the no-stale-hits property in
+//! a load only hits when the stored key equals the probe key exactly. The
+//! cell payload additionally carries its own FNV-1a checksum (`check`),
+//! verified on load — so hash collisions, stale schema versions,
+//! truncated files, and bit-rotted payloads all degrade to misses, never
+//! to wrong cells (the no-stale-hits and corruption properties in
 //! `rust/tests/proptests.rs`).
 //!
 //! The cache is best-effort by design: unreadable directories or write
-//! failures silently degrade to cold evaluation (counted as misses) —
-//! callers that want fail-loudly semantics probe the directory first, as
-//! the `repro sweep --cache-dir` CLI path does.
+//! failures degrade to cold evaluation (counted as misses) and never fail
+//! the cell — but store failures are *counted*
+//! ([`CacheStats::store_errors`]) and surfaced in the stderr summary
+//! instead of vanishing silently. Callers that want fail-loudly semantics
+//! probe the directory first, as the `repro sweep --cache-dir` CLI path
+//! does. Both halves are fault-injectable ([`crate::util::fault`]: the
+//! `cache.load` site forces misses, `cache.store` forces torn writes) —
+//! `rust/tests/faults.rs` proves a torn or failed write never changes the
+//! bytes any later run serves.
 //!
 //! Every network is warm-servable: zoo cells reload by rebuilding the
 //! network by name from [`crate::nets`], and non-zoo cells (a `--net-file`
@@ -49,14 +57,27 @@ use std::path::{Path, PathBuf};
 
 use crate::design::Design;
 use crate::model::throughput::ClockPoint;
+use crate::util::error::ReproError;
+use crate::util::fault;
 use crate::util::json::Json;
 
 use super::{SimFigures, SweepCell};
 
 /// Schema version of one cache entry file; bumped whenever the cell or
 /// key serialization changes shape, so old entries miss instead of
-/// half-parsing.
-const ENTRY_VERSION: f64 = 1.0;
+/// half-parsing. v2 added the `check` payload checksum.
+const ENTRY_VERSION: f64 = 2.0;
+
+/// Seed of the payload checksum (distinct from both file-name seeds so a
+/// key/check confusion can never validate).
+const CHECK_SEED: u64 = 0x6c62_272e_07bb_0142;
+
+/// Hex checksum of the canonical cell serialization, stored inside the
+/// entry and re-verified on load: a flipped bit anywhere in the payload
+/// degrades the entry to a miss instead of serving a corrupted cell.
+fn payload_check(cell_text: &str) -> String {
+    format!("{:016x}", fnv1a64(cell_text.as_bytes(), CHECK_SEED))
+}
 
 /// Hit/miss counts of one sweep run against a [`CellCache`] — surfaced
 /// as [`super::SweepReport::cache`] and printed (to stderr) by
@@ -67,6 +88,11 @@ const ENTRY_VERSION: f64 = 1.0;
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Entries that failed to persist (I/O error or an injected
+    /// `cache.store` fault). The cell itself still succeeds — a store
+    /// failure only costs a future warm hit — but it must not vanish
+    /// silently: the stderr summary appends the count when nonzero.
+    pub store_errors: u64,
 }
 
 impl CacheStats {
@@ -86,13 +112,20 @@ impl CacheStats {
     }
 
     /// The one-line stats rendering the CLI prints to stderr (and CI
-    /// greps for `100.0% hit rate` on its warm step).
+    /// greps for `100.0% hit rate` on its warm step). Store errors are
+    /// appended only when present, so the healthy-path line is unchanged.
     pub fn summary(&self, dir: &Path) -> String {
+        let errors = if self.store_errors > 0 {
+            format!(", {} store errors", self.store_errors)
+        } else {
+            String::new()
+        };
         format!(
-            "cache: {} hits, {} misses ({:.1}% hit rate) at {}",
+            "cache: {} hits, {} misses ({:.1}% hit rate{}) at {}",
             self.hits,
             self.misses,
             self.hit_rate() * 100.0,
+            errors,
             dir.display()
         )
     }
@@ -140,6 +173,9 @@ impl CellCache {
     /// eviction LRU rather than insertion-order.
     pub(super) fn load(&self, key: &Json) -> Option<SweepCell> {
         let key_text = key.to_string();
+        if fault::trip(fault::Site::CacheLoad, &key_text) {
+            return None; // injected read failure: a plain miss
+        }
         let path = self.entry_path(&key_text);
         let text = std::fs::read_to_string(&path).ok()?;
         let entry = Json::parse(&text).ok()?;
@@ -149,33 +185,61 @@ impl CellCache {
         if entry.get("key")?.to_string() != key_text {
             return None; // hash collision or hand-edited entry: treat as cold
         }
-        let cell = cell_from_json(entry.get("cell")?).ok()?;
-        self.write_entry(&path, text); // touch: bump mtime for LRU recency
+        let cell_json = entry.get("cell")?;
+        if entry.get("check")?.as_str()? != payload_check(&cell_json.to_string()) {
+            return None; // bit-rotted payload: treat as cold
+        }
+        let cell = cell_from_json(cell_json).ok()?;
+        let _ = self.write_entry(&path, text); // touch: bump mtime for LRU recency
         Some(cell)
     }
 
-    /// Persist `cell` under `key`, best-effort (failures leave the cache
-    /// cold for this key). The entry is written to a sibling temp file and
-    /// renamed so concurrent writers — two CI steps sharing one cache
-    /// directory — can never interleave a torn entry.
-    pub(super) fn store(&self, key: &Json, cell: &SweepCell) {
+    /// Persist `cell` under `key`. Failure leaves the cache cold for this
+    /// key and reports why — callers (the sweep engine) count it as a
+    /// [`CacheStats::store_errors`] rather than failing the cell. The
+    /// entry is written to a sibling temp file and renamed so concurrent
+    /// writers — two CI steps sharing one cache directory — can never
+    /// interleave a torn entry.
+    ///
+    /// An injected `cache.store` fault simulates the worst crash-mid-write
+    /// outcome the rename path normally rules out: a *torn* (truncated)
+    /// entry lands at the real path, and the store reports failure. Later
+    /// loads must degrade that entry to a miss.
+    pub(super) fn store(&self, key: &Json, cell: &SweepCell) -> Result<(), ReproError> {
         let key_text = key.to_string();
+        let path = self.entry_path(&key_text);
+        let cell_json = cell_to_json(cell);
         let mut m = BTreeMap::new();
-        m.insert("cell".to_string(), cell_to_json(cell));
+        m.insert("check".to_string(), Json::Str(payload_check(&cell_json.to_string())));
+        m.insert("cell".to_string(), cell_json);
         m.insert("key".to_string(), key.clone());
         m.insert("version".to_string(), Json::Num(ENTRY_VERSION));
         let mut text = Json::Obj(m).to_string();
         text.push('\n');
-        self.write_entry(&self.entry_path(&key_text), text);
+        if fault::trip(fault::Site::CacheStore, &key_text) {
+            let torn = &text[..text.len() / 2];
+            let _ = std::fs::write(&path, torn);
+            return Err(ReproError::cache_io(format!(
+                "injected fault: cache.store tore entry {}",
+                path.display()
+            )));
+        }
+        self.write_entry(&path, text)
+            .map_err(|e| ReproError::cache_io(format!("cache store {}: {e}", path.display())))
     }
 
-    /// Atomic best-effort entry write (temp sibling + rename), shared by
-    /// [`CellCache::store`] and the touch-on-hit path in
+    /// Atomic entry write (temp sibling + rename), shared by
+    /// [`CellCache::store`] and the (best-effort) touch-on-hit path in
     /// [`CellCache::load`].
-    fn write_entry(&self, path: &Path, text: String) {
+    fn write_entry(&self, path: &Path, text: String) -> std::io::Result<()> {
         let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-        if std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, path).is_err() {
-            let _ = std::fs::remove_file(&tmp);
+        std::fs::write(&tmp, text)?;
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
         }
     }
 
@@ -283,15 +347,19 @@ fn cell_to_json(cell: &SweepCell) -> Json {
 /// Inverse of [`cell_to_json`]. Field values land verbatim (the stable
 /// serializer round-trips every f64 exactly), which is what makes warm
 /// and cold cells byte-identical downstream.
-fn cell_from_json(j: &Json) -> Result<SweepCell, String> {
+fn cell_from_json(j: &Json) -> Result<SweepCell, ReproError> {
     let design = Design::from_json_unchecked(
-        &j.get("design").ok_or_else(|| "cache entry: missing \"design\"".to_string())?.to_string(),
-    )?;
+        &j.get("design")
+            .ok_or_else(|| ReproError::cache_io("cache entry: missing \"design\""))?
+            .to_string(),
+    )
+    .map_err(|e| ReproError::cache_io(String::from(e)))?;
     let sim = match j.get("sim") {
         None | Some(Json::Null) => None,
         Some(s) => {
             let num = |key: &str| {
-                s.field_f64(key).ok_or_else(|| format!("cache entry: missing sim/{key:?}"))
+                s.field_f64(key)
+                    .ok_or_else(|| ReproError::cache_io(format!("cache entry: missing sim/{key:?}")))
             };
             Some(SimFigures {
                 frames: num("frames")? as u64,
@@ -303,16 +371,17 @@ fn cell_from_json(j: &Json) -> Result<SweepCell, String> {
     let sim_error = match j.get("sim_error") {
         None | Some(Json::Null) => None,
         Some(Json::Str(e)) => Some(e.clone()),
-        Some(other) => return Err(format!("cache entry: bad sim_error {other}")),
+        Some(other) => return Err(ReproError::cache_io(format!("cache entry: bad sim_error {other}"))),
     };
     let clock_curve = j
         .get("clock_curve")
         .and_then(Json::as_arr)
-        .ok_or_else(|| "cache entry: missing array \"clock_curve\"".to_string())?
+        .ok_or_else(|| ReproError::cache_io("cache entry: missing array \"clock_curve\""))?
         .iter()
         .map(|pt| {
             let num = |key: &str| {
-                pt.field_f64(key).ok_or_else(|| format!("cache entry: missing curve {key:?}"))
+                pt.field_f64(key)
+                    .ok_or_else(|| ReproError::cache_io(format!("cache entry: missing curve {key:?}")))
             };
             Ok(ClockPoint {
                 clock_hz: num("clock_hz")?,
@@ -321,7 +390,7 @@ fn cell_from_json(j: &Json) -> Result<SweepCell, String> {
                 peak_gops: num("peak_gops")?,
             })
         })
-        .collect::<Result<Vec<_>, String>>()?;
+        .collect::<Result<Vec<_>, ReproError>>()?;
     Ok(SweepCell { design, sim, sim_error, clock_curve })
 }
 
@@ -346,7 +415,7 @@ mod tests {
         let cell = &report.cells[0];
         let key = Json::Str("probe-key".to_string());
         assert!(cache.load(&key).is_none(), "cold cache must miss");
-        cache.store(&key, cell);
+        cache.store(&key, cell).expect("store succeeds");
         let warm = cache.load(&key).expect("stored cell loads");
         assert_eq!(warm.to_json_value().to_string(), cell.to_json_value().to_string());
         assert_eq!(warm.design().to_json(), cell.design().to_json());
@@ -362,14 +431,14 @@ mod tests {
         let spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("edge"), None).unwrap();
         let cell = &spec.run().cells[0];
         let key = Json::Str("k".to_string());
-        cache.store(&key, cell);
+        cache.store(&key, cell).expect("store succeeds");
         let path = cache.entry_path(&key.to_string());
         // Truncation: unparseable JSON is a miss, not a panic.
         std::fs::write(&path, "{\"version\":1,\"key\":\"k\",\"cell\":{").unwrap();
         assert!(cache.load(&key).is_none());
         // A well-formed entry under a *different* stored key (the on-disk
         // shape of a hash collision) is also a miss.
-        cache.store(&key, cell);
+        cache.store(&key, cell).expect("store succeeds");
         let swapped =
             std::fs::read_to_string(&path).unwrap().replace("\"key\":\"k\"", "\"key\":\"q\"");
         std::fs::write(&path, swapped).unwrap();
@@ -405,10 +474,10 @@ mod tests {
         spec.clocks_hz = SweepSpec::parse_clocks_csv("100,200").unwrap();
         spec.cache_dir = Some(dir.clone());
         let cold = spec.run();
-        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2 }));
+        assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2, store_errors: 0 }));
         assert_eq!(entry_names(&dir).len(), 5, "2 live + 3 stale entries");
         // A warm run touches both live entries, marking them most recent.
-        assert_eq!(spec.run().cache, Some(CacheStats { hits: 2, misses: 0 }));
+        assert_eq!(spec.run().cache, Some(CacheStats { hits: 2, misses: 0, store_errors: 0 }));
         // GC down to exactly the working set: the 3 stale entries go, and
         // nothing the very next identical run would hit is evicted.
         let stats = cache.gc(2);
@@ -416,9 +485,25 @@ mod tests {
         assert_eq!(stats.summary(&dir), format!("cache gc: kept 2, evicted 3 at {}", dir.display()));
         assert_eq!(entry_names(&dir).len(), 2);
         let after = spec.run();
-        assert_eq!(after.cache, Some(CacheStats { hits: 2, misses: 0 }), "gc evicted a live cell");
+        assert_eq!(
+            after.cache,
+            Some(CacheStats { hits: 2, misses: 0, store_errors: 0 }),
+            "gc evicted a live cell"
+        );
         assert_eq!(after.to_json(), cold.to_json(), "gc must never change sweep bytes");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn summary_appends_store_errors_only_when_present() {
+        let dir = PathBuf::from("c");
+        let clean = CacheStats { hits: 3, misses: 1, store_errors: 0 };
+        assert_eq!(clean.summary(&dir), "cache: 3 hits, 1 misses (75.0% hit rate) at c");
+        let torn = CacheStats { hits: 4, misses: 0, store_errors: 2 };
+        assert_eq!(
+            torn.summary(&dir),
+            "cache: 4 hits, 0 misses (100.0% hit rate, 2 store errors) at c"
+        );
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Typed error taxonomy for the whole reproduction pipeline.
+//!
+//! Every fallible layer (CLI/spec parsing, IR loading, allocation,
+//! simulation, the sweep cache) used to report ad-hoc `String` errors;
+//! [`ReproError`] replaces them with one enum whose variants name the
+//! *subsystem that failed*, so per-cell sweep failures can be classified,
+//! rendered, and filtered (`SweepReport::failures`, `repro sweep
+//! --strict`) without string matching.
+//!
+//! Design constraints, in order:
+//!
+//! * **Message compatibility.** [`ReproError`]'s `Display` prints the bare
+//!   message with no variant prefix, so every existing CLI error line,
+//!   doctest, and `err.contains(..)` assertion keeps its exact text. The
+//!   variant is extra structure, not a text change.
+//! * **`?` interop.** `impl From<ReproError> for String` lets callers that
+//!   still return `Result<_, String>` (the CLI argument helpers) use `?`
+//!   on converted functions unchanged.
+//! * **Panic capture.** [`ReproError::from_panic`] converts a payload
+//!   caught by `catch_unwind` (see
+//!   [`crate::util::pool::parallel_map_fallible`]) into
+//!   [`ReproError::Internal`], preserving `&str`/`String` payloads
+//!   verbatim so an injected `panic!("injected fault: ...")` round-trips
+//!   into the sweep report's `failures` section.
+//!
+//! # Examples
+//!
+//! ```
+//! use repro::util::error::ReproError;
+//!
+//! let e = ReproError::config("unknown platform \"vu9p\"");
+//! assert_eq!(e.kind(), "config");
+//! assert!(e.contains("vu9p"));
+//! assert_eq!(format!("{e}"), "unknown platform \"vu9p\""); // no prefix
+//! let s: String = e.into(); // `?` in Result<_, String> contexts
+//! assert_eq!(s, "unknown platform \"vu9p\"");
+//! ```
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// A classified pipeline error. The variant names the subsystem that
+/// failed; the payload is the human-readable message (exactly what the
+/// old `String` errors carried).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReproError {
+    /// CLI flags, sweep specs, platform/granularity names, design-artifact
+    /// JSON: anything the *user's configuration* got wrong.
+    Config(String),
+    /// Network descriptions: IR parsing, shape inference, lowering,
+    /// unknown zoo names.
+    Network(String),
+    /// Alg 1/Alg 2 resource allocation failed (degenerate budgets — zero
+    /// SRAM or zero DSPs cannot host any FGPM point).
+    Allocation(String),
+    /// The cycle simulator failed in a way that is an *error*, not a
+    /// measurement. (An organic deadlock is a measurement and stays
+    /// in-cell as `SweepCell::sim_error`; this variant is reserved for
+    /// injected `eval.sim` faults and future hard sim failures.)
+    Simulation(String),
+    /// Sweep-cache I/O: unreadable, torn, or unwritable cache entries.
+    CacheIo(String),
+    /// A captured panic payload from a worker (via
+    /// [`ReproError::from_panic`]) or another "this is a bug" condition.
+    Internal(String),
+}
+
+impl ReproError {
+    pub fn config<S: Into<String>>(msg: S) -> Self {
+        ReproError::Config(msg.into())
+    }
+
+    pub fn network<S: Into<String>>(msg: S) -> Self {
+        ReproError::Network(msg.into())
+    }
+
+    pub fn allocation<S: Into<String>>(msg: S) -> Self {
+        ReproError::Allocation(msg.into())
+    }
+
+    pub fn simulation<S: Into<String>>(msg: S) -> Self {
+        ReproError::Simulation(msg.into())
+    }
+
+    pub fn cache_io<S: Into<String>>(msg: S) -> Self {
+        ReproError::CacheIo(msg.into())
+    }
+
+    pub fn internal<S: Into<String>>(msg: S) -> Self {
+        ReproError::Internal(msg.into())
+    }
+
+    /// Stable lower-snake kind tag — the `"kind"` field of the sweep
+    /// report's `failures` entries and the `FAILED(kind)` marker in the
+    /// text matrix.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ReproError::Config(_) => "config",
+            ReproError::Network(_) => "network",
+            ReproError::Allocation(_) => "allocation",
+            ReproError::Simulation(_) => "simulation",
+            ReproError::CacheIo(_) => "cache_io",
+            ReproError::Internal(_) => "internal",
+        }
+    }
+
+    /// The human-readable message (what `Display` prints).
+    pub fn message(&self) -> &str {
+        match self {
+            ReproError::Config(m)
+            | ReproError::Network(m)
+            | ReproError::Allocation(m)
+            | ReproError::Simulation(m)
+            | ReproError::CacheIo(m)
+            | ReproError::Internal(m) => m,
+        }
+    }
+
+    /// Substring test on the message — the assertion shape the test
+    /// suites already use on `String` errors (`err.contains("...")`)
+    /// keeps compiling unchanged.
+    pub fn contains(&self, needle: &str) -> bool {
+        self.message().contains(needle)
+    }
+
+    /// Same variant, message prefixed — for call sites that wrap an inner
+    /// error with context (`--net-file <path>: ...`).
+    pub fn prefixed(self, prefix: &str) -> Self {
+        let wrap = |m: String| format!("{prefix}{m}");
+        match self {
+            ReproError::Config(m) => ReproError::Config(wrap(m)),
+            ReproError::Network(m) => ReproError::Network(wrap(m)),
+            ReproError::Allocation(m) => ReproError::Allocation(wrap(m)),
+            ReproError::Simulation(m) => ReproError::Simulation(wrap(m)),
+            ReproError::CacheIo(m) => ReproError::CacheIo(wrap(m)),
+            ReproError::Internal(m) => ReproError::Internal(wrap(m)),
+        }
+    }
+
+    /// Convert a payload caught by `std::panic::catch_unwind` into
+    /// [`ReproError::Internal`]. `panic!("...")` payloads are `&str` or
+    /// `String`; anything else gets a fixed placeholder (the payload type
+    /// is unknowable without downcasting every possibility).
+    pub fn from_panic(payload: Box<dyn std::any::Any + Send>) -> Self {
+        let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        };
+        ReproError::Internal(format!("panic: {msg}"))
+    }
+
+    /// `{"kind": ..., "message": ...}` — the shape embedded in the sweep
+    /// report's `failures` entries.
+    pub fn to_json_value(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind().to_string()));
+        m.insert("message".to_string(), Json::Str(self.message().to_string()));
+        Json::Obj(m)
+    }
+}
+
+impl fmt::Display for ReproError {
+    /// Bare message, no variant prefix: CLI output and test assertions
+    /// see exactly the text the old `String` errors carried.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.message())
+    }
+}
+
+impl std::error::Error for ReproError {}
+
+/// `?` interop for callers still returning `Result<_, String>` (the CLI
+/// argument helpers): a converted function's `ReproError` coerces back to
+/// its message.
+impl From<ReproError> for String {
+    fn from(e: ReproError) -> String {
+        match e {
+            ReproError::Config(m)
+            | ReproError::Network(m)
+            | ReproError::Allocation(m)
+            | ReproError::Simulation(m)
+            | ReproError::CacheIo(m)
+            | ReproError::Internal(m) => m,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_the_bare_message() {
+        let e = ReproError::network("cycle detected through node \"a\"");
+        assert_eq!(e.to_string(), "cycle detected through node \"a\"");
+        assert_eq!(e.kind(), "network");
+    }
+
+    #[test]
+    fn contains_matches_on_the_message() {
+        let e = ReproError::config("unknown granularity \"coarse\"");
+        assert!(e.contains("coarse"));
+        assert!(!e.contains("config")); // the kind tag is not in the text
+    }
+
+    #[test]
+    fn from_panic_captures_str_and_string_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        let e = ReproError::from_panic(p);
+        assert_eq!(e, ReproError::Internal("panic: boom 7".to_string()));
+
+        let p = std::panic::catch_unwind(|| panic!("static boom")).unwrap_err();
+        assert!(ReproError::from_panic(p).contains("static boom"));
+
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42u32)).unwrap_err();
+        assert!(ReproError::from_panic(p).contains("non-string panic payload"));
+    }
+
+    #[test]
+    fn prefixed_keeps_the_variant() {
+        let e = ReproError::network("missing field").prefixed("--net-file x.json: ");
+        assert_eq!(e, ReproError::Network("--net-file x.json: missing field".to_string()));
+    }
+
+    #[test]
+    fn json_value_has_kind_and_message() {
+        let e = ReproError::cache_io("torn entry");
+        assert_eq!(e.to_json_value().to_string(), r#"{"kind":"cache_io","message":"torn entry"}"#);
+    }
+
+    #[test]
+    fn string_conversion_is_the_message() {
+        let s: String = ReproError::allocation("zero SRAM budget").into();
+        assert_eq!(s, "zero SRAM budget");
+    }
+}

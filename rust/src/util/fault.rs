@@ -1,0 +1,283 @@
+//! Deterministic fault injection for the sweep pipeline.
+//!
+//! Robustness claims ("one pathological cell cannot take down the run",
+//! "a torn cache write degrades to a miss") are untestable without a way
+//! to *cause* those failures on demand. This module is that way: a
+//! [`FaultPlan`] names injection sites inside the sweep engine and
+//! decides — **from cell content only** — whether each site trips.
+//!
+//! # Sites
+//!
+//! | site          | effect when tripped                                        |
+//! |---------------|------------------------------------------------------------|
+//! | `cache.load`  | the cache lookup reports a miss                            |
+//! | `cache.store` | the entry is written *torn* (truncated) and the store errors |
+//! | `eval.alloc`  | the cell's allocation panics (exercises `catch_unwind`)    |
+//! | `eval.sim`    | the cell's simulation returns a `Simulation` error         |
+//!
+//! # Triggers
+//!
+//! * `key=SUBSTRING` — trips for every cell whose content key contains
+//!   the substring (e.g. `key=mobilenet_v1` fails exactly that network's
+//!   cells).
+//! * `nth=N` — trips when `fnv1a64(key) % N == 0`: a deterministic
+//!   pseudo-random ~1/N subset of cells.
+//!
+//! Both triggers are pure functions of the cell's content key — never of
+//! worker identity, claim order, or wall clock — so an injected run is
+//! exactly reproducible at any `--jobs N`.
+//!
+//! # Arming
+//!
+//! * `REPRO_FAULTS` environment variable: semicolon-separated rules,
+//!   `site:trigger` each — e.g.
+//!   `REPRO_FAULTS='eval.alloc:key=mobilenet_v1;cache.store:nth=2'`.
+//!   The CLI validates the spec up front and refuses to run on a bad one
+//!   ([`env_spec`] + [`FaultPlan::parse`]); library consumers that skip
+//!   validation get a silently disarmed harness rather than surprise
+//!   faults.
+//! * Test-only in-process API: [`arm`] / [`disarm`]. While armed, the
+//!   override *replaces* the environment plan entirely, so tests are
+//!   hermetic against an inherited `REPRO_FAULTS`.
+//!
+//! Disarmed (the default), every [`trip`] call is a cheap read of a
+//! never-written lock returning `false` — the production path stays
+//! byte-identical with the harness compiled in (asserted by the CI warm
+//! gate).
+
+use std::sync::{OnceLock, RwLock};
+
+use crate::util::error::ReproError;
+
+/// A named injection point inside the sweep engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Inside `CellCache::load`: a trip reports a miss.
+    CacheLoad,
+    /// Inside `CellCache::store`: a trip writes a torn entry and errors.
+    CacheStore,
+    /// Inside `sweep::eval_cell` before allocation: a trip panics.
+    EvalAlloc,
+    /// Inside `sweep::eval_cell` before simulation: a trip returns
+    /// [`ReproError::Simulation`].
+    EvalSim,
+}
+
+impl Site {
+    /// The spelling used in `REPRO_FAULTS` rules.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::CacheLoad => "cache.load",
+            Site::CacheStore => "cache.store",
+            Site::EvalAlloc => "eval.alloc",
+            Site::EvalSim => "eval.sim",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Site> {
+        match s {
+            "cache.load" => Some(Site::CacheLoad),
+            "cache.store" => Some(Site::CacheStore),
+            "eval.alloc" => Some(Site::EvalAlloc),
+            "eval.sim" => Some(Site::EvalSim),
+            _ => None,
+        }
+    }
+}
+
+/// When a rule's site fires. Both arms are pure functions of the cell's
+/// content key, keeping injected runs reproducible at any job count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Trigger {
+    /// Trips when `fnv1a64(key) % n == 0` — a deterministic ~1/n subset.
+    /// (A shared counter would depend on claim order and break `--jobs N`
+    /// reproducibility; hashing the content does not.)
+    Nth(u64),
+    /// Trips when the content key contains the substring.
+    KeySubstring(String),
+}
+
+/// FNV offset basis; any fixed seed works, it only needs to be stable.
+const NTH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+impl Trigger {
+    fn fires(&self, key: &str) -> bool {
+        match self {
+            Trigger::Nth(n) => crate::sweep::cache::fnv1a64(key.as_bytes(), NTH_SEED) % n == 0,
+            Trigger::KeySubstring(s) => key.contains(s.as_str()),
+        }
+    }
+}
+
+/// A set of `(site, trigger)` rules. Empty plans are unrepresentable via
+/// [`FaultPlan::parse`] (a set-but-empty `REPRO_FAULTS` is a config
+/// error, not a silent no-op).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    rules: Vec<(Site, Trigger)>,
+}
+
+impl FaultPlan {
+    /// Parse a `REPRO_FAULTS` spec: semicolon-separated `site:trigger`
+    /// rules, trigger one of `key=SUBSTRING` / `nth=N`.
+    ///
+    /// ```
+    /// use repro::util::fault::{FaultPlan, Site};
+    ///
+    /// let plan = FaultPlan::parse("eval.alloc:key=mobilenet_v1;cache.store:nth=2").unwrap();
+    /// assert!(plan.should_trip(Site::EvalAlloc, "{\"network\":\"mobilenet_v1\"}"));
+    /// assert!(!plan.should_trip(Site::EvalSim, "{\"network\":\"mobilenet_v1\"}"));
+    ///
+    /// let err = FaultPlan::parse("eval.malloc:nth=2").unwrap_err();
+    /// assert!(err.contains("unknown site"));
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultPlan, ReproError> {
+        let mut rules = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (site_s, trig_s) = part.split_once(':').ok_or_else(|| {
+                ReproError::config(format!("REPRO_FAULTS rule {part:?}: expected site:trigger"))
+            })?;
+            let site = Site::parse(site_s.trim()).ok_or_else(|| {
+                ReproError::config(format!(
+                    "REPRO_FAULTS rule {part:?}: unknown site {:?} (known sites: cache.load, cache.store, eval.alloc, eval.sim)",
+                    site_s.trim()
+                ))
+            })?;
+            let trig_s = trig_s.trim();
+            let trigger = if let Some(sub) = trig_s.strip_prefix("key=") {
+                Trigger::KeySubstring(sub.to_string())
+            } else if let Some(nth) = trig_s.strip_prefix("nth=") {
+                match nth.parse::<u64>() {
+                    Ok(n) if n >= 1 => Trigger::Nth(n),
+                    _ => {
+                        return Err(ReproError::config(format!(
+                            "REPRO_FAULTS rule {part:?}: nth wants a positive integer, got {nth:?}"
+                        )))
+                    }
+                }
+            } else {
+                return Err(ReproError::config(format!(
+                    "REPRO_FAULTS rule {part:?}: unknown trigger {trig_s:?} (use key=SUBSTRING or nth=N)"
+                )));
+            };
+            rules.push((site, trigger));
+        }
+        if rules.is_empty() {
+            return Err(ReproError::config("REPRO_FAULTS is set but contains no rules"));
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// A single-rule plan — the common shape in tests.
+    pub fn rule(site: Site, trigger: Trigger) -> FaultPlan {
+        FaultPlan { rules: vec![(site, trigger)] }
+    }
+
+    /// Does any rule for `site` fire on this content key?
+    pub fn should_trip(&self, site: Site, key: &str) -> bool {
+        self.rules.iter().any(|(s, t)| *s == site && t.fires(key))
+    }
+}
+
+/// Test-only in-process override; `Some` replaces the environment plan
+/// entirely while armed.
+static TEST_OVERRIDE: RwLock<Option<FaultPlan>> = RwLock::new(None);
+
+/// The `REPRO_FAULTS` plan, parsed once (invalid specs disarm silently
+/// here — the CLI front-end validates loudly before starting a sweep).
+static ENV_PLAN: OnceLock<Option<FaultPlan>> = OnceLock::new();
+
+/// Arm an in-process plan (test API). Replaces any environment plan
+/// until [`disarm`]. Tests sharing a process must serialize around
+/// arm/disarm pairs — the override is global.
+pub fn arm(plan: FaultPlan) {
+    *TEST_OVERRIDE.write().unwrap_or_else(|e| e.into_inner()) = Some(plan);
+}
+
+/// Clear the in-process plan (test API).
+pub fn disarm() {
+    *TEST_OVERRIDE.write().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// The raw `REPRO_FAULTS` value, if set and non-blank — what the CLI
+/// validates with [`FaultPlan::parse`] before starting a sweep.
+pub fn env_spec() -> Option<String> {
+    std::env::var("REPRO_FAULTS").ok().filter(|s| !s.trim().is_empty())
+}
+
+fn env_plan() -> Option<&'static FaultPlan> {
+    ENV_PLAN.get_or_init(|| env_spec().and_then(|s| FaultPlan::parse(&s).ok())).as_ref()
+}
+
+/// Should `site` fail for the cell identified by content `key`? The
+/// single question every injection site asks. Disarmed, always `false`.
+pub fn trip(site: Site, key: &str) -> bool {
+    if let Some(plan) = TEST_OVERRIDE.read().unwrap_or_else(|e| e.into_inner()).as_ref() {
+        return plan.should_trip(site, key);
+    }
+    env_plan().is_some_and(|p| p.should_trip(site, key))
+}
+
+/// Is any plan (override or environment) active?
+pub fn armed() -> bool {
+    TEST_OVERRIDE.read().unwrap_or_else(|e| e.into_inner()).is_some() || env_plan().is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    // Pure-plan tests only: arming the global override here would race
+    // the sweep/cache unit tests sharing this test binary. The arm/disarm
+    // lifecycle is exercised (serialized) in `rust/tests/faults.rs`.
+    use super::*;
+
+    #[test]
+    fn parses_multi_rule_specs() {
+        let plan = FaultPlan::parse(" cache.load:key=zc706 ; eval.sim:nth=3 ").unwrap();
+        assert!(plan.should_trip(Site::CacheLoad, "cell for zc706"));
+        assert!(!plan.should_trip(Site::CacheStore, "cell for zc706"));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for (spec, needle) in [
+            ("eval.alloc", "expected site:trigger"),
+            ("eval.malloc:nth=2", "unknown site"),
+            ("eval.alloc:every=2", "unknown trigger"),
+            ("eval.alloc:nth=0", "positive integer"),
+            ("eval.alloc:nth=x", "positive integer"),
+            ("  ;  ", "no rules"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec}: {err}");
+            assert_eq!(err.kind(), "config", "{spec}");
+        }
+    }
+
+    #[test]
+    fn nth_is_a_pure_function_of_the_key() {
+        let plan = FaultPlan::rule(Site::EvalAlloc, Trigger::Nth(3));
+        let keys: Vec<String> = (0..64).map(|i| format!("cell-{i}")).collect();
+        let first: Vec<bool> =
+            keys.iter().map(|k| plan.should_trip(Site::EvalAlloc, k)).collect();
+        let second: Vec<bool> =
+            keys.iter().map(|k| plan.should_trip(Site::EvalAlloc, k)).collect();
+        assert_eq!(first, second, "same key must always give the same answer");
+        let hits = first.iter().filter(|&&b| b).count();
+        assert!(hits > 0 && hits < keys.len(), "nth=3 should trip a strict subset, got {hits}/64");
+    }
+
+    #[test]
+    fn nth_one_trips_everything() {
+        let plan = FaultPlan::rule(Site::CacheStore, Trigger::Nth(1));
+        for k in ["a", "b", "anything at all"] {
+            assert!(plan.should_trip(Site::CacheStore, k));
+        }
+    }
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in [Site::CacheLoad, Site::CacheStore, Site::EvalAlloc, Site::EvalSim] {
+            assert_eq!(Site::parse(site.name()), Some(site));
+        }
+    }
+}

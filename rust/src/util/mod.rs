@@ -1,9 +1,12 @@
 //! Self-contained utilities replacing unavailable third-party crates in
 //! this offline build: a JSON parser ([`json`]), a scoped-thread work
-//! pool with deterministic output ordering ([`pool`]), a deterministic
-//! PRNG + property-test harness ([`prop`]), and a micro-bench timer
-//! ([`bench`]).
+//! pool with deterministic output ordering ([`pool`]), the typed error
+//! taxonomy ([`error`]), the deterministic fault-injection harness
+//! ([`fault`]), a deterministic PRNG + property-test harness ([`prop`]),
+//! and a micro-bench timer ([`bench`]).
 
+pub mod error;
+pub mod fault;
 pub mod json;
 pub mod pool;
 

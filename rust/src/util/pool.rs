@@ -23,7 +23,12 @@
 //! `rust/tests/pareto.rs`).
 //!
 //! `std::thread::scope` means borrowed inputs need no `'static` bound and
-//! a panicking worker propagates on join instead of being silently lost.
+//! a panicking worker propagates on join instead of being silently lost
+//! (surviving workers recover the poisoned result mutex, so the *first*
+//! panic is the one that propagates, not a secondary `PoisonError`).
+//! When one bad item must not abort the rest, use
+//! [`parallel_map_fallible`]: it catches each item's panic into a typed
+//! [`ReproError`] slot while keeping the same deterministic ordering.
 //!
 //! # Examples
 //!
@@ -38,7 +43,19 @@
 //! ```
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::util::error::ReproError;
+
+/// Lock recovering from poisoning: a panic in one worker must not turn
+/// every surviving worker's ordinary lock into a secondary `PoisonError`
+/// panic that masks the original. The protected data (claimed indices,
+/// completed results) stays consistent across a mid-`f` panic — the
+/// deques and results vector are only mutated while no `f` runs.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Map `f` over `items` on up to `jobs` scoped threads, returning results
 /// in input order (index `i` of the output is `f(i, &items[i])`).
@@ -88,7 +105,7 @@ where
                 let mut local = Vec::new();
                 loop {
                     // Fast path: drain the front of our own deque.
-                    let next = deques[w].lock().unwrap().pop_front();
+                    let next = lock(&deques[w]).pop_front();
                     if let Some(i) = next {
                         local.push((i, f(i, &items[i])));
                         continue;
@@ -108,11 +125,11 @@ where
                     // thief's (empty) deque while holding one.
                     let mut stole = false;
                     for off in 1..jobs {
-                        let mut q = deques[(w + off) % jobs].lock().unwrap();
+                        let mut q = lock(&deques[(w + off) % jobs]);
                         if !q.is_empty() {
                             let steal = q.len().div_ceil(2);
                             let stolen = q.split_off(q.len() - steal);
-                            *deques[w].lock().unwrap() = stolen;
+                            *lock(&deques[w]) = stolen;
                             stole = true;
                             break;
                         }
@@ -124,15 +141,70 @@ where
                         break;
                     }
                 }
-                results.lock().unwrap().extend(local);
+                lock(results).extend(local);
             });
         }
     });
     // Claim order is racy; output order is not: sort back to input order.
-    let mut tagged = results.into_inner().unwrap();
+    let mut tagged = results.into_inner().unwrap_or_else(|e| e.into_inner());
     tagged.sort_by_key(|&(i, _)| i);
     debug_assert_eq!(tagged.len(), items.len());
     tagged.into_iter().map(|(_, u)| u).collect()
+}
+
+/// Panic-safe fallible variant of [`parallel_map`]: every per-item call
+/// is wrapped in `catch_unwind`, so one panicking item becomes one
+/// `Err(ReproError::Internal)` slot instead of aborting the whole map
+/// and discarding every completed result.
+///
+/// Guarantees, for any `jobs`:
+///
+/// * Output slot `i` is the outcome of item `i` (deterministic input
+///   order, same as [`parallel_map`]).
+/// * `Ok` slots are byte-for-byte what the all-success path produces — a
+///   failing neighbor cannot perturb them.
+/// * The serial (`jobs <= 1`) path catches panics identically, so
+///   `--jobs 1` and `--jobs N` agree on failure shape too.
+///
+/// This is what makes per-cell fault isolation in `repro sweep` possible:
+/// `sweep::run` maps cells through here and folds `Err` slots into the
+/// report's `failures` section instead of crashing.
+///
+/// # Examples
+///
+/// ```
+/// use repro::util::pool::parallel_map_fallible;
+/// use repro::util::error::ReproError;
+///
+/// let items = [1u64, 2, 3, 4];
+/// let out = parallel_map_fallible(4, &items, |_, &x| {
+///     if x == 3 {
+///         panic!("item three explodes");
+///     }
+///     Ok(x * x)
+/// });
+/// assert_eq!(out[0], Ok(1));
+/// assert_eq!(out[3], Ok(16));
+/// assert!(matches!(&out[2], Err(e) if e.contains("item three explodes")));
+/// ```
+pub fn parallel_map_fallible<T, U, F>(
+    jobs: usize,
+    items: &[T],
+    f: F,
+) -> Vec<Result<U, ReproError>>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> Result<U, ReproError> + Sync,
+{
+    // AssertUnwindSafe: `f` is `Fn` (shared-reference captures only) and
+    // any interior state it touches is either per-call or consistent
+    // under panic (the sweep's atomics/caches are); the catch exists to
+    // contain the panic, not to re-enter broken state.
+    parallel_map(jobs, items, |i, t| {
+        catch_unwind(AssertUnwindSafe(|| f(i, t)))
+            .unwrap_or_else(|payload| Err(ReproError::from_panic(payload)))
+    })
 }
 
 /// A sensible default worker count for CLI `--jobs`-style flags: the
@@ -239,5 +311,129 @@ mod tests {
     #[test]
     fn default_jobs_is_at_least_one() {
         assert!(default_jobs() >= 1);
+    }
+
+    /// The panic hook is process-global; tests that swap it must not
+    /// overlap (the test harness runs tests on multiple threads).
+    static HOOK_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Run `f` with the default panic hook silenced, so intentionally
+    /// panicking tests don't spray backtraces into the test log.
+    fn quiet_panics<R>(f: impl FnOnce() -> R) -> R {
+        let _serialize = lock(&HOOK_LOCK);
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = f();
+        std::panic::set_hook(hook);
+        r
+    }
+
+    #[test]
+    fn fallible_map_isolates_a_panicking_item() {
+        let items: Vec<u64> = (0..32).collect();
+        let expect: Vec<Result<u64, ReproError>> = items
+            .iter()
+            .map(|&x| {
+                if x == 13 {
+                    Err(ReproError::Internal("panic: unlucky".to_string()))
+                } else {
+                    Ok(x + 1)
+                }
+            })
+            .collect();
+        quiet_panics(|| {
+            for jobs in [1, 2, 4, 8] {
+                let got = parallel_map_fallible(jobs, &items, |_, &x| {
+                    if x == 13 {
+                        panic!("unlucky");
+                    }
+                    Ok(x + 1)
+                });
+                assert_eq!(got, expect, "jobs={jobs}");
+            }
+        });
+    }
+
+    #[test]
+    fn fallible_map_passes_err_returns_through_untouched() {
+        let items = vec!["ok", "bad", "ok"];
+        let got = parallel_map_fallible(2, &items, |i, &s| {
+            if s == "bad" {
+                Err(ReproError::allocation(format!("item {i} infeasible")))
+            } else {
+                Ok(s.len())
+            }
+        });
+        assert_eq!(
+            got,
+            vec![Ok(2), Err(ReproError::Allocation("item 1 infeasible".to_string())), Ok(2)]
+        );
+    }
+
+    #[test]
+    fn fallible_map_success_path_matches_parallel_map() {
+        let items: Vec<u64> = (0..100).collect();
+        let plain = parallel_map(4, &items, |_, &x| x * 3);
+        let fallible = parallel_map_fallible(4, &items, |_, &x| Ok(x * 3));
+        assert_eq!(fallible.into_iter().collect::<Result<Vec<_>, _>>().unwrap(), plain);
+    }
+
+    #[test]
+    fn fallible_map_survives_every_item_panicking() {
+        let items: Vec<u64> = (0..16).collect();
+        quiet_panics(|| {
+            for jobs in [1, 4] {
+                let got = parallel_map_fallible(jobs, &items, |i, _| -> Result<(), _> {
+                    panic!("all fail ({i})")
+                });
+                assert_eq!(got.len(), items.len(), "jobs={jobs}");
+                for (i, r) in got.iter().enumerate() {
+                    assert!(
+                        matches!(r, Err(e) if e.contains(&format!("all fail ({i})"))),
+                        "jobs={jobs} item={i}: {r:?}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn infallible_map_panic_is_the_original_never_a_poison_error() {
+        // Satellite regression: with any mutex left poisoned by a
+        // panicking worker, surviving workers' plain `.lock().unwrap()`
+        // would raise secondary PoisonError panics that mask the original.
+        // Record every panic the process sees during the run: the
+        // original must be there, PoisonError must not.
+        use std::sync::Arc;
+
+        let _serialize = lock(&HOOK_LOCK);
+        let seen: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let record = Arc::clone(&seen);
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            lock(&record).push(info.to_string());
+        }));
+        let items: Vec<u64> = (0..64).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(4, &items, |i, &x| {
+                if i == 0 {
+                    panic!("original worker panic");
+                }
+                // Let survivors overlap the panicking worker's unwind.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                x
+            });
+        }));
+        std::panic::set_hook(hook);
+        assert!(result.is_err(), "the worker panic must still propagate to the caller");
+        let seen = lock(&seen).clone();
+        assert!(
+            seen.iter().any(|m| m.contains("original worker panic")),
+            "original panic missing from {seen:?}"
+        );
+        assert!(
+            !seen.iter().any(|m| m.contains("PoisonError")),
+            "a secondary PoisonError panic fired alongside the original: {seen:?}"
+        );
     }
 }

@@ -95,7 +95,7 @@ fn warm_cache_full_matrix_rederives_nothing_and_is_byte_identical() {
     let spec = SweepSpec { cache_dir: Some(dir.clone()), ..SweepSpec::default() };
 
     let cold = spec.run();
-    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 12 }));
+    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 12, store_errors: 0 }));
 
     let save_cold = tmp_dir("warm_full_matrix_artifacts_cold");
     let cold_paths = cold.save_designs(&save_cold).expect("save cold artifacts");
@@ -107,7 +107,7 @@ fn warm_cache_full_matrix_rederives_nothing_and_is_byte_identical() {
     assert_eq!(alg2_after - alg2_before, 0, "warm sweep re-ran Algorithm 2");
 
     let stats = warm.cache.expect("cached run reports stats");
-    assert_eq!(stats, CacheStats { hits: 12, misses: 0 });
+    assert_eq!(stats, CacheStats { hits: 12, misses: 0, store_errors: 0 });
     assert_eq!(stats.hit_rate(), 1.0, "hit-rate 100% reported in stats");
 
     assert_eq!(cold.to_json(), warm.to_json(), "warm JSON document drifted from cold");
@@ -131,7 +131,7 @@ fn warm_cache_full_matrix_rederives_nothing_and_is_byte_identical() {
     let before = derivations::alg1_runs();
     let warm_par = par.run();
     assert_eq!(derivations::alg1_runs(), before, "parallel warm sweep re-ran Algorithm 1");
-    assert_eq!(warm_par.cache, Some(CacheStats { hits: 12, misses: 0 }));
+    assert_eq!(warm_par.cache, Some(CacheStats { hits: 12, misses: 0, store_errors: 0 }));
     assert_eq!(cold.to_json(), warm_par.to_json());
 
     for d in [dir, save_cold, save_warm] {
@@ -152,7 +152,7 @@ fn warm_cache_restores_simulated_figures_byte_identically() {
     let cold = spec.run();
     assert!(cold.cells[0].sim().is_some(), "premise: the cold run simulated");
     let warm = spec.run();
-    assert_eq!(warm.cache, Some(CacheStats { hits: 1, misses: 0 }));
+    assert_eq!(warm.cache, Some(CacheStats { hits: 1, misses: 0, store_errors: 0 }));
     assert_eq!(cold.to_json(), warm.to_json());
     let (c, w) = (cold.cells[0].sim().unwrap(), warm.cells[0].sim().unwrap());
     assert_eq!(c.frames, w.frames);
@@ -163,7 +163,7 @@ fn warm_cache_restores_simulated_figures_byte_identically() {
     let mut model_only = spec.clone();
     model_only.frames = None;
     let probe = model_only.run();
-    assert_eq!(probe.cache, Some(CacheStats { hits: 0, misses: 1 }));
+    assert_eq!(probe.cache, Some(CacheStats { hits: 0, misses: 1, store_errors: 0 }));
     assert!(probe.cells[0].sim().is_none());
     let _ = std::fs::remove_dir_all(&dir);
 }

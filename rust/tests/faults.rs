@@ -1,0 +1,232 @@
+//! Fault-isolation acceptance tests, driven through the deterministic
+//! injection harness (`repro::util::fault`).
+//!
+//! These are the robustness claims the harness exists to prove:
+//!
+//! * a panicking cell becomes exactly one [`CellFailure`] while every
+//!   other cell's bytes are identical to a fault-free run, at any
+//!   `--jobs N`;
+//! * a torn (`cache.store`-faulted) cache write surfaces in
+//!   [`CacheStats::store_errors`], degrades later loads to misses, and
+//!   never changes the bytes any run serves;
+//! * `cache.load` faults cost hit rate, never content;
+//! * the partial-failure exit-code policy ([`sweep::exit_code`]).
+//!
+//! The in-process fault override is global, so every test here grabs one
+//! lock and disarms via an RAII guard — a failing assertion must not
+//! leak an armed plan into the next test.
+
+use std::sync::{Mutex, MutexGuard};
+
+use repro::sweep::{self, SweepSpec};
+use repro::util::fault::{self, FaultPlan, Site, Trigger};
+use repro::CacheStats;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn seq() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arms a plan for the guard's lifetime; disarms on drop (including the
+/// unwind of a failed assertion).
+struct Armed;
+
+impl Armed {
+    fn new(plan: FaultPlan) -> Armed {
+        fault::arm(plan);
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+/// Run a sweep with the injected-panic spew silenced. The quiet hook is
+/// scoped to the `run()` call only, so the test's own assertion panics
+/// still report normally.
+fn run_quiet(spec: &SweepSpec) -> repro::SweepReport {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let report = spec.run();
+    std::panic::set_hook(prev);
+    report
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("repro_faults_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The tentpole acceptance: one injected allocation panic fails exactly
+/// its cell; the survivors are byte-identical to a fault-free run at
+/// `--jobs 1` and `--jobs 4`; the report carries the failure under
+/// `failures`; and the run maps to the partial-failure exit code.
+#[test]
+fn injected_alloc_panic_isolates_one_cell_at_any_job_count() {
+    let _guard = seq();
+    let spec =
+        SweepSpec::from_csv(Some("mobilenet_v1,shufflenet_v2"), Some("zc706"), None).unwrap();
+    let clean = spec.run();
+    assert_eq!(clean.cells.len(), 2);
+    assert!(clean.failures.is_empty());
+    assert_eq!(sweep::exit_code(&clean), 0, "clean runs exit 0");
+
+    // The content key embeds the network name, so this substring selects
+    // exactly the mobilenet_v1 cell — worker identity never enters.
+    let _armed = Armed::new(FaultPlan::rule(
+        Site::EvalAlloc,
+        Trigger::KeySubstring("\"network\":\"mobilenet_v1\"".to_string()),
+    ));
+    let mut documents = Vec::new();
+    for jobs in [1usize, 4] {
+        let mut par = spec.clone();
+        par.jobs = jobs;
+        let report = run_quiet(&par);
+
+        assert_eq!(report.failures.len(), 1, "jobs={jobs}: exactly one failed cell");
+        let f = &report.failures[0];
+        assert_eq!(f.index, 0, "mobilenet_v1 is the first matrix combination");
+        assert_eq!(f.label(), "mobilenet_v1/zc706/fgpm");
+        assert_eq!(f.error.kind(), "internal", "a caught panic is an Internal error");
+        assert!(
+            f.error.contains("panic: injected fault: eval.alloc"),
+            "jobs={jobs}: {}",
+            f.error
+        );
+
+        // The survivor is bit-for-bit the cell the fault-free run built.
+        assert_eq!(report.cells.len(), 1);
+        assert_eq!(
+            report.cells[0].to_json_value().to_string(),
+            clean.cells[1].to_json_value().to_string(),
+            "jobs={jobs}: surviving cell drifted from the fault-free run"
+        );
+
+        let json = report.to_json();
+        assert!(json.contains("\"failures\""), "{json}");
+        assert!(json.contains("\"kind\":\"internal\""), "{json}");
+        assert_eq!(sweep::exit_code(&report), sweep::EXIT_PARTIAL_FAILURE);
+        documents.push(json);
+    }
+    assert_eq!(documents[0], documents[1], "degraded documents must not depend on --jobs");
+
+    // Clean-run documents never carry the key at all.
+    assert!(!clean.to_json().contains("failures"));
+}
+
+/// An injected `eval.sim` fault is a *typed* Simulation failure — and
+/// stays distinguishable from an organic simulator deadlock, which is a
+/// per-cell measurement (`SweepCell::sim_error`), not a `CellFailure`.
+#[test]
+fn injected_sim_fault_is_a_typed_simulation_failure() {
+    let _guard = seq();
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None).unwrap();
+    spec.frames = Some(2);
+    let _armed = Armed::new(FaultPlan::rule(Site::EvalSim, Trigger::Nth(1)));
+    let report = spec.run();
+    assert!(report.cells.is_empty());
+    assert_eq!(report.failures.len(), 1);
+    let f = &report.failures[0];
+    assert_eq!(f.error.kind(), "simulation");
+    assert!(f.error.contains("injected fault: eval.sim for cell shufflenet_v2/zc706/fgpm"), "{}", f.error);
+    assert_eq!(sweep::exit_code(&report), sweep::EXIT_PARTIAL_FAILURE);
+}
+
+/// `cache.store` faults write torn entries and error the store: the run
+/// still succeeds (store failures never fail a cell), the stats count
+/// them, torn entries degrade later loads to misses, and after disarming
+/// the cache heals back to a 100% warm hit rate — with every document
+/// byte-identical throughout.
+#[test]
+fn torn_cache_stores_surface_in_stats_and_degrade_to_misses() {
+    let _guard = seq();
+    let dir = tmp_dir("torn_store");
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+    spec.cache_dir = Some(dir.clone());
+    let mut uncached = spec.clone();
+    uncached.cache_dir = None;
+    let reference = uncached.run().to_json();
+
+    {
+        let _armed = Armed::new(FaultPlan::rule(Site::CacheStore, Trigger::Nth(1)));
+        let cold = spec.run();
+        assert_eq!(
+            cold.cache,
+            Some(CacheStats { hits: 0, misses: 2, store_errors: 2 }),
+            "every store fails torn"
+        );
+        assert!(cold.failures.is_empty(), "store failures never fail cells");
+        assert_eq!(sweep::exit_code(&cold), 0, "store errors alone do not fail the run");
+        assert_eq!(cold.to_json(), reference);
+        // The stderr summary line appends the count only when nonzero.
+        let line = cold.cache.unwrap().summary(&dir);
+        assert!(line.contains("2 store errors"), "{line}");
+
+        // The torn entries on disk are strictly shorter than a valid
+        // entry and must degrade the next run to misses, not panics.
+        let rerun = spec.run();
+        assert_eq!(rerun.cache, Some(CacheStats { hits: 0, misses: 2, store_errors: 2 }));
+        assert_eq!(rerun.to_json(), reference);
+    }
+
+    // Disarmed: the misses re-store pristine entries and the cache heals.
+    let recovered = spec.run();
+    assert_eq!(recovered.cache, Some(CacheStats { hits: 0, misses: 2, store_errors: 0 }));
+    assert_eq!(recovered.to_json(), reference);
+    let warm = spec.run();
+    assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0, store_errors: 0 }));
+    assert_eq!(warm.cache.unwrap().hit_rate(), 1.0);
+    assert_eq!(warm.to_json(), reference);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `cache.load` faults force misses on a warm cache: the hit rate drops,
+/// the served bytes never move.
+#[test]
+fn injected_load_faults_cost_hits_but_never_change_served_bytes() {
+    let _guard = seq();
+    let dir = tmp_dir("load_miss");
+    let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
+    spec.cache_dir = Some(dir.clone());
+    let cold = spec.run();
+    assert_eq!(spec.run().cache, Some(CacheStats { hits: 2, misses: 0, store_errors: 0 }));
+
+    {
+        let _armed = Armed::new(FaultPlan::rule(Site::CacheLoad, Trigger::Nth(1)));
+        let degraded = spec.run();
+        assert_eq!(
+            degraded.cache,
+            Some(CacheStats { hits: 0, misses: 2, store_errors: 0 }),
+            "every load trips to a miss"
+        );
+        assert_eq!(degraded.to_json(), cold.to_json());
+    }
+
+    // Disarmed again: the re-stored entries serve warm as before.
+    let warm = spec.run();
+    assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0, store_errors: 0 }));
+    assert_eq!(warm.to_json(), cold.to_json());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The test override replaces the environment plan entirely while armed,
+/// and `armed()` reflects the lifecycle — the hermeticity the RAII guard
+/// in every test above relies on.
+#[test]
+fn arm_disarm_lifecycle_is_hermetic() {
+    let _guard = seq();
+    assert!(!fault::armed(), "tests must start disarmed");
+    {
+        let _armed = Armed::new(FaultPlan::rule(Site::CacheLoad, Trigger::Nth(1)));
+        assert!(fault::armed());
+        assert!(fault::trip(Site::CacheLoad, "any key"));
+        assert!(!fault::trip(Site::CacheStore, "any key"), "other sites stay quiet");
+    }
+    assert!(!fault::armed(), "the guard disarms on drop");
+    assert!(!fault::trip(Site::CacheLoad, "any key"));
+}

@@ -219,9 +219,9 @@ fn non_zoo_network_designs_embed_their_definition_and_sweep_warm() {
         ..SweepSpec::default()
     };
     let cold = spec.run();
-    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 1 }));
+    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 1, store_errors: 0 }));
     let warm = spec.run();
-    assert_eq!(warm.cache, Some(CacheStats { hits: 1, misses: 0 }));
+    assert_eq!(warm.cache, Some(CacheStats { hits: 1, misses: 0, store_errors: 0 }));
     assert_eq!(cold.to_json(), warm.to_json(), "warm document must be byte-identical");
 
     // Editing the network file changes the content key: the same sweep
@@ -232,6 +232,6 @@ fn non_zoo_network_designs_embed_their_definition_and_sweep_warm() {
     let edited_graph = ir::from_json(&edited_text).expect("edited graph still valid");
     let edited = ir::lower(&edited_graph).expect("edited graph lowers");
     let respec = SweepSpec { nets: vec![edited], ..spec };
-    assert_eq!(respec.run().cache, Some(CacheStats { hits: 0, misses: 1 }));
+    assert_eq!(respec.run().cache, Some(CacheStats { hits: 0, misses: 1, store_errors: 0 }));
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -84,7 +84,7 @@ fn assert_frontier_matches_brute_force(report: &SweepReport) {
 
 #[test]
 fn empty_matrix_yields_empty_analysis() {
-    let report = SweepReport { cells: Vec::new(), cache: None };
+    let report = SweepReport { cells: Vec::new(), failures: Vec::new(), cache: None };
     let analysis = pareto(&report);
     assert!(analysis.fronts.is_empty());
     // And the JSON embedding is well-formed — for the 4-D analysis too.

@@ -575,11 +575,11 @@ fn prop_sweep_cache_round_trips_and_never_serves_stale_cells() {
 
         // Round-trip: cold fills, warm serves, bytes never move.
         let cold = spec.run();
-        if cold.cache != Some(repro::CacheStats { hits: 0, misses: 1 }) {
+        if cold.cache != Some(repro::CacheStats { hits: 0, misses: 1, store_errors: 0 }) {
             return Err(format!("cold stats {:?}", cold.cache));
         }
         let warm = spec.run();
-        if warm.cache != Some(repro::CacheStats { hits: 1, misses: 0 }) {
+        if warm.cache != Some(repro::CacheStats { hits: 1, misses: 0, store_errors: 0 }) {
             return Err(format!("warm stats {:?}", warm.cache));
         }
         for (label, report) in [("cold", &cold), ("warm", &warm)] {
@@ -623,5 +623,76 @@ fn prop_sweep_cache_round_trips_and_never_serves_stale_cells() {
         let _ = std::fs::remove_dir_all(&dir);
         Ok(())
     });
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Robustness PR: an arbitrarily corrupted on-disk cache entry —
+/// truncated at a random offset or with a random bit flipped — must
+/// never panic a sweep. The corrupted entry degrades to a miss (the
+/// cell is recomputed, bytes identical to an uncached run), the miss
+/// re-stores a good entry, and the next run is a clean hit again.
+#[test]
+fn prop_corrupted_cache_entries_degrade_to_misses() {
+    let root = std::env::temp_dir().join("repro_prop_sweep_cache_corrupt");
+    let _ = std::fs::remove_dir_all(&root);
+    let mut case_no = 0u64;
+    check(
+        "sweep_cache_corrupt",
+        8,
+        |r: &mut Rng| (cache_case(r), r.range(0, 1), r.range(0, 1_000_000)),
+        |(case, mode, seed)| {
+            case_no += 1;
+            let dir = root.join(format!("case{case_no}"));
+            let spec = cache_case_spec(case, Some(dir.clone()));
+            let uncached = cache_case_spec(case, None).run();
+            spec.run(); // cold fill
+
+            // Corrupt the (single) stored entry in place.
+            let entry = std::fs::read_dir(&dir)
+                .map_err(|e| format!("read_dir: {e}"))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .find(|p| p.to_string_lossy().ends_with(".cell.json"))
+                .ok_or("no .cell.json entry after the cold run")?;
+            let mut bytes = std::fs::read(&entry).map_err(|e| format!("read entry: {e}"))?;
+            if bytes.is_empty() {
+                return Err("stored entry is empty".into());
+            }
+            match mode {
+                0 => bytes.truncate(seed % bytes.len()),
+                _ => {
+                    let at = seed % bytes.len();
+                    bytes[at] ^= 1 << (seed % 8);
+                }
+            }
+            std::fs::write(&entry, &bytes).map_err(|e| format!("corrupt entry: {e}"))?;
+
+            // The corrupted entry is a miss — never a panic, and never a
+            // hit serving flipped bytes: truncation breaks the JSON, and
+            // any payload flip fails the entry's `check` checksum.
+            let degraded = spec.run();
+            if degraded.to_json() != uncached.to_json() {
+                return Err("corrupted cache changed the served bytes".into());
+            }
+            if degraded.cache
+                != Some(repro::CacheStats { hits: 0, misses: 1, store_errors: 0 })
+            {
+                return Err(format!("degraded stats {:?}", degraded.cache));
+            }
+
+            // A miss re-stores a pristine entry; either way the next run
+            // round-trips warm.
+            let recovered = spec.run();
+            if recovered.cache != Some(repro::CacheStats { hits: 1, misses: 0, store_errors: 0 })
+            {
+                return Err(format!("post-recovery stats {:?}", recovered.cache));
+            }
+            if recovered.to_json() != uncached.to_json() {
+                return Err("recovered cache changed the served bytes".into());
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+            Ok(())
+        },
+    );
     let _ = std::fs::remove_dir_all(&root);
 }

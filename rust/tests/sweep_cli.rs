@@ -216,10 +216,10 @@ fn cache_dir_spec_round_trips_with_stats_and_stable_documents() {
     let mut spec = SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706,edge"), None).unwrap();
     spec.cache_dir = Some(dir.clone());
     let cold = spec.run();
-    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2 }));
+    assert_eq!(cold.cache, Some(CacheStats { hits: 0, misses: 2, store_errors: 0 }));
     assert_eq!(cold.cache.unwrap().hit_rate(), 0.0);
     let warm = spec.run();
-    assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0 }));
+    assert_eq!(warm.cache, Some(CacheStats { hits: 2, misses: 0, store_errors: 0 }));
     assert_eq!(warm.cache.unwrap().hit_rate(), 1.0);
     // The stats line CI greps on the warm step.
     let line = warm.cache.unwrap().summary(&dir);
