@@ -56,12 +56,59 @@ pub fn factor_space(m: usize) -> Vec<usize> {
     fs
 }
 
-/// Size of the FGPM space without materializing it: `2 * floor(sqrt(m))`,
-/// minus 1 when `m` is a perfect square (the two halves share `sqrt(m)`)
-/// and adjusted for the overlap at `T = p` boundaries. Tests assert this
-/// matches `fgpm_space(m).len()`.
+/// Size of the FGPM space in O(1), without materializing it — the exact
+/// count of distinct `T = ceil(m/p)` values, which the paper approximates
+/// as `2 * floor(sqrt(M))`.
+///
+/// Derivation: `ceil(m/p) = floor((m-1)/p) + 1` for every `p >= 1`, so
+/// with `n = m - 1` the distinct `T` values over `p in 1..=m` are the
+/// distinct values of `floor(n/p)` shifted by one, plus the extra
+/// `T = 1` contributed by `p = m` (where `floor(n/m) = 0`). The classic
+/// divisor-count identity gives, with `s = floor(sqrt(n))`, exactly
+/// `2s - 1` distinct `floor(n/p)` values when `n < s*(s+1)` (the
+/// perfect-square/overlap correction: the two `sqrt`-halves share their
+/// middle value) and `2s` otherwise.
+///
+/// The constrained optimizer ([`crate::sweep::optimize`]) calls this in
+/// its pruning loop to account the parallel space a pruned candidate
+/// covers, so it must not rebuild the space per call; equality with
+/// `fgpm_space(m).len()` for every `m in 1..=4096` is pinned by
+/// `space_size_closed_form_matches_materialized_space` below.
+///
+/// # Examples
+///
+/// ```
+/// use repro::alloc::fgpm::{fgpm_space, fgpm_space_size};
+///
+/// assert_eq!(fgpm_space_size(0), 0);
+/// for m in [1, 2, 32, 116, 512] {
+///     assert_eq!(fgpm_space_size(m), fgpm_space(m).len());
+/// }
+/// ```
 pub fn fgpm_space_size(m: usize) -> usize {
-    fgpm_space(m).len()
+    match m {
+        0 => 0,
+        1 => 1,
+        _ => {
+            let n = m - 1;
+            let s = isqrt(n);
+            let distinct = if n < s * (s + 1) { 2 * s - 1 } else { 2 * s };
+            distinct + 1
+        }
+    }
+}
+
+/// Integer square root (`usize::isqrt` needs a newer toolchain than the
+/// offline build guarantees): float estimate corrected to exactness.
+fn isqrt(n: usize) -> usize {
+    let mut s = (n as f64).sqrt() as usize;
+    while s.saturating_mul(s) > n {
+        s -= 1;
+    }
+    while (s + 1).saturating_mul(s + 1) <= n {
+        s += 1;
+    }
+    s
 }
 
 /// Padded dimension size when running `m` at parallelism `p`: the hardware
@@ -88,6 +135,28 @@ mod tests {
                 (sz as i64 - formula as i64).abs() <= 1,
                 "m={m}: space {sz} vs formula {formula}"
             );
+        }
+    }
+
+    #[test]
+    fn space_size_closed_form_matches_materialized_space() {
+        // The O(1) closed form must agree with the materialized space
+        // everywhere the optimizer's pruning loop can reach it.
+        assert_eq!(fgpm_space_size(0), 0);
+        for m in 1..=4096 {
+            assert_eq!(fgpm_space_size(m), fgpm_space(m).len(), "m={m}");
+        }
+    }
+
+    #[test]
+    fn isqrt_is_exact_at_square_boundaries() {
+        for r in 0..=128usize {
+            let sq = r * r;
+            assert_eq!(isqrt(sq), r);
+            if sq > 0 {
+                assert_eq!(isqrt(sq - 1), r - 1);
+                assert_eq!(isqrt(sq + 1), r);
+            }
         }
     }
 

@@ -57,7 +57,12 @@
 //!   FPS-vs-clock scaling curves; rendered as text tables
 //!   ([`report::sweep_matrix`], [`report::pareto_table`],
 //!   [`report::pareto_clocks_table`], [`report::clock_curves`]) or stable
-//!   sorted-key JSON.
+//!   sorted-key JSON. Its constrained counterpart, [`sweep::optimize`]
+//!   (`repro optimize`), answers "best design under this budget" directly:
+//!   per-network branch-and-bound over the same matrix, pruning with
+//!   admissible Eq 1–14 bounds and guaranteed to return the exhaustive
+//!   sweep's byte-identical best cell, with a seeded simulated-annealing
+//!   fallback for objectives the bound cannot order.
 //! * [`sim`] — the cycle-level streaming simulator (hybrid CEs, line
 //!   buffers with both padding schemes, order converter, SCB joins).
 //! * [`runtime`] — PJRT wrapper loading AOT-compiled HLO artifacts.
@@ -84,6 +89,7 @@ pub mod sweep;
 pub mod util;
 
 pub use design::{Design, Platform};
+pub use sweep::optimize::{OptimizeReport, OptimizeSpec};
 pub use sweep::{CacheStats, CellFailure, ClockParetoReport, ParetoReport, SweepReport, SweepSpec};
 pub use util::error::ReproError;
 

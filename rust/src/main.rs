@@ -32,6 +32,16 @@
 //!   refuses partial results and fails hard on the first failure. The
 //!   `REPRO_FAULTS` environment variable arms the deterministic
 //!   fault-injection harness (`docs/robustness.md`).
+//! * `optimize` — the constrained design-space search (`sweep::optimize`):
+//!   per-network branch-and-bound over the same matrix as `sweep`, pruning
+//!   with admissible Eq 1–14 analytic bounds and returning the byte-exact
+//!   best cell per network for `--objective fps|sram|dram`, plus search
+//!   statistics (candidates / evaluated / pruned / pruned parallel-space /
+//!   bound tightness). `--platform`/`--sram-mb`/`--dsp`/`--clock` describe
+//!   a single custom budget to search under (instead of a `--platforms`
+//!   axis); `--strategy anneal` selects the seeded simulated-annealing
+//!   fallback; the cache, fault-isolation, `--strict`, `--json`, and exit
+//!   code semantics are the sweep's.
 //! * `net <FILE>` — load and validate a JSON network description through
 //!   the [`repro::ir`] front-end and print its lowered summary (`--json`
 //!   for a stable one-line document); CI runs this over every committed
@@ -47,7 +57,9 @@
 use std::process::ExitCode;
 
 use repro::design::{Design, Platform};
+use repro::sweep::optimize::{self as optimize_mod, Objective, OptimizeSpec, Strategy};
 use repro::sweep::{self, SweepSpec};
+use repro::util::cli::{self, check_flags, flag_val, parse_opt, parse_or};
 use repro::util::fault;
 use repro::util::json::Json;
 use repro::{alloc, coordinator, nets, report, runtime, sim};
@@ -64,6 +76,11 @@ fn usage() -> ExitCode {
          \x20          [--granularities fgpm,factorized] [--frames N] [--jobs N] [--clocks MHZ,MHZ,..]\n\
          \x20          [--pareto] [--pareto-clocks] [--cache | --cache-dir DIR] [--cache-gc N]\n\
          \x20          [--json] [--save-dir DIR] [--strict]\n\
+         \x20 optimize --objective <fps|sram|dram> [--strategy bnb|anneal]\n\
+         \x20          [--nets a,b,..] [--net-file FILE,..] [--platforms zc706,zcu102,edge]\n\
+         \x20          [--platform NAME] [--sram-mb F] [--dsp N] [--clock MHZ]\n\
+         \x20          [--granularities fgpm,factorized] [--frames N] [--jobs N] [--clocks MHZ,..]\n\
+         \x20          [--cache | --cache-dir DIR] [--json] [--strict]\n\
          \x20 net    <FILE.json> [--json]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
@@ -74,33 +91,6 @@ fn usage() -> ExitCode {
 fn fail(msg: &str) -> ExitCode {
     eprintln!("repro: {msg}");
     ExitCode::from(2)
-}
-
-/// Value of `--name VAL`. Unlike the old lookup this rejects a missing or
-/// flag-shaped value (`--frames --baseline`) instead of handing the next
-/// flag back as the value or silently falling through to a default.
-fn flag_val(args: &[String], name: &str) -> Result<Option<String>, String> {
-    match args.iter().position(|a| a == name) {
-        None => Ok(None),
-        Some(i) => match args.get(i + 1) {
-            Some(v) if !v.starts_with("--") => Ok(Some(v.clone())),
-            Some(v) => Err(format!("{name}: expected a value, found flag {v:?}")),
-            None => Err(format!("{name}: expected a value")),
-        },
-    }
-}
-
-/// Parse `--name VAL` as `T`, reporting a per-flag error on bad input
-/// instead of silently using the default.
-fn parse_opt<T: std::str::FromStr>(args: &[String], name: &str) -> Result<Option<T>, String> {
-    match flag_val(args, name)? {
-        None => Ok(None),
-        Some(v) => v.parse().map(Some).map_err(|_| format!("{name}: cannot parse value {v:?}")),
-    }
-}
-
-fn parse_or<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Result<T, String> {
-    Ok(parse_opt(args, name)?.unwrap_or(default))
 }
 
 /// Resolve the platform: `--platform` names a known budget (default
@@ -131,11 +121,13 @@ fn platform_from_args(args: &[String]) -> Result<Platform, String> {
     Ok(p)
 }
 
-/// Flags that consume the following argument as their value.
-const VALUE_FLAGS: [&str; 16] = [
+/// Flags that consume the following argument as their value (in the
+/// space form; `--name=VAL` carries the value inline).
+const VALUE_FLAGS: [&str; 19] = [
     "--platform",
     "--sram-mb",
     "--dsp",
+    "--clock",
     "--frames",
     "--workers",
     "--save",
@@ -149,43 +141,14 @@ const VALUE_FLAGS: [&str; 16] = [
     "--clocks",
     "--cache-dir",
     "--cache-gc",
+    "--objective",
+    "--strategy",
 ];
 
-/// First positional argument after the subcommand, skipping flags and the
-/// values consumed by value-taking flags (so `--load f.json mbv2` still
-/// sees `mbv2`).
+/// First positional argument after the subcommand (see
+/// [`cli::positional`]).
 fn positional(args: &[String]) -> Option<&String> {
-    let mut i = 1; // args[0] is the subcommand
-    while i < args.len() {
-        let a = &args[i];
-        if !a.starts_with("--") {
-            return Some(a);
-        }
-        i += if VALUE_FLAGS.contains(&a.as_str()) { 2 } else { 1 };
-    }
-    None
-}
-
-/// Reject flags the subcommand does not know — a typo'd flag would
-/// otherwise be silently ignored and the run would use defaults.
-fn check_flags(args: &[String], value_flags: &[&str], bool_flags: &[&str]) -> Result<(), String> {
-    let mut i = 1;
-    while i < args.len() {
-        let a = &args[i];
-        if a.starts_with("--") {
-            if value_flags.contains(&a.as_str()) {
-                i += 2;
-                continue;
-            }
-            if bool_flags.contains(&a.as_str()) {
-                i += 1;
-                continue;
-            }
-            return Err(format!("unknown flag {a:?}"));
-        }
-        i += 1;
-    }
-    Ok(())
+    cli::positional(args, &VALUE_FLAGS)
 }
 
 /// Build (or `--load`) the design point shared by `allocate`/`simulate`.
@@ -194,10 +157,11 @@ fn design_from_args(args: &[String], opts: sim::SimOptions) -> Result<Design, St
         // A loaded design carries its own platform/granularity/network;
         // silently ignoring build flags next to --load would contradict
         // the fail-loudly flag parsing, so reject the combination.
-        let conflicting: Vec<&str> = ["--platform", "--sram-mb", "--dsp", "--factorized", "--net-file"]
-            .into_iter()
-            .filter(|f| args.iter().any(|a| a == f))
-            .collect();
+        let conflicting: Vec<&str> =
+            ["--platform", "--sram-mb", "--dsp", "--factorized", "--net-file"]
+                .into_iter()
+                .filter(|f| cli::flag_present(args, f))
+                .collect();
         if !conflicting.is_empty() {
             return Err(format!(
                 "--load: conflicts with {} (the loaded design already fixes them)",
@@ -599,6 +563,161 @@ fn main() -> ExitCode {
             // so scripts can distinguish "degraded" from "clean" and from
             // usage errors (2).
             let code = sweep::exit_code(&sweep_report);
+            if code != 0 {
+                return ExitCode::from(code);
+            }
+        }
+        "optimize" => {
+            if let Err(e) = check_flags(
+                &args,
+                &[
+                    "--objective",
+                    "--strategy",
+                    "--nets",
+                    "--net-file",
+                    "--platforms",
+                    "--granularities",
+                    "--platform",
+                    "--sram-mb",
+                    "--dsp",
+                    "--clock",
+                    "--frames",
+                    "--jobs",
+                    "--clocks",
+                    "--cache-dir",
+                ],
+                &["--json", "--cache", "--strict"],
+            ) {
+                return fail(&e);
+            }
+            if let Some(p) = positional(&args) {
+                return fail(&format!("optimize takes no positional argument, found {p:?}"));
+            }
+            // Same loud REPRO_FAULTS validation as the sweep arm: a typo'd
+            // injection spec must never run fault-free silently.
+            if let Some(fault_spec) = fault::env_spec() {
+                if let Err(e) = fault::FaultPlan::parse(&fault_spec) {
+                    return fail(&format!("REPRO_FAULTS: {e}"));
+                }
+                eprintln!("optimize: fault injection armed: REPRO_FAULTS={fault_spec}");
+            }
+            let strict = args.iter().any(|a| a == "--strict");
+            let parsed = (|| -> Result<OptimizeSpec, String> {
+                let objective = match flag_val(&args, "--objective")? {
+                    Some(o) => Objective::parse(&o)?,
+                    None => {
+                        return Err(
+                            "--objective: required (fps, sram, or dram — the scalar to optimize)"
+                                .to_string(),
+                        )
+                    }
+                };
+                let strategy = match flag_val(&args, "--strategy")? {
+                    Some(s) => Strategy::parse(&s)?,
+                    None => Strategy::BranchBound,
+                };
+                // A custom budget query (--platform/--sram-mb/--dsp/--clock)
+                // defines the single platform to search under; combining it
+                // with a --platforms axis would be ambiguous.
+                let budget_flags: Vec<&str> = ["--platform", "--sram-mb", "--dsp", "--clock"]
+                    .into_iter()
+                    .filter(|f| cli::flag_present(&args, f))
+                    .collect();
+                if !budget_flags.is_empty() && cli::flag_present(&args, "--platforms") {
+                    return Err(format!(
+                        "--platforms: conflicts with the budget flags {} (name platforms or \
+                         describe one budget, not both)",
+                        budget_flags.join(", ")
+                    ));
+                }
+                let mut spec = SweepSpec::from_cli(
+                    flag_val(&args, "--nets")?.as_deref(),
+                    flag_val(&args, "--net-file")?.as_deref(),
+                    flag_val(&args, "--platforms")?.as_deref(),
+                    flag_val(&args, "--granularities")?.as_deref(),
+                )?;
+                if !budget_flags.is_empty() {
+                    let mut p = platform_from_args(&args)?;
+                    if let Some(mhz) = parse_opt::<f64>(&args, "--clock")? {
+                        if !mhz.is_finite() || mhz <= 0.0 {
+                            return Err(format!("--clock: must be a positive MHz value, got {mhz}"));
+                        }
+                        p = p.with_clock_hz(mhz * 1.0e6);
+                        if !p.name.ends_with("-custom") {
+                            p.name = format!("{}-custom", p.name);
+                        }
+                    }
+                    spec.platforms = vec![p];
+                }
+                spec.frames = parse_opt(&args, "--frames")?;
+                if spec.frames == Some(0) {
+                    return Err("--frames: must be >= 1".to_string());
+                }
+                spec.jobs = parse_or(&args, "--jobs", 1usize)?;
+                if spec.jobs == 0 {
+                    return Err("--jobs: must be >= 1".to_string());
+                }
+                if let Some(csv) = flag_val(&args, "--clocks")? {
+                    spec.clocks_hz = SweepSpec::parse_clocks_csv(&csv)?;
+                }
+                spec.cache_dir = SweepSpec::resolve_cache_flags(
+                    args.iter().any(|a| a == "--cache"),
+                    flag_val(&args, "--cache-dir")?.as_deref(),
+                )?;
+                Ok(OptimizeSpec::new(spec, objective, strategy))
+            })();
+            let opt_spec = match parsed {
+                Ok(s) => s,
+                Err(e) => return fail(&e),
+            };
+            // Same pre-run writability probe as the sweep arm: the cache
+            // layer is best-effort, so a bad directory would otherwise
+            // silently run cold forever.
+            let probe_dir = |flag: &str, dir: &std::path::Path| -> Result<(), String> {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{flag} {}: {e}", dir.display()))?;
+                let probe = dir.join(".sweep-write-probe");
+                std::fs::write(&probe, b"")
+                    .map_err(|e| format!("{flag} {}: not writable: {e}", dir.display()))?;
+                let _ = std::fs::remove_file(&probe);
+                Ok(())
+            };
+            if let Some(dir) = &opt_spec.sweep.cache_dir {
+                if let Err(e) = probe_dir("--cache/--cache-dir", dir) {
+                    return fail(&e);
+                }
+            }
+            let opt_report = opt_spec.run();
+            if strict {
+                if let Some(f) = opt_report.failures.first() {
+                    return fail(&format!(
+                        "optimize --strict: cell {} failed ({}): {}",
+                        f.label(),
+                        f.error.kind(),
+                        f.error
+                    ));
+                }
+            }
+            if !opt_report.failures.is_empty() {
+                eprintln!(
+                    "optimize: {} of {} cells failed:",
+                    opt_report.failures.len(),
+                    opt_spec.sweep.cell_count()
+                );
+                for f in &opt_report.failures {
+                    eprintln!("  {} [{}]: {}", f.label(), f.error.kind(), f.error);
+                }
+            }
+            if let (Some(stats), Some(dir)) = (&opt_report.cache, &opt_spec.sweep.cache_dir) {
+                // Stderr, like the sweep: warm and cold JSON documents
+                // must stay byte-identical (CI greps this line instead).
+                eprintln!("{}", stats.summary(dir));
+            }
+            if args.iter().any(|a| a == "--json") {
+                println!("{}", opt_report.to_json());
+            } else {
+                println!("{}", report::optimize_table(&opt_report));
+            }
+            let code = optimize_mod::exit_code(&opt_report);
             if code != 0 {
                 return ExitCode::from(code);
             }

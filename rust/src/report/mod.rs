@@ -784,6 +784,102 @@ pub fn sweep_matrix(report: &crate::sweep::SweepReport) -> String {
     s
 }
 
+/// Aligned text rendering of a constrained-search
+/// [`crate::sweep::optimize::OptimizeReport`] — one row per network with
+/// the winning cell's headline figures next to the search statistics
+/// (evaluated/candidates, pruned count, the parallel-space cardinality
+/// the pruning skipped, and mean bound tightness). Networks whose every
+/// candidate failed render as `ALL-FAILED` rows; individual failures are
+/// footnoted like the sweep matrix. The text twin of
+/// `repro optimize --json`.
+pub fn optimize_table(report: &crate::sweep::optimize::OptimizeReport) -> String {
+    let mut s = String::new();
+    header(
+        &mut s,
+        &format!(
+            "Constrained search: best {} per network ({})",
+            report.objective.name(),
+            match report.strategy {
+                crate::sweep::optimize::Strategy::BranchBound => "branch-and-bound, Eq 1-14 bounds",
+                crate::sweep::optimize::Strategy::Anneal => "simulated annealing + sweep-up",
+            }
+        ),
+    );
+    let _ = writeln!(
+        s,
+        "{:16} {:14} {:10} {:>12} {:>9} {:>8} {:>5} {:>8} {:>6} {:>12} {:>9}",
+        "network",
+        "winner",
+        "gran",
+        report.objective.name(),
+        "FPS",
+        "SRAM MB",
+        "fits",
+        "DRAM MB",
+        "eval",
+        "pruned(space)",
+        "tightness"
+    );
+    for search in &report.searches {
+        let Some(cell) = &search.winner else {
+            let _ = writeln!(
+                s,
+                "{:16} ALL-FAILED ({} candidate(s) — see the stderr summary or the JSON \
+                 `failures` section)",
+                search.network, search.stats.candidates
+            );
+            continue;
+        };
+        let d = cell.design();
+        let objective_value = match report.objective {
+            crate::sweep::optimize::Objective::Fps => format!("{:.1}", d.predicted().fps),
+            crate::sweep::optimize::Objective::Sram => {
+                format!("{:.2} MB", d.sram_bytes() as f64 / MB)
+            }
+            crate::sweep::optimize::Objective::Dram => {
+                format!("{:.2} MB", d.dram_bytes() as f64 / MB)
+            }
+        };
+        let _ = writeln!(
+            s,
+            "{:16} {:14} {:10} {:>12} {:>9.1} {:>8.2} {:>5} {:>8.2} {:>6} {:>12} {:>9}",
+            search.network,
+            d.platform().name,
+            crate::design::granularity_name(d.granularity()),
+            objective_value,
+            d.predicted().fps,
+            d.sram_bytes() as f64 / MB,
+            if cell.fits_sram() { "yes" } else { "NO" },
+            d.dram_bytes() as f64 / MB,
+            format!("{}/{}", search.stats.evaluated, search.stats.candidates),
+            format!("{}({})", search.stats.pruned, search.stats.pruned_space),
+            match search.stats.bound_tightness {
+                Some(t) => format!("{t:.3}"),
+                None => "-".to_string(),
+            }
+        );
+    }
+    let _ = writeln!(
+        s,
+        "(winner = the exhaustive sweep's byte-identical best cell; pruned(space) counts \
+         candidates cut"
+    );
+    let _ = writeln!(
+        s,
+        " by the analytic bound and the FGPM/factorized parallel-space points they covered; \
+         tightness"
+    );
+    let _ = writeln!(s, " = mean bound/exact agreement over evaluated candidates, 1.0 = exact)");
+    if !report.failures.is_empty() {
+        let _ = writeln!(
+            s,
+            "({} candidate(s) FAILED — see the stderr summary or the JSON `failures` section)",
+            report.failures.len()
+        );
+    }
+    s
+}
+
 /// Aligned text rendering of a sweep's Pareto analysis
 /// ([`crate::sweep::pareto`]): per network, the non-dominated cells over
 /// {on-chip SRAM, predicted FPS, off-chip DRAM bytes/frame} followed by

@@ -102,6 +102,7 @@
 //! ```
 
 pub mod cache;
+pub mod optimize;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

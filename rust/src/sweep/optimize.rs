@@ -1,0 +1,756 @@
+//! Constrained design-space optimizer — branch-and-bound over the sweep
+//! matrix with Eq 1–14 analytic pruning.
+//!
+//! The exhaustive [`SweepSpec::run`] evaluates every
+//! {network} × {platform} × {granularity} cell through the full Alg 1 →
+//! Alg 2 → Eq 14 pipeline. `repro optimize` answers the question the
+//! ROADMAP actually asks — *the best design under this SRAM/DSP/clock
+//! budget* — without paying for the cells a cheap bound already rules
+//! out. Per network, candidates are visited in the sweep's deterministic
+//! matrix order and a candidate subtree is pruned when its analytic bound
+//! cannot beat the incumbent:
+//!
+//! * **FPS upper bound** (maximize): Eq 14 says the frame period is the
+//!   bottleneck CE's `T(i) = ceil(M/P_w) · ceil(F²/P_f) · depth` (Eq 11
+//!   rounds). For every MAC layer `M·F²·depth` equals its Eq 1–3 MAC
+//!   count, so `T(i) ≥ max(depth, ceil(MACs / cap))` where `cap` is the
+//!   largest PE product any allocation can give one layer: the layer's
+//!   own `P_w·P_f` ceiling capped by the DSP budget (one PE per DSP for
+//!   DWC, two 8-bit MACs per DSP otherwise, §VI-A). Both FGPM and
+//!   factorized spaces satisfy `P_w ≤ M, P_f ≤ F²`, so the bound holds
+//!   for every granularity; `clock / T_lb` is therefore an admissible
+//!   FPS ceiling.
+//! * **SRAM lower bound** (minimize): Algorithm 1 is replayed exactly over
+//!   the network's [`boundary_sweep`] curve (Eq 4–10 SRAM totals, Eq 13
+//!   DRAM) for the candidate platform's budget — the true pre-recost SRAM
+//!   at the boundary Alg 1 will pick. The WRCE weight-buffer recost only
+//!   ever *adds* bytes, so this is a valid lower bound on the final
+//!   [`crate::design::Design::sram_bytes`].
+//! * **DRAM bound** (minimize): the same Alg 1 replay yields the *exact*
+//!   Eq 13 DRAM traffic (the recost does not touch DRAM), so the DRAM
+//!   objective prunes with an exact oracle.
+//!
+//! Pruning never changes the answer: a candidate is cut only when its
+//! bound cannot *strictly* beat the incumbent, and the incumbent is
+//! replaced only on strict improvement, so the winner is byte-identical
+//! to the exhaustive sweep's matrix-first optimum
+//! (`rust/tests/optimize.rs` pins this per objective, plus pruning
+//! soundness: no pruned candidate evaluates better than the winner).
+//!
+//! [`Strategy::Anneal`] is the fallback for objectives the bound cannot
+//! order: a seeded, deterministic simulated-annealing walk proposes
+//! candidates (temperature-gated acceptance of worse moves) and any
+//! candidate the walk never reached is swept afterwards, so the result
+//! stays exact on the committed axes while the walk provides the
+//! evaluation *order* richer axes will want. It uses no bounds and never
+//! prunes.
+//!
+//! Search statistics come back per network ([`SearchStats`]): candidates,
+//! evaluated, pruned, the total FGPM/factorized parallel-space size the
+//! pruned candidates covered (via the O(1)
+//! [`crate::alloc::fgpm::fgpm_space_size`] closed form — this is its hot
+//! loop), and mean bound tightness (bound/exact ratio in `[0, 1]`, `1.0`
+//! = the bound was exact for every evaluated candidate).
+//!
+//! Execution reuses the sweep engine wholesale: per-(network, platform)
+//! bound probes and per-network searches fan over
+//! [`crate::util::pool::parallel_map_fallible`] with the sweep's
+//! fault-isolation semantics (a panicking or erroring cell becomes a
+//! [`CellFailure`], the search continues), and every evaluation goes
+//! through the same private cell-key/eval path as [`SweepSpec::run`] —
+//! including the content-keyed [`super::cache`] layer, so an optimizer
+//! run hits a warm sweep cache and vice versa.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::alloc::fgpm::{factor_space, fgpm_space_size};
+use crate::alloc::memory_alloc::boundary_sweep;
+use crate::alloc::memory_alloc::BoundaryPoint;
+use crate::alloc::Granularity;
+use crate::design::Platform;
+use crate::model::memory::MemoryModelCfg;
+use crate::nets::{LayerKind, Network};
+use crate::util::error::ReproError;
+use crate::util::fault;
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::prop::Rng;
+
+use super::{cache, CacheStats, CellCache, CellFailure, SweepCell, SweepSpec};
+
+/// The scalar objective a search optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Maximize Eq 14 predicted FPS at the candidate platform's clock.
+    Fps,
+    /// Minimize recosted on-chip SRAM bytes.
+    Sram,
+    /// Minimize Eq 13 DRAM bytes per frame.
+    Dram,
+}
+
+impl Objective {
+    /// Parse the CLI's `--objective` value.
+    pub fn parse(s: &str) -> Result<Objective, ReproError> {
+        match s.to_ascii_lowercase().as_str() {
+            "fps" => Ok(Objective::Fps),
+            "sram" => Ok(Objective::Sram),
+            "dram" => Ok(Objective::Dram),
+            _ => Err(ReproError::config(format!(
+                "--objective: unknown objective {s:?} (known objectives: fps, sram, dram)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Fps => "fps",
+            Objective::Sram => "sram",
+            Objective::Dram => "dram",
+        }
+    }
+
+    /// Whether value `a` is strictly better than `b` under this objective.
+    fn better(self, a: f64, b: f64) -> bool {
+        match self {
+            Objective::Fps => a > b,
+            Objective::Sram | Objective::Dram => a < b,
+        }
+    }
+
+    /// The exact objective value of an evaluated cell.
+    pub fn exact(self, cell: &SweepCell) -> f64 {
+        match self {
+            Objective::Fps => cell.design().predicted().fps,
+            Objective::Sram => cell.design().sram_bytes() as f64,
+            Objective::Dram => cell.design().dram_bytes() as f64,
+        }
+    }
+
+    /// The admissible bound of a candidate (optimistic: never worse than
+    /// any reachable exact value).
+    fn bound_value(self, probe: &BoundProbe) -> f64 {
+        match self {
+            Objective::Fps => probe.fps_ub,
+            Objective::Sram => probe.sram_lb as f64,
+            Objective::Dram => probe.dram_exact as f64,
+        }
+    }
+}
+
+/// How the per-network search walks its candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Matrix-order branch-and-bound with Eq 1–14 pruning (the default).
+    BranchBound,
+    /// Seeded simulated-annealing walk + exhaustive sweep-up of unvisited
+    /// candidates: exact, bound-free, never prunes.
+    Anneal,
+}
+
+impl Strategy {
+    /// Parse the CLI's `--strategy` value.
+    pub fn parse(s: &str) -> Result<Strategy, ReproError> {
+        match s.to_ascii_lowercase().as_str() {
+            "bnb" | "branch-bound" => Ok(Strategy::BranchBound),
+            "anneal" => Ok(Strategy::Anneal),
+            _ => Err(ReproError::config(format!(
+                "--strategy: unknown strategy {s:?} (known strategies: bnb, anneal)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::BranchBound => "bnb",
+            Strategy::Anneal => "anneal",
+        }
+    }
+}
+
+/// One candidate's analytic bounds — per (network, platform), shared by
+/// that pair's granularity candidates (Alg 1 and the Eq 14 period bound
+/// are granularity-independent).
+#[derive(Debug, Clone, Copy)]
+struct BoundProbe {
+    /// Exact pre-recost Alg 1 SRAM bytes (lower bound on the final cell).
+    sram_lb: u64,
+    /// Exact Eq 13 DRAM bytes/frame at Alg 1's boundary.
+    dram_exact: u64,
+    /// Admissible Eq 14 FPS ceiling at the platform's clock.
+    fps_ub: f64,
+}
+
+/// A constrained search over a sweep matrix: which scalar to optimize and
+/// how to walk the candidates. The embedded [`SweepSpec`] supplies the
+/// axes, simulation depth, worker count, clock-curve axis, and cache
+/// directory — an optimizer run is *defined* as picking from exactly the
+/// cells the exhaustive sweep would materialize.
+#[derive(Debug, Clone)]
+pub struct OptimizeSpec {
+    pub sweep: SweepSpec,
+    pub objective: Objective,
+    pub strategy: Strategy,
+    /// Annealing-walk proposal count ([`Strategy::Anneal`] only).
+    pub anneal_iters: usize,
+}
+
+impl OptimizeSpec {
+    pub fn new(sweep: SweepSpec, objective: Objective, strategy: Strategy) -> OptimizeSpec {
+        OptimizeSpec { sweep, objective, strategy, anneal_iters: 64 }
+    }
+
+    /// Run the search: per-(network, platform) bound probes, then one
+    /// independent search per network, both fanned over
+    /// [`pool::parallel_map_fallible`] with the sweep's fault isolation.
+    /// Deterministic for any [`SweepSpec::jobs`] value.
+    pub fn run(&self) -> OptimizeReport {
+        let spec = &self.sweep;
+        let frames_req = spec.frames.filter(|&f| f > 0);
+        let per_net = spec.platforms.len() * spec.granularities.len();
+
+        // Phase 1: analytic bounds per (network, platform). A probe that
+        // fails (degenerate budget, or a panic caught by the pool) marks
+        // every candidate it covers as failed — the same typed error an
+        // exhaustive evaluation of those cells would report.
+        let probe_items: Vec<(usize, usize)> = (0..spec.nets.len())
+            .flat_map(|ni| (0..spec.platforms.len()).map(move |pi| (ni, pi)))
+            .collect();
+        let probes = pool::parallel_map_fallible(spec.jobs, &probe_items, |_, &(ni, pi)| {
+            let (net, platform) = (&spec.nets[ni], &spec.platforms[pi]);
+            if platform.sram_bytes == 0 || platform.dsp_budget == 0 {
+                return Err(ReproError::allocation(format!(
+                    "platform {:?}: degenerate budget (sram_bytes={}, dsp_budget={}) — \
+                     Algorithm 1/2 need nonzero SRAM and DSP budgets",
+                    platform.name, platform.sram_bytes, platform.dsp_budget
+                )));
+            }
+            let points = boundary_sweep(net, &MemoryModelCfg::default());
+            let (sram_lb, dram_exact) = replay_alg1(&points, platform.sram_bytes);
+            Ok(BoundProbe { sram_lb, dram_exact, fps_ub: fps_upper_bound(net, platform) })
+        });
+
+        // Phase 2: one search per network over the shared cache/counters.
+        let cache = spec.cache_dir.as_deref().map(CellCache::open);
+        let hits = AtomicU64::new(0);
+        let misses = AtomicU64::new(0);
+        let store_errors = AtomicU64::new(0);
+        let faults_armed = fault::armed();
+        let net_indices: Vec<usize> = (0..spec.nets.len()).collect();
+        let outcomes = pool::parallel_map_fallible(spec.jobs, &net_indices, |_, &ni| {
+            let net_probes = &probes[ni * spec.platforms.len()..(ni + 1) * spec.platforms.len()];
+            Ok(self.search_network(
+                ni,
+                per_net,
+                net_probes,
+                &cache,
+                frames_req,
+                faults_armed,
+                (&hits, &misses, &store_errors),
+            ))
+        });
+
+        let mut searches = Vec::with_capacity(spec.nets.len());
+        let mut failures = Vec::new();
+        for (ni, outcome) in outcomes.into_iter().enumerate() {
+            match outcome {
+                Ok((search, mut fs)) => {
+                    searches.push(search);
+                    failures.append(&mut fs);
+                }
+                // The search scaffolding itself died (a panic outside any
+                // single evaluation): every candidate of the network is
+                // reported failed, mirroring the probe-failure path.
+                Err(error) => {
+                    let net = &spec.nets[ni];
+                    for (ci, (pi, gi)) in candidate_axes(spec).into_iter().enumerate() {
+                        failures.push(CellFailure {
+                            index: ni * per_net + ci,
+                            network: net.name.clone(),
+                            platform: spec.platforms[pi].name.clone(),
+                            granularity: spec.granularities[gi],
+                            error: error.clone(),
+                        });
+                    }
+                    searches.push(NetworkSearch {
+                        network: net.name.clone(),
+                        winner: None,
+                        winner_index: None,
+                        pruned_indices: Vec::new(),
+                        stats: SearchStats { candidates: per_net, ..SearchStats::default() },
+                    });
+                }
+            }
+        }
+        let cache_stats = cache.map(|_| CacheStats {
+            hits: hits.into_inner(),
+            misses: misses.into_inner(),
+            store_errors: store_errors.into_inner(),
+        });
+        OptimizeReport {
+            objective: self.objective,
+            strategy: self.strategy,
+            searches,
+            failures,
+            cache: cache_stats,
+        }
+    }
+
+    /// The branch-and-bound (or annealing) walk of one network's
+    /// candidates. Every evaluation is individually fault-isolated: a
+    /// typed error or caught panic becomes a [`CellFailure`] and the walk
+    /// continues with the incumbent unchanged.
+    #[allow(clippy::too_many_arguments)]
+    fn search_network(
+        &self,
+        ni: usize,
+        per_net: usize,
+        net_probes: &[Result<BoundProbe, ReproError>],
+        cell_cache: &Option<CellCache>,
+        frames_req: Option<u64>,
+        faults_armed: bool,
+        counters: (&AtomicU64, &AtomicU64, &AtomicU64),
+    ) -> (NetworkSearch, Vec<CellFailure>) {
+        let spec = &self.sweep;
+        let net = &spec.nets[ni];
+        let candidates = candidate_axes(spec);
+        let mut failures = Vec::new();
+        let mut pruned_indices = Vec::new();
+        let mut stats = SearchStats { candidates: per_net, ..SearchStats::default() };
+        // Incumbent: (exact objective value, candidate index, cell).
+        let mut winner: Option<(f64, usize, SweepCell)> = None;
+        let mut tightness_sum = 0.0;
+
+        // Evaluate candidate `ci`, fold it into the incumbent (strict
+        // improvement, or an exact tie at a lower matrix index — the
+        // exhaustive sweep's matrix-first rule), and return its exact
+        // objective value (`None` when the evaluation failed).
+        let evaluate = |ci: usize,
+                        winner: &mut Option<(f64, usize, SweepCell)>,
+                        stats: &mut SearchStats,
+                        tightness_sum: &mut f64,
+                        failures: &mut Vec<CellFailure>|
+         -> Option<f64> {
+            let (pi, gi) = candidates[ci];
+            let (platform, granularity) = (&spec.platforms[pi], spec.granularities[gi]);
+            match self.eval_one(
+                net,
+                platform,
+                granularity,
+                frames_req,
+                cell_cache,
+                faults_armed,
+                counters,
+            ) {
+                Ok(cell) => {
+                    stats.evaluated += 1;
+                    let value = self.objective.exact(&cell);
+                    if let Ok(probe) = &net_probes[pi] {
+                        *tightness_sum += ratio(self.objective.bound_value(probe), value);
+                    }
+                    let improves = match winner {
+                        None => true,
+                        Some((wv, wi, _)) => {
+                            self.objective.better(value, *wv) || (value == *wv && ci < *wi)
+                        }
+                    };
+                    if improves {
+                        *winner = Some((value, ci, cell));
+                    }
+                    Some(value)
+                }
+                Err(error) => {
+                    failures.push(CellFailure {
+                        index: ni * per_net + ci,
+                        network: net.name.clone(),
+                        platform: platform.name.clone(),
+                        granularity,
+                        error,
+                    });
+                    None
+                }
+            }
+        };
+
+        match self.strategy {
+            Strategy::BranchBound => {
+                for (ci, &(pi, gi)) in candidates.iter().enumerate() {
+                    let probe = match &net_probes[pi] {
+                        Ok(p) => p,
+                        Err(error) => {
+                            failures.push(CellFailure {
+                                index: ni * per_net + ci,
+                                network: net.name.clone(),
+                                platform: spec.platforms[pi].name.clone(),
+                                granularity: spec.granularities[gi],
+                                error: error.clone(),
+                            });
+                            continue;
+                        }
+                    };
+                    // Prune when the optimistic bound cannot strictly beat
+                    // the incumbent. A bound that merely *ties* is cut too:
+                    // the incumbent was evaluated earlier in matrix order,
+                    // so a tying candidate could never replace it — the
+                    // matrix-first optimum is preserved exactly
+                    // (pruning-soundness test in rust/tests/optimize.rs).
+                    if let Some((wv, _, _)) = &winner {
+                        if !self.objective.better(self.objective.bound_value(probe), *wv) {
+                            pruned_indices.push(ni * per_net + ci);
+                            stats.pruned += 1;
+                            stats.pruned_space +=
+                                parallel_space_size(net, spec.granularities[gi]);
+                            continue;
+                        }
+                    }
+                    evaluate(ci, &mut winner, &mut stats, &mut tightness_sum, &mut failures);
+                }
+            }
+            Strategy::Anneal => {
+                let n = candidates.len();
+                let mut visited = vec![false; n];
+                // Seeded per network (content-hashed name), so the walk is
+                // reproducible and independent of worker scheduling.
+                let mut rng = Rng::new(cache::fnv1a64(net.name.as_bytes(), 0x5EED) | 1);
+                // Metropolis chain state: the value the walk currently
+                // sits on (distinct from the matrix-first incumbent, which
+                // only ever improves).
+                let mut current: Option<f64> = None;
+                let mut temp = 1.0_f64;
+                for it in 0..self.anneal_iters.max(1).min(n.saturating_mul(16).max(1)) {
+                    let ci = if it == 0 { 0 } else { rng.range(0, n.max(1) - 1) };
+                    temp *= 0.92;
+                    if n == 0 || visited[ci] {
+                        continue;
+                    }
+                    visited[ci] = true;
+                    let value =
+                        evaluate(ci, &mut winner, &mut stats, &mut tightness_sum, &mut failures);
+                    if let Some(v) = value {
+                        let accept = match current {
+                            None => true,
+                            Some(cur) => {
+                                // Relative worseness of the proposal; a
+                                // better move always moves the chain.
+                                let worse = match self.objective {
+                                    Objective::Fps => cur - v,
+                                    Objective::Sram | Objective::Dram => v - cur,
+                                };
+                                worse <= 0.0
+                                    || rng.f64()
+                                        < (-(worse / cur.abs().max(1e-9)) / temp.max(1e-9)).exp()
+                            }
+                        };
+                        if accept {
+                            current = Some(v);
+                        }
+                    }
+                }
+                // Exactness sweep-up: evaluate whatever the walk never
+                // reached, in matrix order, so the reported winner is the
+                // true matrix-first optimum regardless of the walk's path.
+                for (ci, seen) in visited.iter().enumerate() {
+                    if !seen {
+                        evaluate(ci, &mut winner, &mut stats, &mut tightness_sum, &mut failures);
+                    }
+                }
+            }
+        }
+
+        stats.bound_tightness =
+            (stats.evaluated > 0).then(|| tightness_sum / stats.evaluated as f64);
+        let (winner_index, winner) = match winner {
+            Some((_, ci, cell)) => (Some(ni * per_net + ci), Some(cell)),
+            None => (None, None),
+        };
+        (
+            NetworkSearch {
+                network: net.name.clone(),
+                winner,
+                winner_index,
+                pruned_indices,
+                stats,
+            },
+            failures,
+        )
+    }
+
+    /// Evaluate one candidate through the sweep engine's private
+    /// cache/eval path — byte-identical cells to [`SweepSpec::run`], same
+    /// hit/miss accounting, same fault-injection sites — with the
+    /// evaluation itself wrapped in `catch_unwind` so an injected (or
+    /// organic) panic degrades to a typed [`ReproError`] instead of
+    /// killing the whole per-network search.
+    fn eval_one(
+        &self,
+        net: &Network,
+        platform: &Platform,
+        granularity: Granularity,
+        frames_req: Option<u64>,
+        cell_cache: &Option<CellCache>,
+        faults_armed: bool,
+        (hits, misses, store_errors): (&AtomicU64, &AtomicU64, &AtomicU64),
+    ) -> Result<SweepCell, ReproError> {
+        let spec = &self.sweep;
+        let guarded = |key_text: &str| -> Result<SweepCell, ReproError> {
+            match catch_unwind(AssertUnwindSafe(|| {
+                spec.eval_cell(net, platform, granularity, frames_req, key_text)
+            })) {
+                Ok(result) => result,
+                Err(payload) => Err(ReproError::from_panic(payload)),
+            }
+        };
+        if let Some(cache) = cell_cache {
+            let key = spec.cell_key(net, platform, granularity, frames_req);
+            let key_text = key.to_string();
+            if let Some(cell) = cache.load(&key) {
+                // Same verbatim re-check as the sweep's hit path.
+                if format!("{:?}", cell.design().network()) == format!("{net:?}") {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(cell);
+                }
+            }
+            let cell = guarded(&key_text)?;
+            if cache.store(&key, &cell).is_err() {
+                store_errors.fetch_add(1, Ordering::Relaxed);
+            }
+            misses.fetch_add(1, Ordering::Relaxed);
+            Ok(cell)
+        } else {
+            let key_text = if faults_armed {
+                spec.cell_key(net, platform, granularity, frames_req).to_string()
+            } else {
+                String::new()
+            };
+            guarded(&key_text)
+        }
+    }
+}
+
+/// The candidate axes of one network, in the sweep's matrix order:
+/// `(platform index, granularity index)`, platforms outer.
+fn candidate_axes(spec: &SweepSpec) -> Vec<(usize, usize)> {
+    let mut v = Vec::with_capacity(spec.platforms.len() * spec.granularities.len());
+    for pi in 0..spec.platforms.len() {
+        for gi in 0..spec.granularities.len() {
+            v.push((pi, gi));
+        }
+    }
+    v
+}
+
+/// Exact replay of Algorithm 1 over a precomputed boundary curve
+/// (indexed by boundary, `0..=L`): arg-min SRAM first, then advance while
+/// the next boundary's SRAM stays strictly under the budget. Returns the
+/// chosen boundary's `(sram_bytes, dram_bytes)` — identical to
+/// [`crate::alloc::balanced_memory_allocation`] by construction, minus
+/// the WRCE recost (which is why SRAM is a lower bound and DRAM exact).
+fn replay_alg1(points: &[BoundaryPoint], sram_budget: u64) -> (u64, u64) {
+    let mut best = u64::MAX;
+    let mut b = 0usize;
+    for p in points {
+        if p.sram_bytes < best {
+            best = p.sram_bytes;
+            b = p.boundary;
+        }
+    }
+    let l_total = points.len() - 1;
+    for i in b..l_total {
+        if points[i + 1].sram_bytes < sram_budget {
+            b = i + 1;
+        } else {
+            break;
+        }
+    }
+    (points[b].sram_bytes, points[b].dram_bytes)
+}
+
+/// Admissible Eq 14 FPS ceiling: `clock / T_lb` with `T_lb` the largest
+/// per-MAC-layer period lower bound `max(depth, ceil(MACs / cap))` (see
+/// the module docs for the derivation). Infinite for a network with no
+/// MAC layers (nothing bounds the period).
+fn fps_upper_bound(net: &Network, platform: &Platform) -> f64 {
+    let mut t_lb = 0u64;
+    for l in net.layers.iter().filter(|l| l.kind.is_mac()) {
+        let dsp_pe_cap = match l.kind {
+            // One PE per DSP for DWC; two 8-bit MACs per DSP otherwise.
+            LayerKind::Dwc => platform.dsp_budget as u64,
+            _ => 2 * platform.dsp_budget as u64,
+        };
+        let pe_cap = dsp_pe_cap.min((l.max_pw() * l.max_pf()) as u64).max(1);
+        t_lb = t_lb.max(l.reduction_depth().max(l.macs().div_ceil(pe_cap)));
+    }
+    if t_lb == 0 {
+        f64::INFINITY
+    } else {
+        platform.clock_hz / t_lb as f64
+    }
+}
+
+/// The parallel-space cardinality one pruned candidate covered: per MAC
+/// layer, the product of its `P_w` and `P_f` axis sizes — FGPM's via the
+/// O(1) [`fgpm_space_size`] closed form, factorized via the divisor
+/// count — summed over layers (Alg 2 tunes layers independently).
+fn parallel_space_size(net: &Network, granularity: Granularity) -> u64 {
+    let size = |m: usize| -> u64 {
+        match granularity {
+            Granularity::Fgpm => fgpm_space_size(m) as u64,
+            Granularity::Factorized => factor_space(m).len() as u64,
+        }
+    };
+    net.layers
+        .iter()
+        .filter(|l| l.kind.is_mac())
+        .map(|l| size(l.max_pw()) * size(l.max_pf()))
+        .sum()
+}
+
+/// Orientation-free bound/exact agreement in `[0, 1]` (`1.0` = exact).
+fn ratio(bound: f64, exact: f64) -> f64 {
+    let (lo, hi) = if bound <= exact { (bound, exact) } else { (exact, bound) };
+    if hi == 0.0 {
+        1.0
+    } else if !lo.is_finite() || !hi.is_finite() {
+        0.0
+    } else {
+        lo / hi
+    }
+}
+
+/// Per-network search statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchStats {
+    /// Candidates the network's subtree holds (platforms × granularities).
+    pub candidates: usize,
+    /// Candidates evaluated through the full pipeline.
+    pub evaluated: usize,
+    /// Candidates cut by the analytic bound before any evaluation.
+    pub pruned: usize,
+    /// Total FGPM/factorized parallel-space points the pruned candidates
+    /// covered — the work Alg 2 never had to order.
+    pub pruned_space: u64,
+    /// Mean bound/exact agreement over evaluated candidates (`1.0` =
+    /// exact bound); `None` when nothing was evaluated.
+    pub bound_tightness: Option<f64>,
+}
+
+/// One network's search outcome.
+#[derive(Debug, Clone)]
+pub struct NetworkSearch {
+    pub network: String,
+    /// The winning cell — byte-identical to the exhaustive sweep's best
+    /// cell for this network — or `None` when every candidate failed.
+    pub winner: Option<SweepCell>,
+    /// The winner's index in the exhaustive sweep's matrix order (the
+    /// `cells` index a clean `repro sweep --json` would give it).
+    pub winner_index: Option<usize>,
+    /// Matrix indices of the candidates the bound pruned.
+    pub pruned_indices: Vec<usize>,
+    pub stats: SearchStats,
+}
+
+impl NetworkSearch {
+    /// Stable sorted-key JSON value — one element of the `searches` array
+    /// in `repro optimize --json` output.
+    pub fn to_json_value(&self) -> Json {
+        let mut s = BTreeMap::new();
+        s.insert(
+            "bound_tightness".to_string(),
+            match self.stats.bound_tightness {
+                Some(t) => Json::Num(t),
+                None => Json::Null,
+            },
+        );
+        s.insert("candidates".to_string(), Json::Num(self.stats.candidates as f64));
+        s.insert("evaluated".to_string(), Json::Num(self.stats.evaluated as f64));
+        s.insert("pruned".to_string(), Json::Num(self.stats.pruned as f64));
+        s.insert("pruned_space".to_string(), Json::Num(self.stats.pruned_space as f64));
+        let mut m = BTreeMap::new();
+        m.insert("network".to_string(), Json::Str(self.network.clone()));
+        m.insert(
+            "pruned_indices".to_string(),
+            Json::Arr(self.pruned_indices.iter().map(|&i| Json::Num(i as f64)).collect()),
+        );
+        m.insert("stats".to_string(), Json::Obj(s));
+        m.insert(
+            "winner".to_string(),
+            match &self.winner {
+                Some(cell) => cell.to_json_value(),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "winner_index".to_string(),
+            match self.winner_index {
+                Some(i) => Json::Num(i as f64),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+}
+
+/// The result of a constrained search: one [`NetworkSearch`] per network
+/// in spec order, plus the same fault-isolation bookkeeping as
+/// [`super::SweepReport`].
+#[derive(Debug, Clone)]
+pub struct OptimizeReport {
+    pub objective: Objective,
+    pub strategy: Strategy,
+    pub searches: Vec<NetworkSearch>,
+    /// Candidates that failed to evaluate (typed error or caught panic),
+    /// in matrix order within each network.
+    pub failures: Vec<CellFailure>,
+    /// Hit/miss stats against the shared sweep cell cache; `None` when
+    /// uncached. Excluded from [`OptimizeReport::to_json`] (stderr only)
+    /// so warm and cold documents stay byte-identical.
+    pub cache: Option<CacheStats>,
+}
+
+impl OptimizeReport {
+    /// The whole report as one stable sorted-key JSON line — the
+    /// `repro optimize --json` output. Byte-identical for any
+    /// [`SweepSpec::jobs`] value and any cache state; the `failures` key
+    /// appears only when at least one candidate failed (clean documents
+    /// stay diffable across trajectories).
+    pub fn to_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        if !self.failures.is_empty() {
+            m.insert(
+                "failures".to_string(),
+                Json::Arr(self.failures.iter().map(CellFailure::to_json_value).collect()),
+            );
+        }
+        m.insert("objective".to_string(), Json::Str(self.objective.name().to_string()));
+        m.insert(
+            "searches".to_string(),
+            Json::Arr(self.searches.iter().map(NetworkSearch::to_json_value).collect()),
+        );
+        m.insert("strategy".to_string(), Json::Str(self.strategy.name().to_string()));
+        m.insert("version".to_string(), Json::Num(1.0));
+        Json::Obj(m).to_string()
+    }
+
+    /// Total pruned candidates across every network.
+    pub fn total_pruned(&self) -> usize {
+        self.searches.iter().map(|s| s.stats.pruned).sum()
+    }
+
+    /// Total candidates across every network (the exhaustive cell count).
+    pub fn total_candidates(&self) -> usize {
+        self.searches.iter().map(|s| s.stats.candidates).sum()
+    }
+}
+
+/// Process exit code for an optimizer run: [`super::EXIT_PARTIAL_FAILURE`]
+/// when any candidate failed, `0` otherwise (usage errors exit 2 before a
+/// report exists).
+pub fn exit_code(report: &OptimizeReport) -> u8 {
+    if report.failures.is_empty() {
+        0
+    } else {
+        super::EXIT_PARTIAL_FAILURE
+    }
+}

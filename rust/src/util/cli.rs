@@ -1,0 +1,257 @@
+//! Hand-rolled CLI flag parsing shared by the `repro` binary and its
+//! integration tests (clap is not vendored offline).
+//!
+//! Two bugfixes over the binary's original private helpers, both of the
+//! fail-loudly school the rest of the CLI follows:
+//!
+//! * **Duplicate flags are rejected.** The old lookup silently used the
+//!   *first* occurrence (`--frames 3 ... --frames 9` ran with 3 and no
+//!   warning); now any flag given more than once — in either form — is a
+//!   configuration error.
+//! * **`--name=VAL` is accepted.** The old parser only matched the exact
+//!   token `--name`, so `--frames=3` fell through as an unknown flag (or,
+//!   on commands that skip [`check_flags`]-style validation, silently ran
+//!   with the default). Both `--name VAL` and `--name=VAL` now parse, and
+//!   [`check_flags`]/[`positional`] understand that the `=` form carries
+//!   its value inline (consuming one token, not two).
+//!
+//! The space form keeps its flag-shaped-value rejection (`--frames
+//! --baseline` is an error, not "--baseline is the value"); the `=` form
+//! is unambiguous, so its value is taken verbatim (but must be
+//! non-empty — `--frames=` is an error).
+
+/// Whether `arg` is an occurrence of flag `name`: the exact token
+/// (`--name`) or the inline-value form (`--name=...`). `--cache-dir` is
+/// *not* an occurrence of `--cache` — the next byte after the name must
+/// be `=` or the end of the token.
+fn is_occurrence(arg: &str, name: &str) -> bool {
+    match arg.strip_prefix(name) {
+        Some(rest) => rest.is_empty() || rest.starts_with('='),
+        None => false,
+    }
+}
+
+/// Whether `name` appears anywhere in `args`, in either form. The
+/// presence test conflict checks use (`--load` vs `--platform`, custom
+/// budgets vs `--platforms`): an `=`-form flag must count as present.
+pub fn flag_present(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| is_occurrence(a, name))
+}
+
+/// Value of `--name VAL` or `--name=VAL`.
+///
+/// Errors on a repeated flag (in any mix of forms), a missing value, an
+/// empty `=`-form value, and a flag-shaped space-form value.
+///
+/// # Examples
+///
+/// ```
+/// use repro::util::cli::flag_val;
+///
+/// let args: Vec<String> =
+///     ["sweep", "--frames", "3", "--jobs=4"].iter().map(|s| s.to_string()).collect();
+/// assert_eq!(flag_val(&args, "--frames").unwrap(), Some("3".to_string()));
+/// assert_eq!(flag_val(&args, "--jobs").unwrap(), Some("4".to_string()));
+/// assert_eq!(flag_val(&args, "--clocks").unwrap(), None);
+///
+/// let dup: Vec<String> =
+///     ["sweep", "--frames", "3", "--frames=9"].iter().map(|s| s.to_string()).collect();
+/// assert!(flag_val(&dup, "--frames").unwrap_err().contains("duplicate"));
+/// ```
+pub fn flag_val(args: &[String], name: &str) -> Result<Option<String>, String> {
+    let occurrences: Vec<usize> = args
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| is_occurrence(a, name))
+        .map(|(i, _)| i)
+        .collect();
+    if occurrences.len() > 1 {
+        return Err(format!(
+            "{name}: duplicate flag (given {} times; pass each flag at most once)",
+            occurrences.len()
+        ));
+    }
+    let Some(&i) = occurrences.first() else { return Ok(None) };
+    let arg = &args[i];
+    if let Some(v) = arg.strip_prefix(name).and_then(|rest| rest.strip_prefix('=')) {
+        if v.is_empty() {
+            return Err(format!("{name}: expected a value after '='"));
+        }
+        return Ok(Some(v.to_string()));
+    }
+    match args.get(i + 1) {
+        Some(v) if !v.starts_with("--") => Ok(Some(v.clone())),
+        Some(v) => Err(format!("{name}: expected a value, found flag {v:?}")),
+        None => Err(format!("{name}: expected a value")),
+    }
+}
+
+/// Parse `--name VAL` / `--name=VAL` as `T`, reporting a per-flag error
+/// on bad input instead of silently using the default.
+pub fn parse_opt<T: std::str::FromStr>(args: &[String], name: &str) -> Result<Option<T>, String> {
+    match flag_val(args, name)? {
+        None => Ok(None),
+        Some(v) => v.parse().map(Some).map_err(|_| format!("{name}: cannot parse value {v:?}")),
+    }
+}
+
+/// [`parse_opt`] with a default for the absent-flag case.
+pub fn parse_or<T: std::str::FromStr>(
+    args: &[String],
+    name: &str,
+    default: T,
+) -> Result<T, String> {
+    Ok(parse_opt(args, name)?.unwrap_or(default))
+}
+
+/// First positional argument after the subcommand (`args[0]`), skipping
+/// flags and the values consumed by space-form value-taking flags (so
+/// `--load f.json mbv2` still sees `mbv2`). An `=`-form flag carries its
+/// value inline and consumes one token.
+///
+/// # Examples
+///
+/// ```
+/// use repro::util::cli::positional;
+///
+/// let args: Vec<String> =
+///     ["allocate", "--platform=edge", "mbv2"].iter().map(|s| s.to_string()).collect();
+/// assert_eq!(positional(&args, &["--platform"]), Some(&"mbv2".to_string()));
+/// ```
+pub fn positional<'a>(args: &'a [String], value_flags: &[&str]) -> Option<&'a String> {
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if !a.starts_with("--") {
+            return Some(a);
+        }
+        i += if !a.contains('=') && value_flags.contains(&a.as_str()) { 2 } else { 1 };
+    }
+    None
+}
+
+/// Reject flags the subcommand does not know — a typo'd flag would
+/// otherwise be silently ignored and the run would use defaults. A known
+/// boolean flag given a value (`--json=1`) is rejected too.
+///
+/// # Examples
+///
+/// ```
+/// use repro::util::cli::check_flags;
+///
+/// let ok: Vec<String> =
+///     ["sweep", "--frames=3", "--json"].iter().map(|s| s.to_string()).collect();
+/// assert!(check_flags(&ok, &["--frames"], &["--json"]).is_ok());
+///
+/// let bad: Vec<String> = ["sweep", "--json=1"].iter().map(|s| s.to_string()).collect();
+/// assert!(check_flags(&bad, &["--frames"], &["--json"]).unwrap_err().contains("--json"));
+/// ```
+pub fn check_flags(
+    args: &[String],
+    value_flags: &[&str],
+    bool_flags: &[&str],
+) -> Result<(), String> {
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if a.starts_with("--") {
+            let (stem, eq_form) = match a.find('=') {
+                Some(pos) => (&a[..pos], true),
+                None => (a.as_str(), false),
+            };
+            if value_flags.contains(&stem) {
+                i += if eq_form { 1 } else { 2 };
+                continue;
+            }
+            if bool_flags.contains(&stem) {
+                if eq_form {
+                    return Err(format!("{stem}: takes no value (found {a:?})"));
+                }
+                i += 1;
+                continue;
+            }
+            return Err(format!("unknown flag {a:?}"));
+        }
+        i += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn space_and_equals_forms_agree() {
+        for form in [&["sweep", "--frames", "3"][..], &["sweep", "--frames=3"][..]] {
+            assert_eq!(flag_val(&args(form), "--frames").unwrap(), Some("3".to_string()));
+        }
+    }
+
+    #[test]
+    fn duplicates_are_rejected_in_every_form_mix() {
+        for form in [
+            &["s", "--frames", "3", "--frames", "9"][..],
+            &["s", "--frames=3", "--frames=9"][..],
+            &["s", "--frames", "3", "--frames=9"][..],
+        ] {
+            let err = flag_val(&args(form), "--frames").unwrap_err();
+            assert!(err.contains("--frames") && err.contains("duplicate"), "{err}");
+        }
+    }
+
+    #[test]
+    fn flag_shaped_and_missing_values_are_rejected() {
+        assert!(flag_val(&args(&["s", "--frames", "--baseline"]), "--frames")
+            .unwrap_err()
+            .contains("found flag"));
+        assert!(flag_val(&args(&["s", "--frames"]), "--frames")
+            .unwrap_err()
+            .contains("expected a value"));
+        assert!(flag_val(&args(&["s", "--frames="]), "--frames")
+            .unwrap_err()
+            .contains("after '='"));
+    }
+
+    #[test]
+    fn prefix_flags_are_not_confused() {
+        // --cache-dir / --cache-gc must not count as occurrences of
+        // --cache, in either direction.
+        let a = args(&["s", "--cache-dir", "d", "--cache-gc=3"]);
+        assert!(!flag_present(&a, "--cache"));
+        assert_eq!(flag_val(&a, "--cache-dir").unwrap(), Some("d".to_string()));
+        assert_eq!(flag_val(&a, "--cache-gc").unwrap(), Some("3".to_string()));
+    }
+
+    #[test]
+    fn positional_skips_both_value_forms() {
+        let vf = ["--platform", "--load"];
+        assert_eq!(
+            positional(&args(&["allocate", "--platform", "edge", "mbv2"]), &vf),
+            Some(&"mbv2".to_string())
+        );
+        assert_eq!(
+            positional(&args(&["allocate", "--platform=edge", "mbv2"]), &vf),
+            Some(&"mbv2".to_string())
+        );
+        assert_eq!(positional(&args(&["allocate", "--platform", "edge"]), &vf), None);
+    }
+
+    #[test]
+    fn check_flags_is_equals_aware() {
+        let vf = ["--frames"];
+        let bf = ["--json"];
+        assert!(check_flags(&args(&["s", "--frames=3", "--json"]), &vf, &bf).is_ok());
+        assert!(check_flags(&args(&["s", "--frames", "3"]), &vf, &bf).is_ok());
+        assert!(check_flags(&args(&["s", "--typo=3"]), &vf, &bf)
+            .unwrap_err()
+            .contains("unknown flag"));
+        assert!(check_flags(&args(&["s", "--json=1"]), &vf, &bf)
+            .unwrap_err()
+            .contains("takes no value"));
+    }
+}

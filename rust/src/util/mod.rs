@@ -2,9 +2,10 @@
 //! this offline build: a JSON parser ([`json`]), a scoped-thread work
 //! pool with deterministic output ordering ([`pool`]), the typed error
 //! taxonomy ([`error`]), the deterministic fault-injection harness
-//! ([`fault`]), a deterministic PRNG + property-test harness ([`prop`]),
-//! and a micro-bench timer ([`bench`]).
+//! ([`fault`]), the CLI flag parser ([`cli`]), a deterministic PRNG +
+//! property-test harness ([`prop`]), and a micro-bench timer ([`bench`]).
 
+pub mod cli;
 pub mod error;
 pub mod fault;
 pub mod json;

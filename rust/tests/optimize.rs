@@ -1,0 +1,243 @@
+//! Coverage of the constrained design-space optimizer
+//! (`repro::sweep::optimize`): the acceptance pin that the branch-and-bound
+//! winner byte-matches the exhaustive sweep's best cell on the committed
+//! 12-cell baseline grid, a pruning-soundness check over every index the
+//! bound cut, determinism of the annealing fallback, and an
+//! optimizer-vs-exhaustive equivalence property over random seeded custom
+//! budgets.
+
+use repro::alloc::Granularity;
+use repro::design::Platform;
+use repro::sweep::optimize::{Objective, OptimizeSpec, Strategy};
+use repro::sweep::{optimize, SweepReport, SweepSpec};
+use repro::util::json::Json;
+use repro::util::prop;
+
+const OBJECTIVES: [Objective; 3] = [Objective::Fps, Objective::Sram, Objective::Dram];
+
+/// Strict "a beats b" under an objective — the test-local twin of the
+/// optimizer's private ordering (Fps maximizes, Sram/Dram minimize).
+fn better(objective: Objective, a: f64, b: f64) -> bool {
+    match objective {
+        Objective::Fps => a > b,
+        Objective::Sram | Objective::Dram => a < b,
+    }
+}
+
+/// Matrix-first argbest over one network's slice of an exhaustive report:
+/// the global index and objective value the optimizer must reproduce.
+/// Requires a failure-free report (cells then line up with matrix order).
+fn exhaustive_best(
+    report: &SweepReport,
+    objective: Objective,
+    ni: usize,
+    per_net: usize,
+) -> (usize, f64) {
+    assert!(report.failures.is_empty(), "baseline grids must evaluate cleanly");
+    let mut best: Option<(usize, f64)> = None;
+    for ci in 0..per_net {
+        let index = ni * per_net + ci;
+        let value = objective.exact(&report.cells[index]);
+        match best {
+            Some((_, incumbent)) if !better(objective, value, incumbent) => {}
+            _ => best = Some((index, value)),
+        }
+    }
+    best.expect("non-empty per-network slice")
+}
+
+/// The acceptance criterion from the issue: on the committed 12-cell
+/// baseline grid (4 zoo nets x 3 catalog platforms x FGPM), the optimizer's
+/// winner must byte-match the exhaustive sweep's matrix-first best cell —
+/// same global index, identical JSON bytes — for every objective.
+#[test]
+fn bnb_winner_byte_matches_exhaustive_best_on_baseline_grid() {
+    let spec = SweepSpec::default();
+    let per_net = spec.platforms.len() * spec.granularities.len();
+    let exhaustive = spec.run();
+    for objective in OBJECTIVES {
+        let report = OptimizeSpec::new(spec.clone(), objective, Strategy::BranchBound).run();
+        assert!(report.failures.is_empty(), "{objective:?}: {:?}", report.failures);
+        assert_eq!(report.searches.len(), spec.nets.len());
+        for (ni, search) in report.searches.iter().enumerate() {
+            let (want_index, _) = exhaustive_best(&exhaustive, objective, ni, per_net);
+            assert_eq!(search.winner_index, Some(want_index), "{objective:?}/{}", search.network);
+            let winner = search.winner.as_ref().expect("winner on a clean grid");
+            assert_eq!(
+                winner.to_json_value().to_string(),
+                exhaustive.cells[want_index].to_json_value().to_string(),
+                "{objective:?}/{}: winner must byte-match the exhaustive cell",
+                search.network
+            );
+        }
+        assert_eq!(optimize::exit_code(&report), 0);
+    }
+}
+
+/// The issue's second acceptance pin: search statistics must show real
+/// pruning on at least one baseline. Under the `dram` objective the bound
+/// is exact and the catalog order (zc706, zcu102, edge) guarantees the
+/// edge candidate is always cut; `fps` prunes too (edge's analytic FPS
+/// ceiling sits far below zc706's achieved throughput on every zoo net).
+#[test]
+fn bnb_prunes_on_the_baseline_grid_and_its_accounting_balances() {
+    for objective in [Objective::Dram, Objective::Fps] {
+        let report =
+            OptimizeSpec::new(SweepSpec::default(), objective, Strategy::BranchBound).run();
+        assert!(report.total_pruned() > 0, "{objective:?}: expected pruned > 0 on the baseline");
+        for search in &report.searches {
+            let s = &search.stats;
+            assert_eq!(s.candidates, 3, "{objective:?}/{}", search.network);
+            assert_eq!(s.evaluated + s.pruned, s.candidates, "{objective:?}/{}", search.network);
+            assert_eq!(search.pruned_indices.len(), s.pruned);
+            if s.pruned > 0 {
+                assert!(s.pruned_space > 0, "pruned candidates cover a nonzero FGPM space");
+            }
+            let tightness = s.bound_tightness.expect("evaluated > 0 on a clean grid");
+            assert!((0.0..=1.0).contains(&tightness), "{tightness}");
+        }
+    }
+}
+
+/// Pruning soundness: no pruned index may hold a cell that is strictly
+/// better than the reported winner, nor an equal-valued cell at a lower
+/// matrix index (which matrix-first tie-breaking would have preferred).
+#[test]
+fn pruning_is_sound_no_pruned_cell_beats_the_winner() {
+    let spec = SweepSpec::default();
+    let per_net = spec.platforms.len() * spec.granularities.len();
+    let exhaustive = spec.run();
+    assert!(exhaustive.failures.is_empty());
+    for objective in OBJECTIVES {
+        let report = OptimizeSpec::new(spec.clone(), objective, Strategy::BranchBound).run();
+        for search in &report.searches {
+            let wi = search.winner_index.expect("winner on a clean grid");
+            let wv = objective.exact(&exhaustive.cells[wi]);
+            for &pi in &search.pruned_indices {
+                assert_eq!(pi / per_net, wi / per_net, "pruned indices stay in-network");
+                let pv = objective.exact(&exhaustive.cells[pi]);
+                assert!(
+                    !better(objective, pv, wv),
+                    "{objective:?}/{}: pruned cell {pi} ({pv}) beats winner {wi} ({wv})",
+                    search.network
+                );
+                if pv == wv {
+                    assert!(pi > wi, "an equal-valued earlier index must not be pruned");
+                }
+            }
+        }
+    }
+}
+
+/// The annealing fallback is exact by construction (walk + sweep-up visits
+/// every candidate) and bound-free: it must reproduce the branch-and-bound
+/// winner byte-for-byte with zero pruning, deterministically across runs.
+#[test]
+fn anneal_is_exact_deterministic_and_never_prunes() {
+    let spec = SweepSpec::default();
+    let per_net = spec.platforms.len() * spec.granularities.len();
+    let exhaustive = spec.run();
+    for objective in OBJECTIVES {
+        let report = OptimizeSpec::new(spec.clone(), objective, Strategy::Anneal).run();
+        let again = OptimizeSpec::new(spec.clone(), objective, Strategy::Anneal).run();
+        assert_eq!(report.to_json(), again.to_json(), "{objective:?}: anneal must be seeded");
+        for (ni, search) in report.searches.iter().enumerate() {
+            let (want_index, _) = exhaustive_best(&exhaustive, objective, ni, per_net);
+            assert_eq!(search.winner_index, Some(want_index), "{objective:?}/{}", search.network);
+            assert_eq!(search.stats.pruned, 0);
+            assert!(search.pruned_indices.is_empty());
+            assert_eq!(search.stats.evaluated, search.stats.candidates);
+        }
+    }
+}
+
+/// Optimizer-vs-exhaustive equivalence over random seeded `custom`-budget
+/// platforms (the issue's property test): for any budget the generator
+/// produces — both granularities, varied SRAM/DSP/clock — the
+/// branch-and-bound winner equals the exhaustive matrix-first argbest, and
+/// every pruned index is sound.
+#[test]
+fn optimizer_equals_exhaustive_on_random_custom_budgets() {
+    prop::check(
+        "optimize_vs_exhaustive",
+        12,
+        |rng| {
+            let sram_kb = rng.range(256, 6144) as u64;
+            let dsp = rng.range(48, 3000);
+            let clock_mhz = rng.range(80, 400) as f64;
+            let alt_sram_kb = rng.range(256, 6144) as u64;
+            let alt_dsp = rng.range(48, 3000);
+            (sram_kb, dsp, clock_mhz, alt_sram_kb, alt_dsp)
+        },
+        |&(sram_kb, dsp, clock_mhz, alt_sram_kb, alt_dsp)| {
+            let spec = SweepSpec {
+                nets: vec![repro::nets::mobilenet_v2(), repro::nets::shufflenet_v2()],
+                platforms: vec![
+                    Platform::custom("a-custom", sram_kb * 1024, dsp)
+                        .with_clock_hz(clock_mhz * 1.0e6),
+                    Platform::custom("b-custom", alt_sram_kb * 1024, alt_dsp),
+                ],
+                granularities: vec![Granularity::Fgpm, Granularity::Factorized],
+                ..SweepSpec::default()
+            };
+            let per_net = spec.platforms.len() * spec.granularities.len();
+            let exhaustive = spec.run();
+            if !exhaustive.failures.is_empty() {
+                return Err(format!("exhaustive run failed: {:?}", exhaustive.failures));
+            }
+            for objective in OBJECTIVES {
+                let report =
+                    OptimizeSpec::new(spec.clone(), objective, Strategy::BranchBound).run();
+                for (ni, search) in report.searches.iter().enumerate() {
+                    let (want_index, wv) = exhaustive_best(&exhaustive, objective, ni, per_net);
+                    if search.winner_index != Some(want_index) {
+                        return Err(format!(
+                            "{objective:?}/{}: winner {:?} != exhaustive best {want_index}",
+                            search.network, search.winner_index
+                        ));
+                    }
+                    let winner = search.winner.as_ref().expect("clean run");
+                    if winner.to_json_value().to_string()
+                        != exhaustive.cells[want_index].to_json_value().to_string()
+                    {
+                        return Err(format!(
+                            "{objective:?}/{}: winner bytes diverge from the exhaustive cell",
+                            search.network
+                        ));
+                    }
+                    for &pi in &search.pruned_indices {
+                        let pv = objective.exact(&exhaustive.cells[pi]);
+                        if better(objective, pv, wv) || (pv == wv && pi < want_index) {
+                            return Err(format!(
+                                "{objective:?}/{}: unsound prune of index {pi}",
+                                search.network
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Report surface: the JSON round-trips through `util::json` with the
+/// documented keys, and the text renderer names every network next to the
+/// search statistics.
+#[test]
+fn report_json_and_table_surface_the_search() {
+    let report =
+        OptimizeSpec::new(SweepSpec::default(), Objective::Fps, Strategy::BranchBound).run();
+    let json = Json::parse(&report.to_json()).expect("optimize JSON parses back");
+    let Json::Obj(top) = &json else { panic!("top-level object") };
+    for key in ["objective", "strategy", "searches", "version"] {
+        assert!(top.contains_key(key), "missing key {key:?}");
+    }
+    assert!(!top.contains_key("failures"), "no failures key on a clean run");
+    let table = repro::report::optimize_table(&report);
+    assert!(table.contains("Constrained search"), "{table}");
+    for search in &report.searches {
+        assert!(table.contains(&search.network), "{table}");
+    }
+    assert!(table.contains("pruned"), "{table}");
+}

@@ -304,3 +304,66 @@ fn sweep_sim_options_flow_into_cells_and_zero_frames_is_model_only() {
     assert!(report.cells[0].sim().is_none());
     assert!(report.cells[0].sim_error().is_none());
 }
+
+// --- `util::cli` flag-parser regressions (the PR 8 bugfix batch) -------
+//
+// The CLI's hand-rolled parser used to (a) silently take the *first*
+// occurrence of a repeated flag, letting `--frames 3 ... --frames 9`
+// drop the user's override without a word, and (b) not understand the
+// ubiquitous `--name=VAL` spelling at all (the value flowed into the
+// positional slot or tripped `check_flags`). Both are fixed in
+// `util::cli`, which `main.rs` now delegates every subcommand to.
+
+#[test]
+fn repeated_flags_are_a_config_error_not_a_silent_first_win() {
+    use repro::util::cli::flag_val;
+    let args: Vec<String> =
+        ["--frames", "3", "--jobs", "2", "--frames", "9"].iter().map(|s| s.to_string()).collect();
+    let err = flag_val(&args, "--frames").unwrap_err();
+    assert!(err.contains("--frames: duplicate flag"), "{err}");
+    assert!(err.contains("given 2 times"), "{err}");
+    // Every space/= form mix of the duplicate is caught the same way.
+    for pair in [
+        ["--frames=3", "--frames=9"],
+        ["--frames=3", "--frames"],
+        ["--frames", "3", "--frames=9"],
+    ] {
+        let args: Vec<String> = pair.iter().map(|s| s.to_string()).collect();
+        let err = flag_val(&args, "--frames").unwrap_err();
+        assert!(err.contains("duplicate flag"), "{pair:?}: {err}");
+    }
+    // A single occurrence still parses in either form.
+    let args: Vec<String> = ["--frames", "3"].iter().map(|s| s.to_string()).collect();
+    assert_eq!(flag_val(&args, "--frames").unwrap().as_deref(), Some("3"));
+}
+
+#[test]
+fn equals_form_values_parse_and_keep_the_flag_shaped_rejection() {
+    use repro::util::cli::{check_flags, flag_val, positional};
+    let args: Vec<String> =
+        ["--nets=mbv2,shv2", "--jobs=4", "--json"].iter().map(|s| s.to_string()).collect();
+    assert_eq!(flag_val(&args, "--nets").unwrap().as_deref(), Some("mbv2,shv2"));
+    assert_eq!(flag_val(&args, "--jobs").unwrap().as_deref(), Some("4"));
+    // `=`-aware check_flags: value flags consume nothing extra, bool
+    // flags reject an attached value, unknown stems still fail loudly.
+    check_flags(&args, &["--nets", "--jobs"], &["--json"]).unwrap();
+    let err = check_flags(&args, &["--nets"], &["--json"]).unwrap_err();
+    assert!(err.contains("unknown flag"), "{err}");
+    let args: Vec<String> = ["--json=yes"].iter().map(|s| s.to_string()).collect();
+    let err = check_flags(&args, &[], &["--json"]).unwrap_err();
+    assert!(err.contains("--json: takes no value"), "{err}");
+    // An empty `=` value is an explicit error, not Some("").
+    let args: Vec<String> = ["--nets="].iter().map(|s| s.to_string()).collect();
+    let err = flag_val(&args, "--nets").unwrap_err();
+    assert!(err.contains("expected a value after '='"), "{err}");
+    // Space-form keeps its flag-shaped-value and missing-value guards.
+    let args: Vec<String> = ["--nets", "--json"].iter().map(|s| s.to_string()).collect();
+    let err = flag_val(&args, "--nets").unwrap_err();
+    assert!(err.contains("expected a value, found flag"), "{err}");
+    let args: Vec<String> = ["--nets".to_string()];
+    assert!(flag_val(&args, "--nets").unwrap_err().contains("expected a value"));
+    // And the positional scanner skips both spellings of a value flag.
+    let args: Vec<String> =
+        ["--nets=mbv2", "--jobs", "4", "net.json"].iter().map(|s| s.to_string()).collect();
+    assert_eq!(positional(&args, &["--nets", "--jobs"]).map(String::as_str), Some("net.json"));
+}
