@@ -426,6 +426,13 @@ impl Design {
         memory::sram_report(&self.net, &self.ce_plan, &MemoryModelCfg::default())
     }
 
+    /// Modeled side-FIFO depth bounds (SCB snapshots, tee streams) under
+    /// this design's CE plan and FM scheme — the figures the simulator's
+    /// observed peaks are differentially checked against.
+    pub fn fifo_report(&self) -> crate::model::fifo::FifoReport {
+        crate::model::fifo::fifo_depths(&self.net, &self.ce_plan, self.sim_options.scheme)
+    }
+
     /// Cycle-simulate the design with its own [`SimOptions`].
     pub fn simulate(&self, frames: u64) -> Result<SimStats, Deadlock> {
         self.simulate_with(&self.sim_options, frames)
@@ -744,11 +751,21 @@ pub(crate) fn sim_options_to_json(o: &SimOptions) -> Json {
         FmScheme::FullyReusedFm => "fully_reused_fm",
         FmScheme::LineBased => "line_based",
     };
-    obj(vec![
+    let mut fields = vec![
         ("padding", Json::Str(padding.to_string())),
         ("scheme", Json::Str(scheme.to_string())),
         ("stride_extra_line", Json::Bool(o.stride_extra_line)),
-    ])
+    ];
+    // The observability/diagnosis knobs serialize only at their non-default
+    // values, so every pre-existing artifact and sweep cache key stays
+    // byte-identical when they are off.
+    if o.track_fifo {
+        fields.push(("track_fifo", Json::Bool(true)));
+    }
+    if !o.cycle_skip {
+        fields.push(("cycle_skip", Json::Bool(false)));
+    }
+    obj(fields)
 }
 
 fn sim_options_from_json(j: &Json) -> Result<SimOptions, ReproError> {
@@ -766,7 +783,11 @@ fn sim_options_from_json(j: &Json) -> Result<SimOptions, ReproError> {
         Some(Json::Bool(b)) => *b,
         _ => return Err(ReproError::config("design json: missing bool \"stride_extra_line\"")),
     };
-    Ok(SimOptions { padding, scheme, stride_extra_line })
+    // Optional knobs (absent in artifacts written before they existed, and
+    // in any artifact using the defaults).
+    let track_fifo = matches!(j.get("track_fifo"), Some(Json::Bool(true)));
+    let cycle_skip = !matches!(j.get("cycle_skip"), Some(Json::Bool(false)));
+    Ok(SimOptions { padding, scheme, stride_extra_line, track_fifo, cycle_skip })
 }
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
@@ -846,6 +867,23 @@ mod tests {
         assert_eq!(j.str_field("network"), "shufflenet_v2");
         assert_eq!(j.str_field("platform"), "zc706");
         assert_eq!(j.usize_field("boundary"), d.ce_plan().boundary);
+    }
+
+    #[test]
+    fn sim_option_knobs_serialize_only_when_non_default() {
+        // Default artifacts carry no knob keys (byte-compat with every
+        // pre-existing artifact and cache key); non-default values round-trip.
+        let d = Design::builder(&nets::mobilenet_v2()).build();
+        let text = d.to_json();
+        assert!(!text.contains("track_fifo") && !text.contains("cycle_skip"), "{text}");
+        let opts = SimOptions { track_fifo: true, cycle_skip: false, ..SimOptions::optimized() };
+        let d2 = Design::builder(&nets::mobilenet_v2()).sim_options(opts).build();
+        let text2 = d2.to_json();
+        assert!(text2.contains("\"track_fifo\":true"), "{text2}");
+        assert!(text2.contains("\"cycle_skip\":false"), "{text2}");
+        let r = Design::from_json(&text2).unwrap();
+        assert_eq!(*r.sim_options(), opts);
+        assert_eq!(r.to_json(), text2);
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //!   (`--json` for a stable one-line summary, `--save FILE` to persist the
 //!   full design artifact).
 //! * `simulate <net>` — cycle-level simulation of the design point
-//!   (`--load FILE` re-simulates a saved design).
+//!   (`--load FILE` re-simulates a saved design; `--fifo` also tracks
+//!   per-side-FIFO peak occupancies and prints them next to the
+//!   [`repro::model::fifo`] depth bounds).
 //! * `sweep` — the design-space sweep: the full pipeline over a
 //!   {networks} x {platforms} x {granularities} matrix (defaults: whole
 //!   zoo x whole catalog x FGPM). `--net-file FILE,..` adds networks
@@ -23,8 +25,12 @@
 //!   content-keyed cache (hit/miss stats on stderr, zero Alg 1/Alg 2
 //!   re-derivation on hits), `--cache-gc N` trims the cache to its N
 //!   most-recently-used entries after the run, `--clocks MHZ,..` adds an
-//!   FPS-vs-clock curve per cell, `--pareto` layers the per-network
-//!   {SRAM, FPS, DRAM} Pareto-frontier analysis on top, and
+//!   FPS-vs-clock curve per cell, `--fifo` attaches modeled side-FIFO
+//!   depth bounds (and, with `--frames`, the simulator's observed peak
+//!   occupancies) to every cell — without it, documents and cache keys
+//!   stay byte-identical to pre-FIFO runs — `--pareto` layers the
+//!   per-network {SRAM, FPS, DRAM} Pareto-frontier analysis on top
+//!   (gaining FIFO bytes as an extra axis under `--fifo`), and
 //!   `--pareto-clocks` (with `--clocks`) promotes frequency to a fourth
 //!   Pareto axis. Cells are fault-isolated: a failing cell degrades the
 //!   run (partial report, stderr failure summary, exit code
@@ -40,8 +46,8 @@
 //!   bound tightness). `--platform`/`--sram-mb`/`--dsp`/`--clock` describe
 //!   a single custom budget to search under (instead of a `--platforms`
 //!   axis); `--strategy anneal` selects the seeded simulated-annealing
-//!   fallback; the cache, fault-isolation, `--strict`, `--json`, and exit
-//!   code semantics are the sweep's.
+//!   fallback; the cache, fault-isolation, `--strict`, `--fifo`,
+//!   `--json`, and exit code semantics are the sweep's.
 //! * `net <FILE>` — load and validate a JSON network description through
 //!   the [`repro::ir`] front-end and print its lowered summary (`--json`
 //!   for a stable one-line document); CI runs this over every committed
@@ -71,16 +77,17 @@ fn usage() -> ExitCode {
          \x20 allocate <mbv1|mbv2|snv1|snv2> [--net-file FILE] [--platform zc706] [--sram-mb F]\n\
          \x20          [--dsp N] [--factorized] [--json] [--save FILE] [--load FILE]\n\
          \x20 simulate <mbv1|mbv2|snv1|snv2> [--net-file FILE] [--platform zc706] [--sram-mb F]\n\
-         \x20          [--dsp N] [--factorized] [--frames N] [--baseline] [--save FILE] [--load FILE]\n\
+         \x20          [--dsp N] [--factorized] [--frames N] [--baseline] [--fifo] [--save FILE]\n\
+         \x20          [--load FILE]\n\
          \x20 sweep  [--nets a,b,..] [--net-file FILE,..] [--platforms zc706,zcu102,edge]\n\
          \x20          [--granularities fgpm,factorized] [--frames N] [--jobs N] [--clocks MHZ,MHZ,..]\n\
-         \x20          [--pareto] [--pareto-clocks] [--cache | --cache-dir DIR] [--cache-gc N]\n\
+         \x20          [--fifo] [--pareto] [--pareto-clocks] [--cache | --cache-dir DIR] [--cache-gc N]\n\
          \x20          [--json] [--save-dir DIR] [--strict]\n\
          \x20 optimize --objective <fps|sram|dram> [--strategy bnb|anneal]\n\
          \x20          [--nets a,b,..] [--net-file FILE,..] [--platforms zc706,zcu102,edge]\n\
          \x20          [--platform NAME] [--sram-mb F] [--dsp N] [--clock MHZ]\n\
          \x20          [--granularities fgpm,factorized] [--frames N] [--jobs N] [--clocks MHZ,..]\n\
-         \x20          [--cache | --cache-dir DIR] [--json] [--strict]\n\
+         \x20          [--fifo] [--cache | --cache-dir DIR] [--json] [--strict]\n\
          \x20 net    <FILE.json> [--json]\n\
          \x20 infer  <mbv2|snv2> [--frames N]\n\
          \x20 stream <mbv2|snv2> [--frames N] [--workers N]"
@@ -336,11 +343,12 @@ fn main() -> ExitCode {
             if let Err(e) = check_flags(
                 &args,
                 &["--net-file", "--platform", "--sram-mb", "--dsp", "--frames", "--save", "--load"],
-                &["--factorized", "--baseline"],
+                &["--factorized", "--baseline", "--fifo"],
             ) {
                 return fail(&e);
             }
             let baseline = args.iter().any(|a| a == "--baseline");
+            let fifo = args.iter().any(|a| a == "--fifo");
             let opts = if baseline { sim::SimOptions::baseline() } else { sim::SimOptions::optimized() };
             let d = match design_from_args(&args, opts) {
                 Ok(d) => d,
@@ -360,8 +368,11 @@ fn main() -> ExitCode {
                 return fail(&e);
             }
             // An explicit --baseline overrides whatever options a --load'ed
-            // design was saved with.
-            let sim_opts = if baseline { opts } else { *d.sim_options() };
+            // design was saved with; --fifo turns occupancy tracking on
+            // for the same run (zero effect on the headline stats).
+            let base_opts = if baseline { opts } else { *d.sim_options() };
+            let sim_opts =
+                sim::SimOptions { track_fifo: fifo || base_opts.track_fifo, ..base_opts };
             match d.simulate_with(&sim_opts, frames) {
                 Ok(stats) => {
                     let clock = d.platform().clock_hz;
@@ -374,6 +385,20 @@ fn main() -> ExitCode {
                         stats.mac_efficiency() * 100.0,
                         stats.latency_ms(clock)
                     );
+                    if fifo {
+                        // Model under the *effective* options (--baseline
+                        // switches the buffer scheme), so the bounds mirror
+                        // exactly what this run's pipeline provisioned.
+                        let modeled = repro::model::fifo::fifo_depths(
+                            d.network(),
+                            d.ce_plan(),
+                            sim_opts.scheme,
+                        );
+                        println!(
+                            "{}",
+                            report::fifo_design_table(&modeled, Some(&stats.fifo_peak))
+                        );
+                    }
                 }
                 Err(e) => {
                     eprintln!("{e}");
@@ -396,7 +421,7 @@ fn main() -> ExitCode {
                     "--cache-dir",
                     "--cache-gc",
                 ],
-                &["--json", "--pareto", "--pareto-clocks", "--cache", "--strict"],
+                &["--json", "--fifo", "--pareto", "--pareto-clocks", "--cache", "--strict"],
             ) {
                 return fail(&e);
             }
@@ -438,6 +463,7 @@ fn main() -> ExitCode {
                 if let Some(csv) = flag_val(&args, "--clocks")? {
                     spec.clocks_hz = SweepSpec::parse_clocks_csv(&csv)?;
                 }
+                spec.fifo = args.iter().any(|a| a == "--fifo");
                 sweep::validate_pareto_clocks(
                     args.iter().any(|a| a == "--pareto-clocks"),
                     &spec.clocks_hz,
@@ -548,6 +574,9 @@ fn main() -> ExitCode {
                 println!("{}", sweep_report.to_json_full(pareto.as_ref(), pareto_clocks.as_ref()));
             } else {
                 println!("{}", report::sweep_matrix(&sweep_report));
+                if spec.fifo {
+                    println!("{}", report::fifo_table(&sweep_report));
+                }
                 if !spec.clocks_hz.is_empty() {
                     println!("{}", report::clock_curves(&sweep_report));
                 }
@@ -586,7 +615,7 @@ fn main() -> ExitCode {
                     "--clocks",
                     "--cache-dir",
                 ],
-                &["--json", "--cache", "--strict"],
+                &["--json", "--fifo", "--cache", "--strict"],
             ) {
                 return fail(&e);
             }
@@ -660,6 +689,7 @@ fn main() -> ExitCode {
                 if let Some(csv) = flag_val(&args, "--clocks")? {
                     spec.clocks_hz = SweepSpec::parse_clocks_csv(&csv)?;
                 }
+                spec.fifo = args.iter().any(|a| a == "--fifo");
                 spec.cache_dir = SweepSpec::resolve_cache_flags(
                     args.iter().any(|a| a == "--cache"),
                     flag_val(&args, "--cache-dir")?.as_deref(),

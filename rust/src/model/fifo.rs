@@ -1,0 +1,193 @@
+//! Side-FIFO depth estimation — the inter-CE sizing the SRAM model
+//! (Eq 12) does not cover but real dataflow builds live or die by
+//! (undersizing is exactly the [`crate::sim::Deadlock`] failure mode the
+//! paper's delayed-buffer sizing exists to prevent).
+//!
+//! A *side FIFO* is any stream that leaves the main CE chain: an SCB
+//! shortcut snapshot delayed until its join layer (§III-B, Fig 6), or a
+//! ShuffleNet tee stream held while the sibling branch computes. Each
+//! depth bound is the producer/consumer **rate mismatch** — the pixels the
+//! producer emits before the consumer can retire them, i.e. the summed
+//! startup latencies of the intervening layers — plus a **quantum-skew
+//! margin** (one row of the snapshot grid plus a fixed synchronizer
+//! allowance) absorbing the coarse-grained issue of `P_f`-position
+//! quanta. Off-chip (WRCE-join) holds are provisioned as a two-frame
+//! ping-pong instead, mirroring the WRCE global-FM rule.
+//!
+//! The bounds are *exactly* the capacities [`crate::sim::build_pipeline`]
+//! provisions, in the same FIFO order (tee FIFOs in layer order, then SCB
+//! FIFOs) — so a modeled depth is a sound upper bound on the simulator's
+//! observed peak occupancy by construction, and `rust/tests/differential.rs`
+//! pins both soundness and tightness (no vacuous over-sizing) on every
+//! committed baseline cell.
+
+use crate::model::memory::{scb_delay_buffer_bytes, startup_latency_px, CeKind, CePlan, FmScheme};
+use crate::nets::{LayerSrc, Network};
+
+/// Depth bound for one side FIFO, in pixels and bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FifoDepth {
+    /// Same name the simulator gives the FIFO (`"tee->..."` / `"scb->..."`).
+    pub name: String,
+    /// `true` when the join side is FRCE (on-chip delayed buffer); `false`
+    /// for a WRCE join, where the hold is an off-chip two-frame ping-pong
+    /// and the depth is a provision, not a rate bound.
+    pub on_chip: bool,
+    /// Steady-state hold from producer/consumer rate mismatch (the summed
+    /// startup latencies of the intervening layers), in pixels. For
+    /// off-chip holds this is the two-frame ping-pong itself.
+    pub rate_px: u64,
+    /// Quantum-skew safety margin: one snapshot row + 16 px synchronizer
+    /// allowance (zero for off-chip holds).
+    pub margin_px: u64,
+    /// Total depth bound: `min(rate_px + margin_px, 2 * frame_px)` — never
+    /// deeper than the ping-pong worst case.
+    pub depth_px: u64,
+    /// Channels per pixel at the snapshot point (a simulator "pixel" is
+    /// one spatial position across all channels).
+    pub channels: usize,
+    /// Depth in bytes at 8-bit activations: `depth_px * channels`.
+    pub bytes: u64,
+}
+
+/// Per-design side-FIFO depth report, FIFOs in simulator pipeline order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FifoReport {
+    pub fifos: Vec<FifoDepth>,
+}
+
+impl FifoReport {
+    /// Total modeled FIFO footprint in bytes (reported alongside the
+    /// Eq-12 SRAM figures; off-chip holds included for comparability).
+    pub fn total_bytes(&self) -> u64 {
+        self.fifos.iter().map(|f| f.bytes).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifos.is_empty()
+    }
+}
+
+/// Derive the per-side-FIFO depth bounds for `net` under the FRCE/WRCE
+/// split of `plan` and the FRCE buffer `scheme`.
+///
+/// Enumerates FIFOs in exactly the order [`crate::sim::build_pipeline`]
+/// creates them: tee FIFOs (layer iteration order over `LayerSrc::Tee`
+/// consumers), then SCB FIFOs (network `scbs` order) — so report entry
+/// `i` describes simulator FIFO `i`.
+pub fn fifo_depths(net: &Network, plan: &CePlan, scheme: FmScheme) -> FifoReport {
+    let mut fifos = Vec::new();
+
+    // Tee streams: layer j's input snapshotted for a later consumer i
+    // while the j..i branch computes.
+    for (i, l) in net.layers.iter().enumerate() {
+        if let LayerSrc::Tee(j) = l.src {
+            let src = &net.layers[j];
+            let frame_px = (src.in_size * src.in_size) as u64;
+            let channels = src.in_ch;
+            let (on_chip, rate_px, margin_px) = if plan.kind(i) == CeKind::Frce {
+                let hold_px: u64 =
+                    net.layers[j..i].iter().map(|p| startup_latency_px(p, scheme)).sum();
+                (true, hold_px, src.in_size as u64 + 16)
+            } else {
+                (false, 2 * frame_px, 0)
+            };
+            let depth_px = (rate_px + margin_px).min(2 * frame_px);
+            fifos.push(FifoDepth {
+                name: format!("tee->{}", l.name),
+                on_chip,
+                rate_px,
+                margin_px,
+                depth_px,
+                channels,
+                bytes: depth_px * channels as u64,
+            });
+        }
+    }
+
+    // SCB shortcut snapshots, delayed until their join layer.
+    for scb in &net.scbs {
+        let join = scb.join_layer;
+        let (f, channels) = scb.snapshot_shape(net);
+        let frame_px = (f * f) as u64;
+        let (on_chip, rate_px, margin_px) = if plan.kind(join) == CeKind::Frce {
+            let model_px = scb_delay_buffer_bytes(net, scb, scheme)
+                / net.layers[scb.from_layer].in_ch.max(1) as u64;
+            (true, model_px, f as u64 + 16)
+        } else {
+            (false, 2 * frame_px, 0)
+        };
+        let depth_px = (rate_px + margin_px).min(2 * frame_px);
+        fifos.push(FifoDepth {
+            name: format!("scb->{}", net.layers[join].name),
+            on_chip,
+            rate_px,
+            margin_px,
+            depth_px,
+            channels,
+            bytes: depth_px * channels as u64,
+        });
+    }
+
+    FifoReport { fifos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{dynamic_parallelism_tuning, Granularity};
+    use crate::sim::{self, SimOptions};
+
+    #[test]
+    fn depths_mirror_the_simulator_capacities_in_order() {
+        // The structural soundness anchor: the modeled depth of FIFO i is
+        // byte-for-byte the capacity build_pipeline provisions for FIFO i,
+        // for every zoo network at several FRCE/WRCE boundaries.
+        for net in crate::nets::all_networks() {
+            for boundary in [0, net.layers.len() / 2, net.layers.len()] {
+                let plan = CePlan { boundary };
+                let p = dynamic_parallelism_tuning(&net, &plan, 512, Granularity::Fgpm);
+                let opts = SimOptions::optimized();
+                let pipe = sim::build_pipeline(&net, &p.allocs, &plan, &opts);
+                let report = fifo_depths(&net, &plan, opts.scheme);
+                assert_eq!(report.fifos.len(), pipe.fifos.len(), "{} b={boundary}", net.name);
+                for (m, s) in report.fifos.iter().zip(&pipe.fifos) {
+                    assert_eq!(m.name, s.name, "{} b={boundary}", net.name);
+                    assert_eq!(m.depth_px, s.capacity, "{} {}", net.name, m.name);
+                    assert!(m.channels > 0 && m.bytes == m.depth_px * m.channels as u64);
+                    assert!(m.depth_px <= m.rate_px + m.margin_px, "{}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_networks_have_no_side_fifos() {
+        let net = crate::nets::mobilenet_v1();
+        let report = fifo_depths(&net, &CePlan { boundary: net.layers.len() }, FmScheme::FullyReusedFm);
+        assert!(report.is_empty());
+        assert_eq!(report.total_bytes(), 0);
+    }
+
+    #[test]
+    fn wrce_joins_are_two_frame_ping_pongs() {
+        // boundary 0 = everything WRCE: every hold is the off-chip
+        // two-frame provision with zero margin.
+        let net = crate::nets::mobilenet_v2();
+        let report = fifo_depths(&net, &CePlan { boundary: 0 }, FmScheme::FullyReusedFm);
+        assert!(!report.is_empty());
+        for f in &report.fifos {
+            assert!(!f.on_chip, "{}", f.name);
+            assert_eq!(f.margin_px, 0, "{}", f.name);
+            assert_eq!(f.depth_px, f.rate_px, "{}", f.name);
+        }
+        // All-FRCE: every hold is on-chip, margined, and no deeper than
+        // the ping-pong worst case.
+        let frce = fifo_depths(&net, &CePlan { boundary: net.layers.len() }, FmScheme::FullyReusedFm);
+        for (f, w) in frce.fifos.iter().zip(&report.fifos) {
+            assert!(f.on_chip, "{}", f.name);
+            assert!(f.margin_px > 0 && f.depth_px <= w.depth_px, "{}", f.name);
+        }
+        assert!(frce.total_bytes() < report.total_bytes());
+    }
+}

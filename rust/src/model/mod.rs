@@ -5,15 +5,20 @@
 //!   fully-reused-FM vs line-based buffer schemes of §III-B.
 //! * [`dram`] — Eq (13): off-chip traffic of the proposed design and the
 //!   unified-/separated-CE baselines of Fig 14.
+//! * [`fifo`] — side-FIFO depth bounds (SCB snapshots, tee streams) from
+//!   producer/consumer rate mismatch + quantum skew, differentially
+//!   validated against the simulator's observed peak occupancies.
 //! * [`throughput`] — Eq (14): barrel-effect throughput, MAC efficiency,
 //!   DSP accounting with 2x 8-bit decomposition.
 
 pub mod dram;
+pub mod fifo;
 pub mod memory;
 pub mod ops;
 pub mod throughput;
 
 pub use dram::DramTraffic;
+pub use fifo::{fifo_depths, FifoDepth, FifoReport};
 pub use memory::{CeKind, CePlan, FmScheme, MemoryModelCfg, SramReport};
 pub use throughput::{LayerAlloc, Performance};
 

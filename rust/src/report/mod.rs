@@ -672,7 +672,12 @@ pub fn ablation() -> String {
     for padding in [PaddingMode::DirectInsert, PaddingMode::AddressGenerated] {
         for scheme in [FmScheme::LineBased, FmScheme::FullyReusedFm] {
             for extra in [false, true] {
-                let opts = sim::SimOptions { padding, scheme, stride_extra_line: extra };
+                let opts = sim::SimOptions {
+                    padding,
+                    scheme,
+                    stride_extra_line: extra,
+                    ..SimOptions::optimized()
+                };
                 let row = match d.simulate_with(&opts, 8) {
                     Ok(st) => format!("{:>11.2}% {:>10.1}", st.mac_efficiency() * 100.0, st.fps(CLOCK_HZ)),
                     Err(_) => "   DEADLOCK        -".to_string(),
@@ -1046,6 +1051,122 @@ pub fn clock_curves(report: &crate::sweep::SweepReport) -> String {
     s
 }
 
+/// One aligned row of a FIFO table: the modeled bound columns next to the
+/// observed-peak column (`-` when the FIFO was not simulated). Shared by
+/// the per-design and per-sweep renderers so the two can never drift.
+fn fifo_row(s: &mut String, f: &crate::model::fifo::FifoDepth, peak: Option<u64>) {
+    let (peak_s, util_s) = match peak {
+        Some(p) => (
+            p.to_string(),
+            format!("{:.1}%", p as f64 / f.depth_px.max(1) as f64 * 100.0),
+        ),
+        None => ("-".to_string(), "-".to_string()),
+    };
+    let _ = writeln!(
+        s,
+        "  {:24} {:>8} {:>9} {:>10} {:>9} {:>9} {:>9} {:>7}",
+        f.name,
+        if f.on_chip { "on-chip" } else { "off-chip" },
+        f.rate_px,
+        f.margin_px,
+        f.depth_px,
+        format!("{:.1}", f.bytes as f64 / 1024.0),
+        peak_s,
+        util_s,
+    );
+}
+
+fn fifo_table_columns(s: &mut String) {
+    let _ = writeln!(
+        s,
+        "  {:24} {:>8} {:>9} {:>10} {:>9} {:>9} {:>9} {:>7}",
+        "fifo", "kind", "rate px", "margin px", "depth px", "KB", "peak px", "util"
+    );
+}
+
+/// Aligned text rendering of one design's side-FIFO depth report
+/// ([`crate::model::fifo::fifo_depths`], the `repro simulate --fifo`
+/// output): per FIFO, the modeled rate/margin/depth bound next to the
+/// simulator's observed peak occupancy when one was tracked
+/// (`peaks[i]` pairs with `report.fifos[i]` — model order *is* pipeline
+/// order). Chain networks (no side FIFOs) render a note instead of an
+/// empty table.
+pub fn fifo_design_table(
+    report: &crate::model::fifo::FifoReport,
+    peaks: Option<&[u64]>,
+) -> String {
+    let mut s = String::new();
+    header(&mut s, "Side-FIFO depths: modeled bound vs observed peak occupancy");
+    if report.is_empty() {
+        let _ = writeln!(s, "(chain network — no tee or SCB side FIFOs to size)");
+        return s;
+    }
+    fifo_table_columns(&mut s);
+    for (i, f) in report.fifos.iter().enumerate() {
+        fifo_row(&mut s, f, peaks.map(|p| p[i]));
+    }
+    let _ = writeln!(
+        s,
+        "  total modeled footprint: {:.1} KB ({} FIFOs)",
+        report.total_bytes() as f64 / 1024.0,
+        report.fifos.len()
+    );
+    let _ = writeln!(
+        s,
+        "(depth = rate + margin, capped at the 2-frame ping-pong; every observed peak must stay"
+    );
+    let _ = writeln!(
+        s,
+        " within its modeled depth — the differential suite enforces this on all baseline cells)"
+    );
+    s
+}
+
+/// Aligned text rendering of a `--fifo` sweep's side-FIFO figures: per
+/// cell, every side FIFO with the modeled depth bound next to the
+/// simulated peak occupancy (when the sweep also ran the simulator) and
+/// the cell's total modeled footprint. Cells without figures render a
+/// pointer to the `--fifo` flag instead of an empty table. The text twin
+/// of the per-cell `"fifo"` key in `repro sweep --fifo --json`.
+pub fn fifo_table(report: &crate::sweep::SweepReport) -> String {
+    let mut s = String::new();
+    header(&mut s, "Side-FIFO depths per cell: modeled bound vs observed peak occupancy");
+    if report.cells.iter().all(|c| c.fifo().is_none()) {
+        let _ = writeln!(s, "(no FIFO figures — pass --fifo to request them)");
+        return s;
+    }
+    for cell in &report.cells {
+        let d = cell.design();
+        let Some(fifo) = cell.fifo() else { continue };
+        let _ = writeln!(
+            s,
+            "{}/{}/{}:",
+            d.network().name,
+            d.platform().name,
+            crate::design::granularity_name(d.granularity())
+        );
+        if fifo.report.is_empty() {
+            let _ = writeln!(s, "  (chain network — no side FIFOs)");
+            continue;
+        }
+        fifo_table_columns(&mut s);
+        for (i, f) in fifo.report.fifos.iter().enumerate() {
+            fifo_row(&mut s, f, fifo.peaks.as_ref().map(|p| p[i]));
+        }
+        let _ = writeln!(
+            s,
+            "  total modeled footprint: {:.1} KB",
+            fifo.report.total_bytes() as f64 / 1024.0
+        );
+    }
+    let _ = writeln!(
+        s,
+        "(peak px is the simulator's high-water occupancy — `-` for model-only sweeps; util ="
+    );
+    let _ = writeln!(s, " peak/depth, so 100% means the bound was reached but never exceeded)");
+    s
+}
+
 /// Render every table and figure (the `report all` target).
 pub fn all() -> String {
     let mut s = String::new();
@@ -1162,6 +1283,36 @@ mod tests {
         for label in ["zc706/fgpm@150", "zc706/fgpm@200", "edge/fgpm@150", "edge/fgpm@200"] {
             assert!(t.contains(label), "missing {label} in:\n{t}");
         }
+    }
+
+    #[test]
+    fn fifo_tables_render_modeled_and_observed_columns() {
+        let mut spec =
+            crate::sweep::SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), None).unwrap();
+        // Without --fifo the sweep renderer points at the flag.
+        assert!(fifo_table(&spec.run()).contains("--fifo"));
+        spec.fifo = true;
+        spec.frames = Some(2);
+        let report = spec.run();
+        let t = fifo_table(&report);
+        assert!(t.contains("shufflenet_v2/zc706/fgpm:"), "{t}");
+        assert!(t.contains("tee->") && t.contains("peak px"), "{t}");
+        assert!(t.contains("total modeled footprint"), "{t}");
+        assert!(!t.contains(" -\n"), "simulated cells must show real peaks:\n{t}");
+        // The per-design twin: observed column filled when peaks are given,
+        // dashed when not, and a chain network explains itself.
+        let cell = &report.cells[0];
+        let fifo = cell.fifo().unwrap();
+        let with = fifo_design_table(&fifo.report, fifo.peaks.as_deref());
+        assert!(with.contains("tee->") && !with.lines().any(|l| l.ends_with(" -")), "{with}");
+        let without = fifo_design_table(&fifo.report, None);
+        assert!(without.contains(" -"), "{without}");
+        let chain = crate::model::fifo::fifo_depths(
+            &nets::mobilenet_v1(),
+            &CePlan { boundary: 0 },
+            FmScheme::FullyReusedFm,
+        );
+        assert!(fifo_design_table(&chain, None).contains("chain network"));
     }
 
     #[test]

@@ -51,6 +51,14 @@ pub struct Pipeline {
     pub feeds_next: Vec<bool>,
     /// Input pixels per frame at the source.
     pub source_px_per_frame: u64,
+    /// Record per-FIFO peak occupancy + high-water traces in [`SimStats`]
+    /// (`fifo_*` fields stay empty when off, and the hot loop never
+    /// touches the counters).
+    pub track_fifo: bool,
+    /// Enable the no-progress cycle-skip fast path; stats are identical
+    /// either way, so this exists only to exercise the cycle-exact slow
+    /// path in isolation.
+    pub cycle_skip: bool,
 }
 
 /// Simulation outcome statistics.
@@ -74,6 +82,17 @@ pub struct SimStats {
     /// Per-CE cycle at which each frame's last output completed
     /// (`frame_done[ce][frame]`) — the pipeline-schedule trace.
     pub frame_done: Vec<Vec<u64>>,
+    /// Side-FIFO names in pipeline order (tee FIFOs, then SCB FIFOs).
+    /// Empty — as are the three fields below — unless occupancy tracking
+    /// was enabled via [`Pipeline::track_fifo`].
+    pub fifo_names: Vec<String>,
+    /// Per-FIFO provisioned capacity in pixels.
+    pub fifo_capacity: Vec<u64>,
+    /// Per-FIFO peak occupancy in pixels over the whole run.
+    pub fifo_peak: Vec<u64>,
+    /// Running peak per FIFO sampled at each completed output frame
+    /// (`fifo_high_water[fifo][frame]`) — the occupancy high-water trace.
+    pub fifo_high_water: Vec<Vec<u64>>,
 }
 
 impl SimStats {
@@ -135,6 +154,10 @@ impl Pipeline {
         let n = self.ces.len();
         let mut st: Vec<CeState> = vec![CeState::default(); n];
         let mut fifo_occ: Vec<u64> = self.fifos.iter().map(|f| f.occupancy).collect();
+        let track = self.track_fifo;
+        let mut fifo_peak: Vec<u64> = if track { fifo_occ.clone() } else { Vec::new() };
+        let mut fifo_high_water: Vec<Vec<u64>> =
+            vec![Vec::with_capacity(frames as usize); if track { self.fifos.len() } else { 0 }];
         let mut source_sent: u64 = 0;
         let source_total = self.source_px_per_frame * frames;
         let last = n - 1;
@@ -220,6 +243,9 @@ impl Pipeline {
                         if i == last {
                             for _ in completion.len() as u64..done.min(frames) {
                                 completion.push(cycle);
+                                for (t, hw) in fifo_high_water.iter_mut().enumerate() {
+                                    hw.push(fifo_peak[t]);
+                                }
                             }
                         }
                     }
@@ -289,9 +315,15 @@ impl Pipeline {
                 }
                 for &t in taps {
                     fifo_occ[t] += 1;
+                    if track && fifo_occ[t] > fifo_peak[t] {
+                        fifo_peak[t] = fifo_occ[t];
+                    }
                 }
                 if let Some(ti) = self.in_taps[i] {
                     fifo_occ[ti] += 1;
+                    if track && fifo_occ[ti] > fifo_peak[ti] {
+                        fifo_peak[ti] = fifo_occ[ti];
+                    }
                 }
                 st[i].recv += 1;
                 next_accept[i] = cycle + cfg.in_interval;
@@ -318,6 +350,9 @@ impl Pipeline {
                 st[p].out_fifo -= 1;
                 for &t in taps {
                     fifo_occ[t] += 1;
+                    if track && fifo_occ[t] > fifo_peak[t] {
+                        fifo_peak[t] = fifo_occ[t];
+                    }
                 }
                 progress = true;
             }
@@ -341,17 +376,45 @@ impl Pipeline {
                         skip = skip.min(na - cycle);
                     }
                 }
-                if skip != u64::MAX && skip > 1 {
+                if self.cycle_skip && skip != u64::MAX && skip > 1 {
                     let adv = skip - 1; // the loop tail adds the final +1
-                    for s in st.iter_mut() {
+                    for (i, s) in st.iter_mut().enumerate() {
                         if s.busy > 0 {
                             s.busy -= adv;
                             s.busy_cycles += adv;
+                            continue;
+                        }
+                        // An idle CE replays the exact same stall verdict on
+                        // every skipped cycle (none of its inputs can change
+                        // strictly inside the span), so credit the counter
+                        // the slow path would have bumped — this is what
+                        // keeps skip-on and skip-off stats byte-identical.
+                        let of = outs[i];
+                        if s.next_out + s.pending_out >= of * frames {
+                            continue; // all work done: Phase A bumps nothing
+                        }
+                        let cfg = &self.ces[i];
+                        let q = (cfg.pf as u64).min(of - s.next_out % of);
+                        if s.recv <= s.cached_need {
+                            s.stall_input += adv;
+                        } else if s.out_fifo + q > (2 * cfg.pf as u64).max(4) {
+                            s.stall_output += adv;
+                        } else {
+                            // Only a join CE starved by its side FIFO can
+                            // still have failed to issue this cycle.
+                            s.stall_input += adv;
                         }
                     }
                     cycle += adv;
                 }
-                if cycle - last_progress > horizon {
+                // Declare deadlock only when *nothing* is pending: an
+                // in-flight quantum timer or a future bus-pacing release
+                // always leads to an event (a completion is itself
+                // progress), so a long stall with `skip != MAX` is
+                // legitimate — e.g. a single quantum longer than the
+                // horizon, where the skip advance used to trip this check
+                // before the pending completion landed (false deadlock).
+                if skip == u64::MAX && cycle - last_progress > horizon {
                     let detail = self.deadlock_report(&st, &fifo_occ);
                     return Err(Deadlock { cycle, detail });
                 }
@@ -381,6 +444,10 @@ impl Pipeline {
                 .collect(),
             pes: self.ces.iter().map(|c| c.pes).collect(),
             frame_done,
+            fifo_names: if track { self.fifos.iter().map(|f| f.name.clone()).collect() } else { Vec::new() },
+            fifo_capacity: if track { self.fifos.iter().map(|f| f.capacity).collect() } else { Vec::new() },
+            fifo_peak,
+            fifo_high_water,
         })
     }
 
@@ -415,4 +482,132 @@ fn is_padding_slot(cfg: &CeConfig, idx: u64) -> bool {
     let p = cfg.pad as u64;
     let (r, c) = (idx / fp, idx % fp);
     r < p || r >= fp - p || c < p || c >= fp - p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::memory::FmScheme;
+    use crate::sim::ce::PaddingMode;
+
+    /// A minimal streaming 1x1 compute CE (k=1: 1:1 arrival/output map).
+    fn stream_ce(name: &str, f: usize, quantum: u64, pf: usize) -> CeConfig {
+        CeConfig {
+            name: name.into(),
+            class: CeClass::Compute,
+            f_in: f,
+            f_out: f,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            padding: PaddingMode::AddressGenerated,
+            scheme: FmScheme::FullyReusedFm,
+            stride_extra_line: false,
+            quantum_cycles: quantum,
+            pf,
+            pes: 1,
+            macs_per_opos: 1,
+            full_frame_buffer: false,
+            extra_capacity_px: 0,
+            in_interval: 1,
+        }
+    }
+
+    /// Source -> producer CE -> full-frame (WRCE-style) CE -> join CE,
+    /// with one side FIFO snapshotting the producer's output into the
+    /// join — the minimal SCB shape.
+    fn scb_pipeline(side_capacity: u64) -> Pipeline {
+        let producer = stream_ce("producer", 4, 1, 1);
+        let mut middle = stream_ce("middle", 4, 1, 1);
+        middle.full_frame_buffer = true;
+        let mut join = stream_ce("join", 4, 1, 4);
+        join.class = CeClass::Join;
+        join.pes = 0;
+        Pipeline {
+            ces: vec![producer, middle, join],
+            main_src: vec![MainSrc::Source, MainSrc::Ce(0), MainSrc::Ce(1)],
+            join_side: vec![None, None, Some(0)],
+            out_taps: vec![vec![0], Vec::new(), Vec::new()],
+            in_taps: vec![None; 3],
+            source_taps: Vec::new(),
+            fifos: vec![SideFifo {
+                producer: Some(0),
+                tap_input: false,
+                capacity: side_capacity,
+                occupancy: 0,
+                name: "scb->join".into(),
+            }],
+            feeds_next: vec![true, true, false],
+            source_px_per_frame: 16,
+            track_fifo: false,
+            cycle_skip: true,
+        }
+    }
+
+    #[test]
+    fn quantum_longer_than_horizon_is_not_a_deadlock() {
+        // Regression: one quantum of 1M cycles dwarfs the progress horizon
+        // (2*64 + 400_000). The cycle-skip advance lands past the horizon
+        // in a single jump, and the old `cycle - last_progress > horizon`
+        // check fired before the pending completion could count as
+        // progress. With the pending-timer guard the run must complete.
+        let mut ce = stream_ce("extreme", 8, 1_000_000, 1);
+        ce.in_interval = 1;
+        let p = Pipeline {
+            ces: vec![ce],
+            main_src: vec![MainSrc::Source],
+            join_side: vec![None],
+            out_taps: vec![Vec::new()],
+            in_taps: vec![None],
+            source_taps: Vec::new(),
+            fifos: Vec::new(),
+            feeds_next: vec![false],
+            source_px_per_frame: 64,
+            track_fifo: false,
+            cycle_skip: true,
+        };
+        let stats = p.run(1, 0).expect("extreme quantum falsely reported as deadlock");
+        assert_eq!(stats.frames, 1);
+        // Each of the 64 one-position quanta stalls far past the horizon.
+        assert!(stats.total_cycles > 2 * 64 + 400_000, "total {}", stats.total_cycles);
+    }
+
+    #[test]
+    fn undersized_side_fifo_deadlocks_with_named_report() {
+        // Capacity 2 while the join consumes 4 per quantum: the FIFO
+        // saturates at 2/2, the gated producer backs up (out_fifo full),
+        // the full-frame middle CE never sees a whole frame — a circular
+        // wait, i.e. exactly the failure the paper's delayed-buffer sizing
+        // prevents.
+        let err = scb_pipeline(2).run(1, 0).expect_err("undersized FIFO must deadlock");
+        assert!(err.detail.contains("scb->join"), "missing FIFO name: {}", err.detail);
+        assert!(err.detail.contains("2/2"), "missing saturated occupancy: {}", err.detail);
+        assert!(err.detail.contains("producer"), "missing stalled CE: {}", err.detail);
+        let display = err.to_string();
+        assert!(display.contains("pipeline deadlock at cycle"));
+    }
+
+    #[test]
+    fn model_sized_side_fifo_streams_and_tracks_peaks() {
+        // 2*frame_px is the builder's WRCE-join provision; with it the same
+        // pipeline streams, and tracking reports peaks within capacity plus
+        // a monotone per-frame high-water trace.
+        let mut p = scb_pipeline(32);
+        p.track_fifo = true;
+        let frames = 3;
+        let stats = p.run(frames, 1).expect("model-sized FIFO must stream");
+        assert_eq!(stats.fifo_names, vec!["scb->join".to_string()]);
+        assert_eq!(stats.fifo_capacity, vec![32]);
+        assert_eq!(stats.fifo_peak.len(), 1);
+        assert!(stats.fifo_peak[0] > 0 && stats.fifo_peak[0] <= 32, "peak {}", stats.fifo_peak[0]);
+        let hw = &stats.fifo_high_water[0];
+        assert_eq!(hw.len(), frames as usize);
+        assert!(hw.windows(2).all(|w| w[0] <= w[1]), "trace not monotone: {hw:?}");
+        assert!(*hw.last().unwrap() <= stats.fifo_peak[0]);
+        // Untracked runs keep the stats fields empty (zero-cost default).
+        let untracked = scb_pipeline(32).run(frames, 1).unwrap();
+        assert!(untracked.fifo_names.is_empty() && untracked.fifo_peak.is_empty());
+        assert!(untracked.fifo_high_water.is_empty());
+        assert_eq!(untracked.period_cycles, stats.period_cycles);
+    }
 }

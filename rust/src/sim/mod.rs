@@ -34,6 +34,15 @@ pub struct SimOptions {
     pub scheme: FmScheme,
     /// Extra line for stride > 1 (Fig 11(c) vs (d)).
     pub stride_extra_line: bool,
+    /// Record per-side-FIFO peak occupancy and high-water traces in
+    /// [`SimStats`] (`fifo_*` fields). Off by default: the hot loop never
+    /// touches the counters and the stats are byte-identical to an
+    /// untracked run's timing figures.
+    pub track_fifo: bool,
+    /// Enable the no-progress cycle-skip fast path. Stats are identical
+    /// either way (pinned by `skip_on_off_stats_identical_across_zoo`);
+    /// disable only to exercise or diagnose the cycle-exact slow path.
+    pub cycle_skip: bool,
 }
 
 impl SimOptions {
@@ -46,6 +55,8 @@ impl SimOptions {
             padding: PaddingMode::DirectInsert,
             scheme: FmScheme::LineBased,
             stride_extra_line: false,
+            track_fifo: false,
+            cycle_skip: true,
         }
     }
 
@@ -55,6 +66,8 @@ impl SimOptions {
             padding: PaddingMode::AddressGenerated,
             scheme: FmScheme::FullyReusedFm,
             stride_extra_line: true,
+            track_fifo: false,
+            cycle_skip: true,
         }
     }
 }
@@ -215,6 +228,8 @@ pub fn build_pipeline(net: &Network, allocs: &[LayerAlloc], plan: &CePlan, opts:
         fifos,
         feeds_next,
         source_px_per_frame: (net.input_size * net.input_size) as u64,
+        track_fifo: opts.track_fifo,
+        cycle_skip: opts.cycle_skip,
     }
 }
 
@@ -307,6 +322,33 @@ mod tests {
         let plan = CePlan { boundary: 0 };
         let stats = simulate(&net, &allocs, &plan, &SimOptions::optimized(), 3).unwrap();
         assert!(stats.period_cycles > 0.0);
+    }
+
+    #[test]
+    fn skip_on_off_stats_identical_across_zoo() {
+        // The no-progress cycle-skip fast path must be a pure wall-clock
+        // optimization: every SimStats field — including the stall
+        // taxonomy the skip path credits explicitly — byte-identical to
+        // the cycle-exact slow path, on every zoo network.
+        for net in crate::nets::all_networks() {
+            let plan = CePlan { boundary: net.layers.len() / 2 };
+            let p = dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+            let on = simulate(&net, &p.allocs, &plan, &SimOptions::optimized(), 2).unwrap();
+            let off = simulate(
+                &net,
+                &p.allocs,
+                &plan,
+                &SimOptions { cycle_skip: false, ..SimOptions::optimized() },
+                2,
+            )
+            .unwrap();
+            assert_eq!(
+                format!("{on:?}"),
+                format!("{off:?}"),
+                "skip-on vs skip-off stats diverge for {}",
+                net.name
+            );
+        }
     }
 
     #[test]

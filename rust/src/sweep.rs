@@ -154,6 +154,14 @@ pub struct SweepSpec {
     /// whether a cell is derived or reloaded — and the run's hit/miss
     /// stats come back as [`SweepReport::cache`].
     pub cache_dir: Option<PathBuf>,
+    /// Attach side-FIFO depth figures to every cell (the CLI's `--fifo`):
+    /// the modeled [`crate::model::fifo::fifo_depths`] bounds, and — when
+    /// the cell also simulates ([`SweepSpec::frames`]) — the simulator's
+    /// observed per-FIFO peak occupancies, captured by forcing
+    /// [`SimOptions::track_fifo`] on for the measurement run. `false`
+    /// (default) keeps cells, JSON documents, *and cache keys*
+    /// byte-identical to pre-FIFO trajectories.
+    pub fifo: bool,
 }
 
 impl Default for SweepSpec {
@@ -169,6 +177,7 @@ impl Default for SweepSpec {
             jobs: 1,
             clocks_hz: Vec::new(),
             cache_dir: None,
+            fifo: false,
         }
     }
 }
@@ -474,8 +483,10 @@ impl SweepSpec {
     /// name/length/total MACs changes the key), the full platform budget
     /// object (SRAM / DSP / clock / name), granularity, requested
     /// simulation depth, effective simulator options, and the clock-curve
-    /// axis. Changing *any* component changes the key, so a stale hit is
-    /// structurally impossible (property-tested in
+    /// axis. The `--fifo` request keys in only when set (a `"fifo": true`
+    /// marker), so pre-FIFO entries keep warm-hitting non-`--fifo` sweeps
+    /// byte-for-byte. Changing *any* component changes the key, so a
+    /// stale hit is structurally impossible (property-tested in
     /// `rust/tests/proptests.rs`); [`SweepSpec::run`] additionally
     /// re-checks the reconstructed network verbatim at hit time.
     fn cell_key(
@@ -502,6 +513,11 @@ impl SweepSpec {
             "clocks_hz".to_string(),
             Json::Arr(self.clocks_hz.iter().map(|&hz| Json::Num(hz)).collect()),
         );
+        // Only `--fifo` runs carry the marker: non-FIFO keys (and the
+        // entries they name) stay byte-identical to pre-FIFO caches.
+        if self.fifo {
+            m.insert("fifo".to_string(), Json::Bool(true));
+        }
         m.insert(
             "frames".to_string(),
             match frames_req {
@@ -574,24 +590,49 @@ impl SweepSpec {
         // A deadlocked simulation (possible only under non-default
         // `sim_options`) is recorded as an explicit per-cell error,
         // distinguishable from a model-only sweep, rather than poisoning
-        // the run.
+        // the run. A `--fifo` measurement forces `track_fifo` on for the
+        // same single run — occupancy tracking never changes the stats
+        // (pinned by `skip_on_off_stats_identical_across_zoo`), so the
+        // headline figures stay byte-identical to a non-FIFO sweep's.
+        let mut fifo_peaks = None;
         let (sim, sim_error) = match frames_req {
             None => (None, None),
-            Some(frames) => match design.simulate(frames) {
-                Ok(st) => (
-                    Some(SimFigures {
-                        frames,
-                        fps: st.fps(platform.clock_hz),
-                        mac_efficiency: st.mac_efficiency(),
-                    }),
-                    None,
+            Some(frames) => {
+                let base = *design.sim_options();
+                let opts = SimOptions { track_fifo: self.fifo || base.track_fifo, ..base };
+                match design.simulate_with(&opts, frames) {
+                    Ok(st) => {
+                        if self.fifo {
+                            fifo_peaks = Some(st.fifo_peak.clone());
+                        }
+                        (
+                            Some(SimFigures {
+                                frames,
+                                fps: st.fps(platform.clock_hz),
+                                mac_efficiency: st.mac_efficiency(),
+                            }),
+                            None,
+                        )
+                    }
+                    Err(e) => (None, Some(e.to_string())),
+                }
+            }
+        };
+        let fifo = if self.fifo {
+            Some(FifoFigures {
+                report: crate::model::fifo::fifo_depths(
+                    design.network(),
+                    design.ce_plan(),
+                    design.sim_options().scheme,
                 ),
-                Err(e) => (None, Some(e.to_string())),
-            },
+                peaks: fifo_peaks,
+            })
+        } else {
+            None
         };
         let clock_curve =
             throughput::clock_curve(design.network(), design.allocs(), &self.clocks_hz);
-        Ok(SweepCell { design, sim, sim_error, clock_curve })
+        Ok(SweepCell { design, sim, sim_error, clock_curve, fifo })
     }
 }
 
@@ -604,6 +645,20 @@ pub struct SimFigures {
     pub fps: f64,
     /// Actual (simulated) MAC efficiency.
     pub mac_efficiency: f64,
+}
+
+/// Side-FIFO figures of one cell (present only under [`SweepSpec::fifo`]):
+/// the modeled depth bounds, plus the simulator's observed per-FIFO peak
+/// occupancies when the cell also simulated. `peaks[i]` is the observed
+/// peak of `report.fifos[i]` — [`crate::model::fifo::fifo_depths`]
+/// enumerates FIFOs in exactly the simulator's pipeline order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FifoFigures {
+    /// Modeled per-FIFO depth bounds, in simulator pipeline order.
+    pub report: crate::model::fifo::FifoReport,
+    /// Observed per-FIFO peak occupancy (pixels) from the cell's
+    /// simulation; `None` for model-only sweeps or deadlocked cells.
+    pub peaks: Option<Vec<u64>>,
 }
 
 /// One (network, platform, granularity) cell: the compiled [`Design`]
@@ -619,6 +674,8 @@ pub struct SweepCell {
     /// FPS-vs-clock points at the spec's [`SweepSpec::clocks_hz`] axis
     /// (empty when no `--clocks` axis was requested).
     clock_curve: Vec<ClockPoint>,
+    /// Side-FIFO depth figures ([`SweepSpec::fifo`] sweeps only).
+    fifo: Option<FifoFigures>,
 }
 
 /// The stable JSON object of one clock-curve point — shared by the cell
@@ -631,6 +688,82 @@ pub(crate) fn clock_point_to_json(pt: &ClockPoint) -> Json {
     p.insert("gops".to_string(), Json::Num(pt.gops));
     p.insert("peak_gops".to_string(), Json::Num(pt.peak_gops));
     Json::Obj(p)
+}
+
+/// The stable JSON object of one cell's side-FIFO figures — shared by the
+/// cell document serializer and the [`cache`] entry format so the two can
+/// never drift field-by-field. `peak_px` is `Null` for model-only cells.
+pub(crate) fn fifo_figures_to_json(fifo: &FifoFigures) -> Json {
+    let fifos = fifo
+        .report
+        .fifos
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let mut m = BTreeMap::new();
+            m.insert("bytes".to_string(), Json::Num(f.bytes as f64));
+            m.insert("channels".to_string(), Json::Num(f.channels as f64));
+            m.insert("depth_px".to_string(), Json::Num(f.depth_px as f64));
+            m.insert("margin_px".to_string(), Json::Num(f.margin_px as f64));
+            m.insert("name".to_string(), Json::Str(f.name.clone()));
+            m.insert("on_chip".to_string(), Json::Bool(f.on_chip));
+            m.insert(
+                "peak_px".to_string(),
+                match &fifo.peaks {
+                    Some(p) => Json::Num(p[i] as f64),
+                    None => Json::Null,
+                },
+            );
+            m.insert("rate_px".to_string(), Json::Num(f.rate_px as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut m = BTreeMap::new();
+    m.insert("fifos".to_string(), Json::Arr(fifos));
+    m.insert("total_bytes".to_string(), Json::Num(fifo.report.total_bytes() as f64));
+    Json::Obj(m)
+}
+
+/// Inverse of [`fifo_figures_to_json`], for the [`cache`] warm path.
+pub(crate) fn fifo_figures_from_json(j: &Json) -> Result<FifoFigures, ReproError> {
+    let entries = j
+        .get("fifos")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ReproError::cache_io("cache entry: missing array fifo/\"fifos\""))?;
+    let mut fifos = Vec::with_capacity(entries.len());
+    let mut peaks = Vec::with_capacity(entries.len());
+    let mut any_peak = false;
+    for e in entries {
+        let num = |key: &str| {
+            e.field_f64(key)
+                .ok_or_else(|| ReproError::cache_io(format!("cache entry: missing fifo {key:?}")))
+        };
+        let name = match e.get("name") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => return Err(ReproError::cache_io("cache entry: missing fifo \"name\"")),
+        };
+        let on_chip = matches!(e.get("on_chip"), Some(Json::Bool(true)));
+        fifos.push(crate::model::fifo::FifoDepth {
+            name,
+            on_chip,
+            rate_px: num("rate_px")? as u64,
+            margin_px: num("margin_px")? as u64,
+            depth_px: num("depth_px")? as u64,
+            channels: num("channels")? as usize,
+            bytes: num("bytes")? as u64,
+        });
+        match e.get("peak_px") {
+            Some(Json::Num(p)) => {
+                any_peak = true;
+                peaks.push(*p as u64);
+            }
+            _ => peaks.push(0),
+        }
+    }
+    Ok(FifoFigures {
+        report: crate::model::fifo::FifoReport { fifos },
+        peaks: if any_peak { Some(peaks) } else { None },
+    })
 }
 
 /// File-name-safe lowercase slug of a platform/network name.
@@ -659,6 +792,11 @@ impl SweepCell {
     /// without a `--clocks` axis).
     pub fn clock_curve(&self) -> &[ClockPoint] {
         &self.clock_curve
+    }
+
+    /// The cell's side-FIFO figures (`--fifo` sweeps only).
+    pub fn fifo(&self) -> Option<&FifoFigures> {
+        self.fifo.as_ref()
     }
 
     pub fn network_name(&self) -> &str {
@@ -723,6 +861,11 @@ impl SweepCell {
         put("dram_bytes", Json::Num(d.dram_bytes() as f64));
         put("dsp_utilization", Json::Num(self.dsp_utilization()));
         put("dsps", Json::Num(d.parallelism().dsps as f64));
+        // Only `--fifo` sweeps carry the key, so non-FIFO documents stay
+        // byte-identical to pre-FIFO trajectories.
+        if let Some(fifo) = &self.fifo {
+            put("fifo", fifo_figures_to_json(fifo));
+        }
         put("fits_sram", Json::Bool(self.fits_sram()));
         put("fps", Json::Num(p.fps));
         put("gops", Json::Num(p.gops));
@@ -949,6 +1092,13 @@ pub struct Objectives {
     /// [`Objectives::dominates`]; `Some` for every [`pareto_clocks`]
     /// candidate.
     pub clock_hz: Option<f64>,
+    /// Modeled side-FIFO footprint in bytes (minimize) —
+    /// [`crate::model::fifo::FifoReport::total_bytes`], the inter-CE
+    /// buffering Eq 12 does not count. `Some` only for cells of a
+    /// [`SweepSpec::fifo`] sweep; like the clock axis it participates in
+    /// [`Objectives::dominates`] only when **both** vectors carry it, so
+    /// non-`--fifo` analyses are unchanged.
+    pub fifo_bytes: Option<u64>,
 }
 
 impl Objectives {
@@ -959,6 +1109,7 @@ impl Objectives {
             fps: cell.design().predicted().fps,
             dram_bytes: cell.design().dram_bytes(),
             clock_hz: None,
+            fifo_bytes: cell.fifo().map(|f| f.report.total_bytes()),
         }
     }
 
@@ -972,29 +1123,36 @@ impl Objectives {
             fps: point.fps,
             dram_bytes: cell.design().dram_bytes(),
             clock_hz: Some(point.clock_hz),
+            fifo_bytes: cell.fifo().map(|f| f.report.total_bytes()),
         }
     }
 
     /// Pareto dominance: `self` dominates `other` when it is no worse on
-    /// every objective (≤ SRAM, ≥ FPS, ≤ DRAM, and ≤ clock when both
-    /// carry the axis) and strictly better on at least one. Exact ties on
-    /// all axes dominate in neither direction — both candidates land on
-    /// the frontier. The clock axis only participates when **both**
-    /// vectors carry it, so 3-D and 4-D analyses never mix dominance
-    /// rules mid-comparison.
+    /// every objective (≤ SRAM, ≥ FPS, ≤ DRAM, and ≤ clock / ≤ FIFO
+    /// bytes when both carry those axes) and strictly better on at least
+    /// one. Exact ties on all axes dominate in neither direction — both
+    /// candidates land on the frontier. The optional axes only
+    /// participate when **both** vectors carry them, so 3-D, 4-D, and
+    /// `--fifo` analyses never mix dominance rules mid-comparison.
     pub fn dominates(&self, other: &Objectives) -> bool {
         let (clock_no_worse, clock_better) = match (self.clock_hz, other.clock_hz) {
+            (Some(a), Some(b)) => (a <= b, a < b),
+            _ => (true, false),
+        };
+        let (fifo_no_worse, fifo_better) = match (self.fifo_bytes, other.fifo_bytes) {
             (Some(a), Some(b)) => (a <= b, a < b),
             _ => (true, false),
         };
         let no_worse = self.sram_bytes <= other.sram_bytes
             && self.fps >= other.fps
             && self.dram_bytes <= other.dram_bytes
-            && clock_no_worse;
+            && clock_no_worse
+            && fifo_no_worse;
         let strictly_better = self.sram_bytes < other.sram_bytes
             || self.fps > other.fps
             || self.dram_bytes < other.dram_bytes
-            || clock_better;
+            || clock_better
+            || fifo_better;
         no_worse && strictly_better
     }
 }
@@ -1412,6 +1570,9 @@ mod tests {
         let mut clocks = spec.clone();
         clocks.clocks_hz = vec![100.0e6];
         keys.push(clocks.cell_key(&net, &Platform::zc706(), Granularity::Fgpm, None));
+        let mut fifo = spec.clone();
+        fifo.fifo = true;
+        keys.push(fifo.cell_key(&net, &Platform::zc706(), Granularity::Fgpm, None));
         // Structural drift invisible to name/layer-count/total-MACs: two
         // layers swapped must still change the key (the Debug digest).
         let mut swapped = nets::shufflenet_v2();
@@ -1509,14 +1670,78 @@ mod tests {
     }
 
     #[test]
+    fn fifo_figures_appear_only_when_requested_and_bound_observed_peaks() {
+        // A non-FIFO sweep's document must stay byte-identical to the
+        // pre-FIFO format: no "fifo" key anywhere, and its cell keys
+        // unchanged (warm caches built before --fifo keep hitting).
+        let mut spec =
+            SweepSpec::from_csv(Some("shufflenet_v2"), Some("zc706"), Some("fgpm")).unwrap();
+        spec.frames = Some(2);
+        let plain = spec.run();
+        assert!(!plain.to_json().contains("\"fifo\""));
+        let plain_key = spec
+            .cell_key(&nets::shufflenet_v2(), &Platform::zc706(), Granularity::Fgpm, Some(2))
+            .to_string();
+        assert!(!plain_key.contains("\"fifo\""));
+        // The --fifo run carries modeled depths + observed peaks, every
+        // peak within its modeled bound, and all *other* headline figures
+        // byte-identical to the plain run's.
+        spec.fifo = true;
+        let report = spec.run();
+        let cell = &report.cells[0];
+        let fifo = cell.fifo().expect("--fifo sweeps attach figures");
+        assert!(!fifo.report.is_empty(), "shufflenet_v2 has side FIFOs");
+        let peaks = fifo.peaks.as_ref().expect("simulated cells observe peaks");
+        assert_eq!(peaks.len(), fifo.report.fifos.len());
+        for (f, &peak) in fifo.report.fifos.iter().zip(peaks) {
+            assert!(peak <= f.depth_px, "{}: observed {peak} > modeled {}", f.name, f.depth_px);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"fifo\"") && json.contains("\"peak_px\""));
+        assert_eq!(
+            Objectives::of(cell).fifo_bytes,
+            Some(fifo.report.total_bytes()),
+            "the optional Pareto axis is fed by the modeled total"
+        );
+        // Stripping the fifo member of every cell object recovers the
+        // plain document exactly — the figures are purely additive.
+        let stripped = {
+            let mut c = cell.clone();
+            c.fifo = None;
+            SweepReport { cells: vec![c], failures: vec![], cache: None }.to_json()
+        };
+        assert_eq!(stripped, plain.to_json());
+        // Model-only --fifo sweeps still carry depths, without peaks.
+        spec.frames = None;
+        let model_only = spec.run();
+        let f = model_only.cells[0].fifo().unwrap();
+        assert!(f.peaks.is_none() && !f.report.is_empty());
+        assert!(model_only.to_json().contains("\"peak_px\":null"));
+        // The JSON round-trips through the cache deserializer.
+        let back = fifo_figures_from_json(&fifo_figures_to_json(fifo)).unwrap();
+        assert_eq!(&back, fifo);
+    }
+
+    #[test]
     fn clock_axis_only_participates_when_both_sides_carry_it() {
-        let lean = Objectives { sram_bytes: 10, fps: 5.0, dram_bytes: 10, clock_hz: None };
-        let rich = Objectives { sram_bytes: 10, fps: 5.0, dram_bytes: 10, clock_hz: Some(1.0) };
+        let lean = Objectives {
+            sram_bytes: 10,
+            fps: 5.0,
+            dram_bytes: 10,
+            clock_hz: None,
+            fifo_bytes: None,
+        };
+        let rich = Objectives { clock_hz: Some(1.0), ..lean };
         // 3-D ties stay mutually non-dominating regardless of one side's
         // extra axis; with both axes present, the lower clock wins.
         assert!(!lean.dominates(&rich) && !rich.dominates(&lean));
         let slower = Objectives { clock_hz: Some(2.0), ..rich };
         assert!(rich.dominates(&slower) && !slower.dominates(&rich));
+        // The FIFO axis obeys the same both-sides rule.
+        let small = Objectives { fifo_bytes: Some(100), ..lean };
+        assert!(!lean.dominates(&small) && !small.dominates(&lean));
+        let big = Objectives { fifo_bytes: Some(200), ..lean };
+        assert!(small.dominates(&big) && !big.dominates(&small));
     }
 
     #[test]

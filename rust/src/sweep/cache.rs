@@ -17,7 +17,9 @@
 //! every input that can change a cell's content — network name plus a
 //! structural fingerprint, the full platform budget object (SRAM, DSPs,
 //! clock, name), granularity, simulated frame count, simulator options,
-//! and the `--clocks` curve axis. The key hashes (twice-seeded FNV-1a)
+//! the `--clocks` curve axis, and (only when requested, so pre-FIFO
+//! entries keep hitting) the `--fifo` figure request. The key hashes
+//! (twice-seeded FNV-1a)
 //! into the entry file name, **and** is stored verbatim inside the entry:
 //! a load only hits when the stored key equals the probe key exactly. The
 //! cell payload additionally carries its own FNV-1a checksum (`check`),
@@ -334,6 +336,11 @@ fn cell_to_json(cell: &SweepCell) -> Json {
             }
         },
     );
+    // Only --fifo cells carry the key: entries of non-FIFO sweeps stay
+    // byte-identical to pre-FIFO caches (same bytes, same checksum).
+    if let Some(fifo) = &cell.fifo {
+        m.insert("fifo".to_string(), super::fifo_figures_to_json(fifo));
+    }
     m.insert(
         "sim_error".to_string(),
         match &cell.sim_error {
@@ -391,7 +398,13 @@ fn cell_from_json(j: &Json) -> Result<SweepCell, ReproError> {
             })
         })
         .collect::<Result<Vec<_>, ReproError>>()?;
-    Ok(SweepCell { design, sim, sim_error, clock_curve })
+    // Optional: entries stored before --fifo (or by non-FIFO sweeps)
+    // simply carry no figures — never a parse failure.
+    let fifo = match j.get("fifo") {
+        None | Some(Json::Null) => None,
+        Some(f) => Some(super::fifo_figures_from_json(f)?),
+    };
+    Ok(SweepCell { design, sim, sim_error, clock_curve, fifo })
 }
 
 #[cfg(test)]

@@ -12,6 +12,11 @@
 //!   artifacts), report a 100% hit rate, and perform **zero** Algorithm 1
 //!   / Algorithm 2 re-derivations, measured via the
 //!   [`repro::alloc::derivations`] counters.
+//! * **FIFO soundness and tightness** (ISSUE 9) — on the same 12 baseline
+//!   cells, every [`repro::model::fifo`] depth bound must contain the
+//!   simulator's observed peak occupancy of the same FIFO (soundness),
+//!   and every on-chip bound must sit within a pinned slack factor of the
+//!   observed peak (tightness: the model is not vacuously over-sizing).
 //!
 //! The counter-delta assertions require that no other Alg 1/Alg 2 runs
 //! happen concurrently in this process, so every test in this binary
@@ -22,6 +27,7 @@ use std::path::PathBuf;
 use std::sync::Mutex;
 
 use repro::alloc::derivations;
+use repro::sim::SimOptions;
 use repro::sweep::{CacheStats, SweepSpec};
 use repro::{nets, Design, Platform};
 
@@ -166,4 +172,76 @@ fn warm_cache_restores_simulated_figures_byte_identically() {
     assert_eq!(probe.cache, Some(CacheStats { hits: 0, misses: 1, store_errors: 0 }));
     assert!(probe.cells[0].sim().is_none());
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Pinned slack of the FIFO tightness check: an on-chip modeled depth may
+/// exceed the simulator's observed peak occupancy by at most this factor
+/// once the quantum-skew margin is set aside. The margin is excluded
+/// because it provisions for worst-case transfer-quantum interleavings a
+/// 2-frame run need not exercise; the factor itself absorbs the model's
+/// conservative per-layer startup-latency sum against the sim's actual
+/// drain schedule. Off-chip WRCE holds are deliberate 2-frame ping-pong
+/// provisions and are exempt from tightness (soundness still applies).
+const FIFO_SLACK_FACTOR: u64 = 4;
+
+/// The ISSUE 9 acceptance criterion: on all 12 committed baseline cells,
+/// every modeled FIFO depth bounds the sim's observed peak occupancy from
+/// above (soundness), and on-chip bounds sit within
+/// [`FIFO_SLACK_FACTOR`] of the peak (no vacuous over-sizing). The
+/// modeled report and the tracked stats pair index-by-index because
+/// `model::fifo::fifo_depths` mirrors `build_pipeline`'s FIFO
+/// construction order; the name assertions pin that pairing.
+#[test]
+fn every_baseline_cell_fifo_model_bounds_observed_peaks() {
+    let _guard = seq();
+    for net in nets::all_networks() {
+        let short = nets::short_name(&net.name).expect("zoo net has a short name");
+        for platform in Platform::list() {
+            let file = format!("{short}_{}_fgpm.design.json", platform.name);
+            let path = baseline_dir().join(&file);
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            let design = Design::from_json(&text).unwrap_or_else(|e| panic!("{file}: {e}"));
+            let modeled = design.fifo_report();
+            let opts = SimOptions { track_fifo: true, ..*design.sim_options() };
+            let stats = design
+                .simulate_with(&opts, 2)
+                .unwrap_or_else(|e| panic!("{file}: tracked sim deadlocked: {e}"));
+            assert_eq!(
+                stats.fifo_names.len(),
+                modeled.fifos.len(),
+                "{file}: sim tracks a different FIFO count than the model sizes"
+            );
+            for (i, f) in modeled.fifos.iter().enumerate() {
+                assert_eq!(
+                    stats.fifo_names[i], f.name,
+                    "{file}: FIFO #{i} pairing drifted between sim and model"
+                );
+                assert_eq!(
+                    stats.fifo_capacity[i], f.depth_px,
+                    "{file}: {}: provisioned capacity diverged from the modeled depth",
+                    f.name
+                );
+                let peak = stats.fifo_peak[i];
+                assert!(
+                    peak <= f.depth_px,
+                    "{file}: {}: observed peak {peak} px exceeds the modeled \
+                     depth bound {} px (model is unsound)",
+                    f.name,
+                    f.depth_px
+                );
+                if f.on_chip {
+                    assert!(
+                        f.depth_px <= peak * FIFO_SLACK_FACTOR + f.margin_px,
+                        "{file}: {}: modeled depth {} px is more than {FIFO_SLACK_FACTOR}x \
+                         the observed peak {peak} px plus the {} px margin \
+                         (vacuous over-sizing)",
+                        f.name,
+                        f.depth_px,
+                        f.margin_px
+                    );
+                }
+            }
+        }
+    }
 }

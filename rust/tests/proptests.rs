@@ -4,7 +4,7 @@
 
 use repro::alloc::{self, fgpm, parallelism::BudgetKind, Granularity};
 use repro::model::memory::{CePlan, MemoryModelCfg};
-use repro::model::{dram, memory, throughput};
+use repro::model::{dram, fifo, memory, throughput};
 use repro::nets;
 use repro::sim::{self, SimOptions};
 use repro::util::json::Json;
@@ -228,6 +228,67 @@ fn prop_sim_deadlock_free_on_random_configs() {
                 }
                 Err(e) => Err(format!("deadlock: {e}")),
             }
+        },
+    );
+}
+
+/// ISSUE 9: the FIFO-depth model is sound against the simulator across
+/// random boundaries, granularities, and DSP budgets over the full zoo —
+/// the observed per-FIFO peak occupancy never exceeds the modeled depth
+/// bound, the provisioned capacities are exactly the modeled depths (the
+/// pairing the differential suite relies on), and a model-sized pipeline
+/// never deadlocks.
+#[test]
+fn prop_fifo_model_bounds_sim_peaks_on_random_configs() {
+    let nets_all = nets::all_networks();
+    check(
+        "fifo_model_bounds",
+        6,
+        |r: &mut Rng| {
+            (
+                r.range(0, nets_all.len() - 1),
+                r.range(0, 64),
+                r.range(100, 1200),
+                *r.pick(&[Granularity::Fgpm, Granularity::Factorized]),
+            )
+        },
+        |&(ni, bfrac, dsp, gran)| {
+            let net = &nets_all[ni];
+            let boundary = bfrac.min(net.layers.len());
+            let plan = CePlan { boundary };
+            let p = alloc::dynamic_parallelism_tuning(net, &plan, dsp, gran);
+            let opts = SimOptions { track_fifo: true, ..SimOptions::optimized() };
+            let modeled = fifo::fifo_depths(net, &plan, opts.scheme);
+            let stats = sim::simulate(net, &p.allocs, &plan, &opts, 2)
+                .map_err(|e| format!("model-sized pipeline deadlocked: {e}"))?;
+            if stats.fifo_peak.len() != modeled.fifos.len() {
+                return Err(format!(
+                    "sim tracks {} FIFOs, model sizes {}",
+                    stats.fifo_peak.len(),
+                    modeled.fifos.len()
+                ));
+            }
+            for (i, f) in modeled.fifos.iter().enumerate() {
+                if stats.fifo_names[i] != f.name {
+                    return Err(format!(
+                        "FIFO #{i} pairing drifted: sim {:?} vs model {:?}",
+                        stats.fifo_names[i], f.name
+                    ));
+                }
+                if stats.fifo_capacity[i] != f.depth_px {
+                    return Err(format!(
+                        "{}: capacity {} != modeled depth {}",
+                        f.name, stats.fifo_capacity[i], f.depth_px
+                    ));
+                }
+                if stats.fifo_peak[i] > f.depth_px {
+                    return Err(format!(
+                        "{}: observed peak {} px exceeds modeled depth {} px",
+                        f.name, stats.fifo_peak[i], f.depth_px
+                    ));
+                }
+            }
+            Ok(())
         },
     );
 }
