@@ -11,24 +11,105 @@
 //!   12-cell catalog matrix, with hit-rate and byte-identity assertions;
 //! * streaming-coordinator overhead vs the busiest worker (only when
 //!   artifacts exist).
+//!
+//! Environment knobs (the BENCH_sim.json trajectory, EXPERIMENTS.md §3):
+//!
+//! * `REPRO_BENCH_JSON=path` — write the simulator section's records as a
+//!   machine-readable `BENCH_sim.json` document (stepped-vs-event
+//!   ms-per-frame, the measured speedup ratio, and the warm-marginal
+//!   per-frame cost).
+//! * `REPRO_BENCH_SMOKE=1` — CI check mode: tiny frame counts and time
+//!   budgets, and only the simulator section runs (enough to validate the
+//!   harness and the emitted schema, not to publish numbers).
+
+use std::collections::BTreeMap;
 
 use repro::alloc::{self, Granularity};
 use repro::model::memory::MemoryModelCfg;
-use repro::sim::{self, SimOptions};
-use repro::util::bench::time;
+use repro::sim::{self, SimOptions, SimRunner};
+use repro::util::bench::{time, Sample};
+use repro::util::json::Json;
 use repro::{coordinator, nets, runtime, Design, Platform};
+
+/// One BENCH_sim.json record out of a [`Sample`].
+fn record(s: &Sample, engine: &str, frames: u64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(s.name.clone()));
+    m.insert("engine".to_string(), Json::Str(engine.to_string()));
+    m.insert("median_ms".to_string(), Json::Num(s.median_ms));
+    m.insert("min_ms".to_string(), Json::Num(s.min_ms));
+    m.insert("max_ms".to_string(), Json::Num(s.max_ms));
+    m.insert("ms_per_frame".to_string(), Json::Num(s.median_ms / frames as f64));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
 
 fn main() {
     println!("== sim_hotpath: performance of the reproduction stack itself ==");
 
+    // CI check mode: prove the harness runs and the schema is valid
+    // without paying publishable-number budgets.
+    let smoke = std::env::var("REPRO_BENCH_SMOKE").is_ok();
     let net = nets::mobilenet_v2();
     let design = Design::builder(&net).platform(Platform::zc706()).build();
 
-    let frames = 10u64;
-    let s = time("sim_mbv2_zc706_10frames", 15000.0, || {
+    let frames = if smoke { 3u64 } else { 10u64 };
+    let sim_budget = if smoke { 1500.0 } else { 15000.0 };
+    let event = time("sim_mbv2_zc706_10frames", sim_budget, || {
         design.simulate(frames).unwrap();
     });
-    println!("  -> {:.2} ms per simulated frame", s.median_ms / frames as f64);
+    println!("  -> {:.2} ms per simulated frame", event.median_ms / frames as f64);
+
+    // The cycle-stepped reference engine on the identical run: the
+    // "before" row of the BENCH_sim.json trajectory.
+    let stepped_opts = SimOptions { event_driven: false, ..*design.sim_options() };
+    let stepped = time("sim_mbv2_zc706_10frames_stepped", sim_budget, || {
+        design.simulate_with(&stepped_opts, frames).unwrap();
+    });
+    let speedup = stepped.median_ms / event.median_ms;
+    println!("  -> event-driven speedup {speedup:.2}x over the stepped engine");
+
+    // Warm-state reuse: pay the pipeline fill once, then measure the
+    // marginal cost of the remaining frames from a warm clone.
+    let pipeline =
+        sim::build_pipeline(&net, design.allocs(), design.ce_plan(), design.sim_options());
+    let mut warm_runner = SimRunner::new(&pipeline, frames).unwrap();
+    warm_runner.advance_to(1).unwrap();
+    let warm = time("sim_mbv2_zc706_warm_marginal", sim_budget / 2.0, || {
+        let mut r = warm_runner.clone();
+        r.advance_to(frames).unwrap();
+    });
+    let marginal_frames = frames - 1;
+    println!(
+        "  -> {:.2} ms per marginal frame from warm state",
+        warm.median_ms / marginal_frames as f64
+    );
+
+    if let Ok(path) = std::env::var("REPRO_BENCH_JSON") {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("sim_mbv2_zc706_10frames".to_string()));
+        doc.insert("frames".to_string(), Json::Num(frames as f64));
+        doc.insert(
+            "records".to_string(),
+            Json::Arr(vec![
+                record(&stepped, "stepped", frames),
+                record(&event, "event_driven", frames),
+                record(&warm, "event_driven_warm", marginal_frames),
+            ]),
+        );
+        doc.insert("required_speedup".to_string(), Json::Num(2.0));
+        doc.insert("speedup_stepped_over_event".to_string(), Json::Num(speedup));
+        doc.insert("trajectory".to_string(), Json::Str("sim".to_string()));
+        doc.insert("version".to_string(), Json::Num(1.0));
+        std::fs::write(&path, format!("{}\n", Json::Obj(doc)))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("  -> wrote {path}");
+    }
+
+    if smoke {
+        println!("== smoke mode: skipping the non-sim sections ==");
+        return;
+    }
 
     time("pipeline_build_mbv2", 3000.0, || {
         let _ = sim::build_pipeline(&net, design.allocs(), design.ce_plan(), &SimOptions::optimized());

@@ -63,7 +63,7 @@ use crate::alloc::{
 use crate::model::memory::{self, CePlan, FmScheme, MemoryModelCfg, SramReport};
 use crate::model::throughput::{self, Performance};
 use crate::nets::{self, Network};
-use crate::sim::{self, Deadlock, PaddingMode, SimOptions, SimStats};
+use crate::sim::{self, PaddingMode, SimOptions, SimStats};
 use crate::util::error::ReproError;
 use crate::util::json::Json;
 use crate::{edge, zc706, zcu102, CLOCK_HZ};
@@ -433,13 +433,15 @@ impl Design {
         crate::model::fifo::fifo_depths(&self.net, &self.ce_plan, self.sim_options.scheme)
     }
 
-    /// Cycle-simulate the design with its own [`SimOptions`].
-    pub fn simulate(&self, frames: u64) -> Result<SimStats, Deadlock> {
+    /// Cycle-simulate the design with its own [`SimOptions`]. Degenerate
+    /// frame counts are [`ReproError::Config`]; a pipeline deadlock is
+    /// [`ReproError::Simulation`].
+    pub fn simulate(&self, frames: u64) -> Result<SimStats, ReproError> {
         self.simulate_with(&self.sim_options, frames)
     }
 
     /// Cycle-simulate with explicit options (ablations, Fig 17).
-    pub fn simulate_with(&self, opts: &SimOptions, frames: u64) -> Result<SimStats, Deadlock> {
+    pub fn simulate_with(&self, opts: &SimOptions, frames: u64) -> Result<SimStats, ReproError> {
         sim::simulate(&self.net, &self.parallelism.allocs, &self.ce_plan, opts, frames)
     }
 
@@ -765,6 +767,9 @@ pub(crate) fn sim_options_to_json(o: &SimOptions) -> Json {
     if !o.cycle_skip {
         fields.push(("cycle_skip", Json::Bool(false)));
     }
+    if !o.event_driven {
+        fields.push(("event_driven", Json::Bool(false)));
+    }
     obj(fields)
 }
 
@@ -787,7 +792,8 @@ fn sim_options_from_json(j: &Json) -> Result<SimOptions, ReproError> {
     // in any artifact using the defaults).
     let track_fifo = matches!(j.get("track_fifo"), Some(Json::Bool(true)));
     let cycle_skip = !matches!(j.get("cycle_skip"), Some(Json::Bool(false)));
-    Ok(SimOptions { padding, scheme, stride_extra_line, track_fifo, cycle_skip })
+    let event_driven = !matches!(j.get("event_driven"), Some(Json::Bool(false)));
+    Ok(SimOptions { padding, scheme, stride_extra_line, track_fifo, cycle_skip, event_driven })
 }
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
@@ -876,11 +882,18 @@ mod tests {
         let d = Design::builder(&nets::mobilenet_v2()).build();
         let text = d.to_json();
         assert!(!text.contains("track_fifo") && !text.contains("cycle_skip"), "{text}");
-        let opts = SimOptions { track_fifo: true, cycle_skip: false, ..SimOptions::optimized() };
+        assert!(!text.contains("event_driven"), "{text}");
+        let opts = SimOptions {
+            track_fifo: true,
+            cycle_skip: false,
+            event_driven: false,
+            ..SimOptions::optimized()
+        };
         let d2 = Design::builder(&nets::mobilenet_v2()).sim_options(opts).build();
         let text2 = d2.to_json();
         assert!(text2.contains("\"track_fifo\":true"), "{text2}");
         assert!(text2.contains("\"cycle_skip\":false"), "{text2}");
+        assert!(text2.contains("\"event_driven\":false"), "{text2}");
         let r = Design::from_json(&text2).unwrap();
         assert_eq!(*r.sim_options(), opts);
         assert_eq!(r.to_json(), text2);

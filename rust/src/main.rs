@@ -359,8 +359,9 @@ fn main() -> ExitCode {
                 Ok(f) => f,
                 Err(e) => return fail(&e),
             };
-            // The simulator needs at least one measured frame; 0 would
-            // panic deep in the warmup arithmetic instead of erroring.
+            // The simulator needs at least one measured frame; it returns
+            // a typed config error for 0, but the flag-shaped message here
+            // is friendlier (and fails before --save writes anything).
             if frames == 0 {
                 return fail("--frames: must be >= 1");
             }

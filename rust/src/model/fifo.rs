@@ -1,7 +1,8 @@
 //! Side-FIFO depth estimation — the inter-CE sizing the SRAM model
 //! (Eq 12) does not cover but real dataflow builds live or die by
-//! (undersizing is exactly the [`crate::sim::Deadlock`] failure mode the
-//! paper's delayed-buffer sizing exists to prevent).
+//! (undersizing is exactly the pipeline-deadlock failure mode — the typed
+//! simulation error out of [`crate::sim::Pipeline::run`] — the paper's
+//! delayed-buffer sizing exists to prevent).
 //!
 //! A *side FIFO* is any stream that leaves the main CE chain: an SCB
 //! shortcut snapshot delayed until its join layer (§III-B, Fig 6), or a

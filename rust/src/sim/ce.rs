@@ -284,4 +284,12 @@ impl CeState {
     pub fn occupancy(&self) -> u64 {
         self.recv - self.freed
     }
+
+    /// Whether every output position of the run has been issued (counting
+    /// the in-flight quantum) — the CE will never occupy its PE array
+    /// again. Shared by both engines' issue logic and the stepped
+    /// engine's cycle-skip verdict replay.
+    pub fn all_work_issued(&self, outputs_per_frame: u64, frames: u64) -> bool {
+        self.next_out + self.pending_out >= outputs_per_frame * frames
+    }
 }

@@ -1,4 +1,6 @@
-//! The cycle-stepped pipeline engine.
+//! The streaming pipeline engine — an event-driven fast path
+//! ([`SimRunner`]) and the cycle-stepped reference engine, bit-identical
+//! by construction and locked together by the differential suites.
 //!
 //! Entities: a source streaming frames at one pixel per cycle, one
 //! simulated CE per network layer (plus an optional order-converter CE at
@@ -7,8 +9,23 @@
 //! per cycle with credit-based backpressure; a transfer out of a branch
 //! point commits to the main consumer and every attached side FIFO
 //! atomically.
+//!
+//! The reference engine evaluates every CE on every cycle in three
+//! phases (A: issue/tick compute quanta, B: paced input acceptance +
+//! transfers, then the drain pass for untapped producers). The
+//! event-driven engine reproduces the exact same sweep order through a
+//! min-heap keyed on `(cycle, phase, ce)` and only ever evaluates a CE
+//! when something it depends on changed (a quantum completion, a pacing
+//! release, an upstream transfer); the per-cycle stall counters the
+//! stepped engine accumulates are credited in bulk from the parked
+//! verdicts, which stay frozen between wake-ups by the same argument the
+//! stepped engine's no-progress cycle-skip relies on.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use super::ce::{CeClass, CeConfig, CeState};
+use crate::util::error::ReproError;
 
 /// Where a CE's main input stream comes from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,10 +72,15 @@ pub struct Pipeline {
     /// (`fifo_*` fields stay empty when off, and the hot loop never
     /// touches the counters).
     pub track_fifo: bool,
-    /// Enable the no-progress cycle-skip fast path; stats are identical
-    /// either way, so this exists only to exercise the cycle-exact slow
-    /// path in isolation.
+    /// Enable the stepped engine's no-progress cycle-skip fast path;
+    /// stats are identical either way, so this exists only to exercise
+    /// the cycle-exact slow path in isolation.
     pub cycle_skip: bool,
+    /// Run the event-driven engine ([`SimRunner`]); `false` falls back to
+    /// the cycle-stepped reference engine. Stats are bit-identical either
+    /// way — the knob exists for differential testing and for profiling
+    /// the engines against each other.
+    pub event_driven: bool,
 }
 
 /// Simulation outcome statistics.
@@ -97,7 +119,9 @@ pub struct SimStats {
 
 impl SimStats {
     /// Actual whole-design MAC efficiency over the steady-state period:
-    /// true MACs per frame over (period x total PEs).
+    /// true MACs per frame over (period x total PEs). `0.0` when the
+    /// design carries no PE arrays at all (an all-LUT pipeline) or the
+    /// period is degenerate — never NaN.
     pub fn mac_efficiency(&self) -> f64 {
         // Count only PE-array MACs (SCB adds run on LUT adders).
         let total_macs: u64 = self
@@ -108,19 +132,30 @@ impl SimStats {
             .map(|(&m, _)| m)
             .sum();
         let total_pes: usize = self.pes.iter().sum();
+        if total_pes == 0 || self.period_cycles <= 0.0 {
+            return 0.0;
+        }
         total_macs as f64 / (self.period_cycles * total_pes as f64)
     }
 
-    /// Per-CE actual efficiency (MAC CEs only; `None` for LUT datapaths).
+    /// Per-CE actual efficiency (MAC CEs only; `None` for LUT datapaths,
+    /// `Some(0.0)` on a degenerate period).
     pub fn layer_efficiency(&self, i: usize) -> Option<f64> {
         if self.pes[i] == 0 {
             return None;
         }
+        if self.period_cycles <= 0.0 {
+            return Some(0.0);
+        }
         Some(self.macs_per_frame[i] as f64 / (self.period_cycles * self.pes[i] as f64))
     }
 
-    /// Frames per second at the design clock.
+    /// Frames per second at the design clock (`0.0` on a degenerate
+    /// period rather than an infinity that would poison JSON output).
     pub fn fps(&self, clock_hz: f64) -> f64 {
+        if self.period_cycles <= 0.0 {
+            return 0.0;
+        }
         clock_hz / self.period_cycles
     }
 
@@ -130,27 +165,67 @@ impl SimStats {
     }
 }
 
-/// Error raised when the pipeline makes no progress (the deadlock the
-/// paper's delayed-buffer sizing is designed to prevent).
-#[derive(Debug)]
-pub struct Deadlock {
-    pub cycle: u64,
-    pub detail: String,
-}
-
-impl std::fmt::Display for Deadlock {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "pipeline deadlock at cycle {}: {}", self.cycle, self.detail)
+/// Steady-state period estimate shared by both engines: the mean
+/// completion gap over the measured (post-warm-up) frames. With a single
+/// measured frame the old estimate fell back to the *absolute* completion
+/// cycle — pipeline fill plus every prior period — which overstated the
+/// period severalfold; use the last inter-completion gap instead, and
+/// only fall back to the first completion cycle when one frame ran in
+/// total (nothing else is observable then).
+fn steady_period(completion: &[u64], warmup: u64) -> f64 {
+    let last = completion.len() - 1;
+    let w = (warmup as usize).min(last);
+    if last > w {
+        (completion[last] - completion[w]) as f64 / (last - w) as f64
+    } else if last >= 1 {
+        (completion[last] - completion[last - 1]) as f64
+    } else {
+        completion[0] as f64
     }
 }
 
-impl std::error::Error for Deadlock {}
+fn validate_frames(frames: u64) -> Result<(), ReproError> {
+    if frames == 0 {
+        return Err(ReproError::config(
+            "simulate: need at least 1 frame to measure (got frames = 0)",
+        ));
+    }
+    Ok(())
+}
+
+fn validate_warmup(frames: u64, warmup: u64) -> Result<(), ReproError> {
+    if warmup >= frames {
+        return Err(ReproError::config(format!(
+            "simulate: {frames} frame(s) with a {warmup}-frame warm-up leaves no \
+             measured frame (need frames > warmup)"
+        )));
+    }
+    Ok(())
+}
 
 impl Pipeline {
     /// Stream `frames` frames through the pipeline and collect stats.
     /// `warmup` frames are excluded from the steady-state period estimate.
-    pub fn run(&self, frames: u64, warmup: u64) -> Result<SimStats, Deadlock> {
-        assert!(frames > warmup, "need at least one measured frame");
+    ///
+    /// Degenerate arguments (`frames == 0`, `warmup >= frames`) return
+    /// [`ReproError::Config`]; a pipeline that stops making progress
+    /// returns [`ReproError::Simulation`] carrying the per-CE/per-FIFO
+    /// deadlock report (the failure the paper's delayed-buffer sizing is
+    /// designed to prevent).
+    pub fn run(&self, frames: u64, warmup: u64) -> Result<SimStats, ReproError> {
+        validate_frames(frames)?;
+        validate_warmup(frames, warmup)?;
+        if self.event_driven {
+            SimRunner::new(self, frames)?.finish(warmup)
+        } else {
+            self.run_stepped(frames, warmup)
+        }
+    }
+
+    /// The cycle-stepped reference engine: every CE evaluated on every
+    /// cycle. Kept verbatim as the differential baseline for
+    /// [`SimRunner`] (`event_driven: false` routes here).
+    fn run_stepped(&self, frames: u64, warmup: u64) -> Result<SimStats, ReproError> {
         let n = self.ces.len();
         let mut st: Vec<CeState> = vec![CeState::default(); n];
         let mut fifo_occ: Vec<u64> = self.fifos.iter().map(|f| f.occupancy).collect();
@@ -186,7 +261,7 @@ impl Pipeline {
                 if s.busy == 0 {
                     // Idle: try to issue the next quantum.
                     let of = outs[i];
-                    if s.next_out + s.pending_out >= of * frames {
+                    if s.all_work_issued(of, frames) {
                         continue; // all work done
                     }
                     let start = s.next_out;
@@ -390,7 +465,7 @@ impl Pipeline {
                         // the slow path would have bumped — this is what
                         // keeps skip-on and skip-off stats byte-identical.
                         let of = outs[i];
-                        if s.next_out + s.pending_out >= of * frames {
+                        if s.all_work_issued(of, frames) {
                             continue; // all work done: Phase A bumps nothing
                         }
                         let cfg = &self.ces[i];
@@ -415,22 +490,17 @@ impl Pipeline {
                 // horizon, where the skip advance used to trip this check
                 // before the pending completion landed (false deadlock).
                 if skip == u64::MAX && cycle - last_progress > horizon {
-                    let detail = self.deadlock_report(&st, &fifo_occ);
-                    return Err(Deadlock { cycle, detail });
+                    return Err(ReproError::simulation(format!(
+                        "pipeline deadlock at cycle {cycle}: {}",
+                        self.deadlock_report(&st, &fifo_occ)
+                    )));
                 }
             }
             cycle += 1;
         }
 
-        // Steady-state period over the measured frames.
-        let w = warmup as usize;
-        let period = if completion.len() > w + 1 {
-            (completion[completion.len() - 1] - completion[w]) as f64 / (completion.len() - 1 - w) as f64
-        } else {
-            completion[completion.len() - 1] as f64
-        };
         Ok(SimStats {
-            period_cycles: period,
+            period_cycles: steady_period(&completion, warmup),
             first_frame_cycles: completion[0],
             total_cycles: cycle,
             frames,
@@ -475,6 +545,591 @@ impl Pipeline {
     }
 }
 
+/// Event phases within a cycle, mirroring the stepped engine's sweep
+/// order: compute issue/complete, then input acceptance, then the drain
+/// pass for untapped producers.
+const PH_A: u8 = 0;
+const PH_B: u8 = 1;
+const PH_D: u8 = 2;
+
+/// Min-heap of `(cycle, phase, ce)` — `Reverse` flips `BinaryHeap`'s max
+/// ordering, and the tuple order reproduces the stepped engine's
+/// phase-A → phase-B → drain, index-ascending sweep within a cycle.
+type EventHeap = BinaryHeap<Reverse<(u64, u8, usize)>>;
+
+/// What verdict an idle CE is parked on, so the stall cycles the stepped
+/// engine would have accumulated one-by-one can be credited in bulk at
+/// the next wake-up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Park {
+    None,
+    Input,
+    Output,
+}
+
+/// Schedule a wake for `(phase, i)` at cycle `at`. `slot` holds the
+/// earliest pending wake per CE; a later request while an earlier one is
+/// pending is dropped — safe because every evaluation either re-arms its
+/// own next deadline (pacing) or is re-woken by the state change that
+/// made the later request (all wake edges are re-derived per event, not
+/// remembered).
+fn sched(heap: &mut EventHeap, slot: &mut [u64], phase: u8, i: usize, at: u64) {
+    if at < slot[i] {
+        slot[i] = at;
+        heap.push(Reverse((at, phase, i)));
+    }
+}
+
+/// The event-driven engine behind [`Pipeline::run`].
+///
+/// Holds the full mid-run pipeline state, so multi-frame studies can pay
+/// the pipeline fill once: [`SimRunner::advance_to`] runs the event loop
+/// up to a frame count, the runner is `Clone`, and a warm clone resumed
+/// with [`SimRunner::finish`] yields stats bit-identical to a cold run
+/// (pinned by `warm_runner_clone_resumes_identically`).
+#[derive(Clone)]
+pub struct SimRunner<'p> {
+    pipe: &'p Pipeline,
+    frames: u64,
+    // Static hoists — pure functions of the pipeline config.
+    caps: Vec<u64>,
+    arrivals: Vec<u64>,
+    outs: Vec<u64>,
+    source_total: u64,
+    horizon: u64,
+    last: usize,
+    /// Per FIFO: CEs whose Phase-B pull is gated by this FIFO's free
+    /// space (their producing transfer must also fill it).
+    gated_pull: Vec<Vec<usize>>,
+    /// Per FIFO: untapped producers whose drain pass fills it.
+    gated_drain: Vec<Vec<usize>>,
+    /// Per FIFO: the CE whose accepted inputs fill it (tee tapper).
+    tee_tapper: Vec<Option<usize>>,
+    /// Per FIFO: the CE reading it as its main source (tee consumer).
+    tee_consumer: Vec<Option<usize>>,
+    /// Per FIFO: the join CE consuming it as its side input.
+    join_of: Vec<Option<usize>>,
+    /// Per CE: the CE reading its output FIFO as main source.
+    ce_consumer: Vec<Option<usize>>,
+    // Dynamic state — the same variables the stepped loop keeps.
+    st: Vec<CeState>,
+    fifo_occ: Vec<u64>,
+    fifo_peak: Vec<u64>,
+    fifo_high_water: Vec<Vec<u64>>,
+    source_sent: u64,
+    completion: Vec<u64>,
+    frame_done: Vec<Vec<u64>>,
+    next_accept: Vec<u64>,
+    // Event bookkeeping.
+    heap: EventHeap,
+    wake_a: Vec<u64>,
+    wake_b: Vec<u64>,
+    wake_d: Vec<u64>,
+    /// Pending quantum-completion cycle per CE (`u64::MAX` = idle).
+    completion_at: Vec<u64>,
+    issue_cycle: Vec<u64>,
+    park_at: Vec<u64>,
+    park_kind: Vec<Park>,
+    last_progress: u64,
+    last_cycle: u64,
+}
+
+impl<'p> SimRunner<'p> {
+    /// Prepare an event-driven run of `frames` frames over `pipe`.
+    pub fn new(pipe: &'p Pipeline, frames: u64) -> Result<Self, ReproError> {
+        validate_frames(frames)?;
+        let n = pipe.ces.len();
+        let nf = pipe.fifos.len();
+        let mut gated_pull: Vec<Vec<usize>> = vec![Vec::new(); nf];
+        let mut gated_drain: Vec<Vec<usize>> = vec![Vec::new(); nf];
+        let mut tee_tapper: Vec<Option<usize>> = vec![None; nf];
+        let mut tee_consumer: Vec<Option<usize>> = vec![None; nf];
+        let mut join_of: Vec<Option<usize>> = vec![None; nf];
+        let mut ce_consumer: Vec<Option<usize>> = vec![None; n];
+        for i in 0..n {
+            match pipe.main_src[i] {
+                MainSrc::Source => {
+                    for &t in &pipe.source_taps {
+                        gated_pull[t].push(i);
+                    }
+                }
+                MainSrc::Ce(p) => {
+                    ce_consumer[p] = Some(i);
+                    for &t in &pipe.out_taps[p] {
+                        gated_pull[t].push(i);
+                    }
+                }
+                MainSrc::Fifo(fi) => tee_consumer[fi] = Some(i),
+            }
+            if let Some(ti) = pipe.in_taps[i] {
+                tee_tapper[ti] = Some(i);
+            }
+            if let Some(fi) = pipe.join_side[i] {
+                join_of[fi] = Some(i);
+            }
+            if !pipe.feeds_next[i] {
+                for &t in &pipe.out_taps[i] {
+                    gated_drain[t].push(i);
+                }
+            }
+        }
+        let track = pipe.track_fifo;
+        let fifo_occ: Vec<u64> = pipe.fifos.iter().map(|f| f.occupancy).collect();
+        let mut heap = EventHeap::new();
+        let mut wake_d = vec![u64::MAX; n];
+        // Every CE is evaluated at cycle 0, exactly like the stepped
+        // engine's first iteration (untapped producers join the drain
+        // pass from the start; it no-ops while their out FIFO is empty).
+        for i in 0..n {
+            heap.push(Reverse((0, PH_A, i)));
+            heap.push(Reverse((0, PH_B, i)));
+            if !pipe.feeds_next[i] {
+                wake_d[i] = 0;
+                heap.push(Reverse((0, PH_D, i)));
+            }
+        }
+        Ok(SimRunner {
+            pipe,
+            frames,
+            caps: pipe.ces.iter().map(|c| c.capacity_px()).collect(),
+            arrivals: pipe.ces.iter().map(|c| c.arrivals_per_frame()).collect(),
+            outs: pipe.ces.iter().map(|c| c.outputs_per_frame()).collect(),
+            source_total: pipe.source_px_per_frame * frames,
+            horizon: 2 * pipe.source_px_per_frame + 400_000,
+            last: n - 1,
+            gated_pull,
+            gated_drain,
+            tee_tapper,
+            tee_consumer,
+            join_of,
+            ce_consumer,
+            st: vec![CeState::default(); n],
+            fifo_peak: if track { fifo_occ.clone() } else { Vec::new() },
+            fifo_occ,
+            fifo_high_water: vec![Vec::with_capacity(frames as usize); if track { nf } else { 0 }],
+            source_sent: 0,
+            completion: Vec::with_capacity(frames as usize),
+            frame_done: vec![Vec::with_capacity(frames as usize); n],
+            next_accept: vec![0; n],
+            heap,
+            wake_a: vec![0; n],
+            wake_b: vec![0; n],
+            wake_d,
+            completion_at: vec![u64::MAX; n],
+            issue_cycle: vec![0; n],
+            park_at: vec![0; n],
+            park_kind: vec![Park::None; n],
+            last_progress: 0,
+            last_cycle: 0,
+        })
+    }
+
+    /// Frames fully completed so far.
+    pub fn frames_completed(&self) -> u64 {
+        self.completion.len() as u64
+    }
+
+    /// Run the event loop until `frames` frames have completed (clamped
+    /// to the run's total). Advancing one frame at a time is bit-identical
+    /// to one shot — pausing the loop at a frame milestone changes no
+    /// state.
+    pub fn advance_to(&mut self, frames: u64) -> Result<(), ReproError> {
+        let target = frames.min(self.frames);
+        while (self.completion.len() as u64) < target {
+            // Find the earliest cycle holding a live event; everything
+            // else in the heap is a superseded wake. An empty heap means
+            // no timer and no wake can ever fire again — the same "nothing
+            // pending" condition the stepped engine's horizon check
+            // detects, reported at the identical cycle.
+            let cycle = loop {
+                match self.heap.peek() {
+                    None => {
+                        let at = (self.last_progress + self.horizon + 1).max(self.last_cycle);
+                        return Err(ReproError::simulation(format!(
+                            "pipeline deadlock at cycle {at}: {}",
+                            self.pipe.deadlock_report(&self.st, &self.fifo_occ)
+                        )));
+                    }
+                    Some(&Reverse((c, ph, i))) => {
+                        if self.is_live(c, ph, i) {
+                            break c;
+                        }
+                        self.heap.pop();
+                    }
+                }
+            };
+            // Drain the whole cycle in heap order — phase A, then B, then
+            // the drain pass, index-ascending within each — including
+            // events pushed while processing it (a quantum issued with
+            // `quantum_cycles == 1` completes this same cycle, after
+            // lower-indexed pending entries, exactly like the stepped
+            // sweep).
+            while let Some(&Reverse((c, ph, i))) = self.heap.peek() {
+                if c != cycle {
+                    break;
+                }
+                self.heap.pop();
+                if !self.is_live(c, ph, i) {
+                    continue;
+                }
+                match ph {
+                    PH_A => {
+                        if self.completion_at[i] == c {
+                            self.complete(i, c);
+                        } else {
+                            self.eval_issue(i, c);
+                        }
+                    }
+                    PH_B => self.eval_accept(i, c),
+                    _ => self.eval_drain(i, c),
+                }
+            }
+            self.last_cycle = cycle;
+        }
+        Ok(())
+    }
+
+    /// Run to the end and produce the stats. Consumes the runner: the
+    /// bulk busy/stall credits for states still parked at the final cycle
+    /// are applied here, exactly once.
+    pub fn finish(mut self, warmup: u64) -> Result<SimStats, ReproError> {
+        validate_warmup(self.frames, warmup)?;
+        self.advance_to(self.frames)?;
+        Ok(self.into_stats(warmup))
+    }
+
+    fn is_live(&self, c: u64, ph: u8, i: usize) -> bool {
+        match ph {
+            PH_A => self.completion_at[i] == c || self.wake_a[i] == c,
+            PH_B => self.wake_b[i] == c,
+            _ => self.wake_d[i] == c,
+        }
+    }
+
+    /// Phase A for an idle CE: credit the parked stall span, then replay
+    /// the stepped engine's issue logic at cycle `c`.
+    fn eval_issue(&mut self, i: usize, c: u64) {
+        self.wake_a[i] = u64::MAX;
+        if self.completion_at[i] != u64::MAX {
+            return; // mid-quantum: a stray wake must not re-issue
+        }
+        // The stepped engine re-evaluates an idle CE every cycle, and the
+        // verdict is frozen strictly inside (park_at, c): any input change
+        // would have scheduled an earlier wake. Credit those cycles now.
+        match self.park_kind[i] {
+            Park::Input => self.st[i].stall_input += c - self.park_at[i] - 1,
+            Park::Output => self.st[i].stall_output += c - self.park_at[i] - 1,
+            Park::None => {}
+        }
+        self.park_kind[i] = Park::None;
+        let pipe = self.pipe;
+        let cfg = &pipe.ces[i];
+        let of = self.outs[i];
+        let frames = self.frames;
+        let s = &mut self.st[i];
+        if s.all_work_issued(of, frames) {
+            return; // all work done: Phase A bumps nothing
+        }
+        let start = s.next_out;
+        let in_frame = start % of;
+        let q = (cfg.pf as u64).min(of - in_frame);
+        let need = if s.cached_for == start {
+            s.cached_need
+        } else {
+            let frame = start / of;
+            let end = in_frame + q - 1;
+            let need = frame * self.arrivals[i] + cfg.required_arrival(end);
+            s.cached_need = need;
+            s.cached_for = start;
+            need
+        };
+        let out_cap = (2 * cfg.pf as u64).max(4);
+        if s.recv <= need {
+            s.stall_input += 1;
+            self.park_at[i] = c;
+            self.park_kind[i] = Park::Input;
+            return;
+        }
+        if s.out_fifo + q > out_cap {
+            s.stall_output += 1;
+            self.park_at[i] = c;
+            self.park_kind[i] = Park::Output;
+            return;
+        }
+        if cfg.class == CeClass::Join {
+            let fi = pipe.join_side[i].expect("join without side fifo");
+            if self.fifo_occ[fi] < q {
+                s.stall_input += 1;
+                self.park_at[i] = c;
+                self.park_kind[i] = Park::Input;
+                return;
+            }
+            self.fifo_occ[fi] -= q;
+            // The snapshot drain un-gates pullers and parked drain passes
+            // this same cycle (Phase B and the drain pass run after A).
+            for &g in &self.gated_pull[fi] {
+                sched(&mut self.heap, &mut self.wake_b, PH_B, g, c.max(self.next_accept[g]));
+            }
+            for &g in &self.gated_drain[fi] {
+                sched(&mut self.heap, &mut self.wake_d, PH_D, g, c);
+            }
+        }
+        let s = &mut self.st[i];
+        s.pending_out = q;
+        self.issue_cycle[i] = c;
+        let comp = c + cfg.quantum_cycles - 1;
+        self.completion_at[i] = comp;
+        self.heap.push(Reverse((comp, PH_A, i)));
+        self.last_progress = c;
+    }
+
+    /// Phase A for a completing quantum: deliver outputs, free dead
+    /// pixels, record frame milestones — then wake everyone the stepped
+    /// engine's next sweep would have found unblocked.
+    fn complete(&mut self, i: usize, c: u64) {
+        self.completion_at[i] = u64::MAX;
+        let pipe = self.pipe;
+        let cfg = &pipe.ces[i];
+        let of = self.outs[i];
+        let frames = self.frames;
+        let a = self.arrivals[i];
+        let s = &mut self.st[i];
+        // The stepped engine ticked this CE once per cycle of the quantum.
+        s.busy_cycles += cfg.quantum_cycles;
+        s.out_fifo += s.pending_out;
+        s.next_out += s.pending_out;
+        s.pending_out = 0;
+        let done = s.next_out / of;
+        if done > s.frames_done {
+            let from = s.frames_done;
+            s.frames_done = done;
+            for _ in from..done.min(frames) {
+                self.frame_done[i].push(c);
+            }
+            if i == self.last {
+                for _ in self.completion.len() as u64..done.min(frames) {
+                    self.completion.push(c);
+                    for (t, hw) in self.fifo_high_water.iter_mut().enumerate() {
+                        hw.push(self.fifo_peak[t]);
+                    }
+                }
+            }
+        }
+        let s = &mut self.st[i];
+        if cfg.full_frame_buffer {
+            s.freed = ((s.next_out / of) * a).min(s.recv);
+        } else if s.next_out < of * frames {
+            let frame = s.next_out / of;
+            s.freed = s.freed.max(frame * a + cfg.oldest_needed(s.next_out % of)).min(s.recv);
+        }
+        // The now-idle PE array may issue next cycle. Overwrite (not
+        // `sched`): a superseded same-cycle wake entry must not trigger a
+        // premature issue in this cycle's remaining phase-A drain.
+        self.wake_a[i] = c + 1;
+        self.heap.push(Reverse((c + 1, PH_A, i)));
+        // Freed pixels may clear this CE's own occupancy gate, and the
+        // delivered outputs feed the consumer — both visible to Phase B
+        // this same cycle.
+        sched(&mut self.heap, &mut self.wake_b, PH_B, i, c.max(self.next_accept[i]));
+        if let Some(k) = self.ce_consumer[i] {
+            sched(&mut self.heap, &mut self.wake_b, PH_B, k, c.max(self.next_accept[k]));
+        }
+        if !pipe.feeds_next[i] {
+            sched(&mut self.heap, &mut self.wake_d, PH_D, i, c);
+        }
+        self.last_progress = c;
+    }
+
+    /// Phase B: paced input acceptance + the atomic transfer commit.
+    fn eval_accept(&mut self, i: usize, c: u64) {
+        self.wake_b[i] = u64::MAX;
+        let pipe = self.pipe;
+        let cfg = &pipe.ces[i];
+        let a = self.arrivals[i];
+        if c < self.next_accept[i] {
+            // Paced: re-arm exactly at the release cycle. Attempts
+            // strictly before it would all hit this same guard.
+            let at = self.next_accept[i];
+            sched(&mut self.heap, &mut self.wake_b, PH_B, i, at);
+            return;
+        }
+        if self.st[i].recv >= a * self.frames {
+            return; // stream fully accepted — permanently idle
+        }
+        if self.st[i].occupancy() >= self.caps[i] {
+            return; // woken when this CE's next completion frees pixels
+        }
+        if cfg.uses_padded_stream() && is_padding_slot(cfg, self.st[i].recv % a) {
+            self.st[i].recv += 1;
+            self.next_accept[i] = c + cfg.in_interval;
+            let at = self.next_accept[i];
+            sched(&mut self.heap, &mut self.wake_a, PH_A, i, c + 1);
+            sched(&mut self.heap, &mut self.wake_b, PH_B, i, at);
+            self.last_progress = c;
+            return;
+        }
+        let avail = match pipe.main_src[i] {
+            MainSrc::Source => self.source_sent < self.source_total,
+            MainSrc::Ce(p) => self.st[p].out_fifo > 0,
+            MainSrc::Fifo(fi) => self.fifo_occ[fi] > 0,
+        };
+        if !avail {
+            return; // woken by the producer's completion / the tee's fill
+        }
+        if let Some(ti) = pipe.in_taps[i] {
+            if self.fifo_occ[ti] >= pipe.fifos[ti].capacity {
+                return; // woken when the tee consumer drains it
+            }
+        }
+        let taps: &[usize] = match pipe.main_src[i] {
+            MainSrc::Source => &pipe.source_taps,
+            MainSrc::Ce(p) => &pipe.out_taps[p],
+            MainSrc::Fifo(_) => &[],
+        };
+        if taps.iter().any(|&t| self.fifo_occ[t] >= pipe.fifos[t].capacity) {
+            return; // woken when the gating join drains the snapshot
+        }
+        // Commit — identical to the stepped Phase B.
+        match pipe.main_src[i] {
+            MainSrc::Source => self.source_sent += 1,
+            MainSrc::Ce(p) => {
+                self.st[p].out_fifo -= 1;
+                // The producer's output-FIFO gate may clear next cycle.
+                sched(&mut self.heap, &mut self.wake_a, PH_A, p, c + 1);
+            }
+            MainSrc::Fifo(fi) => {
+                self.fifo_occ[fi] -= 1;
+                if let Some(j) = self.tee_tapper[fi] {
+                    // The tapper sits earlier in the chain (j < i): the
+                    // freed slot is visible to its Phase B next cycle.
+                    sched(
+                        &mut self.heap,
+                        &mut self.wake_b,
+                        PH_B,
+                        j,
+                        (c + 1).max(self.next_accept[j]),
+                    );
+                }
+            }
+        }
+        let track = pipe.track_fifo;
+        for &t in taps {
+            self.fifo_occ[t] += 1;
+            if track && self.fifo_occ[t] > self.fifo_peak[t] {
+                self.fifo_peak[t] = self.fifo_occ[t];
+            }
+            if let Some(j) = self.join_of[t] {
+                sched(&mut self.heap, &mut self.wake_a, PH_A, j, c + 1);
+            }
+        }
+        if let Some(ti) = pipe.in_taps[i] {
+            self.fifo_occ[ti] += 1;
+            if track && self.fifo_occ[ti] > self.fifo_peak[ti] {
+                self.fifo_peak[ti] = self.fifo_occ[ti];
+            }
+            if let Some(k) = self.tee_consumer[ti] {
+                // Tee consumers sit later in the chain (k > i): the fill
+                // is visible to their Phase B this same cycle.
+                sched(&mut self.heap, &mut self.wake_b, PH_B, k, c.max(self.next_accept[k]));
+            }
+        }
+        self.st[i].recv += 1;
+        self.next_accept[i] = c + cfg.in_interval;
+        let at = self.next_accept[i];
+        sched(&mut self.heap, &mut self.wake_a, PH_A, i, c + 1);
+        sched(&mut self.heap, &mut self.wake_b, PH_B, i, at);
+        self.last_progress = c;
+    }
+
+    /// The drain pass for a producer not consumed by the next CE: the
+    /// sink hands everything to the host at once; a tapped branch point
+    /// moves one pixel per cycle into its side FIFOs.
+    fn eval_drain(&mut self, p: usize, c: u64) {
+        self.wake_d[p] = u64::MAX;
+        let pipe = self.pipe;
+        if self.st[p].out_fifo == 0 {
+            return; // refilled (and re-woken) by this producer's completion
+        }
+        let taps = &pipe.out_taps[p];
+        if taps.is_empty() {
+            // Sink: the host consumes results immediately.
+            self.st[p].out_fifo = 0;
+            sched(&mut self.heap, &mut self.wake_a, PH_A, p, c + 1);
+            self.last_progress = c;
+            return;
+        }
+        if taps.iter().any(|&t| self.fifo_occ[t] >= pipe.fifos[t].capacity) {
+            return; // woken when the gating join drains the snapshot
+        }
+        self.st[p].out_fifo -= 1;
+        let track = pipe.track_fifo;
+        for &t in taps {
+            self.fifo_occ[t] += 1;
+            if track && self.fifo_occ[t] > self.fifo_peak[t] {
+                self.fifo_peak[t] = self.fifo_occ[t];
+            }
+            if let Some(j) = self.join_of[t] {
+                sched(&mut self.heap, &mut self.wake_a, PH_A, j, c + 1);
+            }
+        }
+        sched(&mut self.heap, &mut self.wake_a, PH_A, p, c + 1);
+        if self.st[p].out_fifo > 0 {
+            sched(&mut self.heap, &mut self.wake_d, PH_D, p, c + 1);
+        }
+        self.last_progress = c;
+    }
+
+    /// Final bulk credits + stats assembly. Every CE still parked (or
+    /// mid-quantum) at the last processed cycle gets the per-cycle
+    /// stall/busy bumps the stepped engine accumulated through that
+    /// cycle; the parked verdicts are frozen through it because every
+    /// wake at or before it has been processed.
+    fn into_stats(mut self, warmup: u64) -> SimStats {
+        let last_cycle = self.last_cycle;
+        for i in 0..self.pipe.ces.len() {
+            if self.completion_at[i] != u64::MAX {
+                self.st[i].busy_cycles += last_cycle - self.issue_cycle[i] + 1;
+            } else {
+                match self.park_kind[i] {
+                    Park::Input => self.st[i].stall_input += last_cycle - self.park_at[i],
+                    Park::Output => self.st[i].stall_output += last_cycle - self.park_at[i],
+                    Park::None => {}
+                }
+            }
+        }
+        let track = self.pipe.track_fifo;
+        SimStats {
+            period_cycles: steady_period(&self.completion, warmup),
+            first_frame_cycles: self.completion[0],
+            total_cycles: last_cycle + 1,
+            frames: self.frames,
+            busy_cycles: self.st.iter().map(|s| s.busy_cycles).collect(),
+            stall_input: self.st.iter().map(|s| s.stall_input).collect(),
+            stall_output: self.st.iter().map(|s| s.stall_output).collect(),
+            macs_per_frame: self
+                .pipe
+                .ces
+                .iter()
+                .map(|c| c.macs_per_opos * c.outputs_per_frame())
+                .collect(),
+            pes: self.pipe.ces.iter().map(|c| c.pes).collect(),
+            frame_done: self.frame_done,
+            fifo_names: if track {
+                self.pipe.fifos.iter().map(|f| f.name.clone()).collect()
+            } else {
+                Vec::new()
+            },
+            fifo_capacity: if track {
+                self.pipe.fifos.iter().map(|f| f.capacity).collect()
+            } else {
+                Vec::new()
+            },
+            fifo_peak: self.fifo_peak,
+            fifo_high_water: self.fifo_high_water,
+        }
+    }
+}
+
 /// Whether arrival slot `idx` of a padded frame stream is a padding
 /// position.
 fn is_padding_slot(cfg: &CeConfig, idx: u64) -> bool {
@@ -513,6 +1168,24 @@ mod tests {
         }
     }
 
+    /// One compute CE fed straight from the source, draining to the host.
+    fn single_ce_pipeline(ce: CeConfig, source_px: u64) -> Pipeline {
+        Pipeline {
+            ces: vec![ce],
+            main_src: vec![MainSrc::Source],
+            join_side: vec![None],
+            out_taps: vec![Vec::new()],
+            in_taps: vec![None],
+            source_taps: Vec::new(),
+            fifos: Vec::new(),
+            feeds_next: vec![false],
+            source_px_per_frame: source_px,
+            track_fifo: false,
+            cycle_skip: true,
+            event_driven: true,
+        }
+    }
+
     /// Source -> producer CE -> full-frame (WRCE-style) CE -> join CE,
     /// with one side FIFO snapshotting the producer's output into the
     /// join — the minimal SCB shape.
@@ -541,35 +1214,43 @@ mod tests {
             source_px_per_frame: 16,
             track_fifo: false,
             cycle_skip: true,
+            event_driven: true,
+        }
+    }
+
+    /// Run the same pipeline through both engines and require the exact
+    /// same outcome — every `SimStats` field (via `Debug`, which covers
+    /// all of them) or the identical typed deadlock error.
+    fn assert_engines_agree(p: &mut Pipeline, frames: u64, warmup: u64) {
+        p.event_driven = true;
+        let event = p.run(frames, warmup);
+        p.event_driven = false;
+        let stepped = p.run(frames, warmup);
+        p.event_driven = true;
+        match (event, stepped) {
+            (Ok(a), Ok(b)) => assert_eq!(format!("{a:?}"), format!("{b:?}")),
+            (Err(a), Err(b)) => assert_eq!(a, b),
+            (a, b) => panic!("engines disagree on outcome:\nevent:   {a:?}\nstepped: {b:?}"),
         }
     }
 
     #[test]
     fn quantum_longer_than_horizon_is_not_a_deadlock() {
         // Regression: one quantum of 1M cycles dwarfs the progress horizon
-        // (2*64 + 400_000). The cycle-skip advance lands past the horizon
-        // in a single jump, and the old `cycle - last_progress > horizon`
-        // check fired before the pending completion could count as
-        // progress. With the pending-timer guard the run must complete.
+        // (2*64 + 400_000). The stepped engine's cycle-skip advance lands
+        // past the horizon in a single jump, and the old `cycle -
+        // last_progress > horizon` check fired before the pending
+        // completion could count as progress; the event engine's heap
+        // holds the completion timer, so its "nothing pending" condition
+        // can't fire either. Both runs must complete — identically.
         let mut ce = stream_ce("extreme", 8, 1_000_000, 1);
         ce.in_interval = 1;
-        let p = Pipeline {
-            ces: vec![ce],
-            main_src: vec![MainSrc::Source],
-            join_side: vec![None],
-            out_taps: vec![Vec::new()],
-            in_taps: vec![None],
-            source_taps: Vec::new(),
-            fifos: Vec::new(),
-            feeds_next: vec![false],
-            source_px_per_frame: 64,
-            track_fifo: false,
-            cycle_skip: true,
-        };
+        let mut p = single_ce_pipeline(ce, 64);
         let stats = p.run(1, 0).expect("extreme quantum falsely reported as deadlock");
         assert_eq!(stats.frames, 1);
         // Each of the 64 one-position quanta stalls far past the horizon.
         assert!(stats.total_cycles > 2 * 64 + 400_000, "total {}", stats.total_cycles);
+        assert_engines_agree(&mut p, 1, 0);
     }
 
     #[test]
@@ -579,12 +1260,17 @@ mod tests {
         // the full-frame middle CE never sees a whole frame — a circular
         // wait, i.e. exactly the failure the paper's delayed-buffer sizing
         // prevents.
-        let err = scb_pipeline(2).run(1, 0).expect_err("undersized FIFO must deadlock");
-        assert!(err.detail.contains("scb->join"), "missing FIFO name: {}", err.detail);
-        assert!(err.detail.contains("2/2"), "missing saturated occupancy: {}", err.detail);
-        assert!(err.detail.contains("producer"), "missing stalled CE: {}", err.detail);
-        let display = err.to_string();
-        assert!(display.contains("pipeline deadlock at cycle"));
+        let mut p = scb_pipeline(2);
+        let err = p.run(1, 0).expect_err("undersized FIFO must deadlock");
+        assert_eq!(err.kind(), "simulation");
+        assert!(err.contains("scb->join"), "missing FIFO name: {err}");
+        assert!(err.contains("2/2"), "missing saturated occupancy: {err}");
+        assert!(err.contains("producer"), "missing stalled CE: {err}");
+        assert!(err.to_string().contains("pipeline deadlock at cycle"));
+        // The stepped engine reports the identical error (cycle + detail).
+        p.event_driven = false;
+        let stepped = p.run(1, 0).expect_err("stepped engine must agree on the deadlock");
+        assert_eq!(err, stepped);
     }
 
     #[test]
@@ -609,5 +1295,108 @@ mod tests {
         assert!(untracked.fifo_names.is_empty() && untracked.fifo_peak.is_empty());
         assert!(untracked.fifo_high_water.is_empty());
         assert_eq!(untracked.period_cycles, stats.period_cycles);
+    }
+
+    #[test]
+    fn event_engine_matches_stepped_across_shapes() {
+        // Bit-identical stats across the SCB shape (joins, a full-frame
+        // WRCE, a gated branch point), tracked and untracked, streaming
+        // and deadlocking, at several frame/warm-up counts — and with the
+        // stepped engine's own cycle-skip disabled (the cycle-exact slow
+        // path), closing the triangle event == skip == exact.
+        for frames in [1, 2, 3] {
+            let mut p = scb_pipeline(32);
+            p.track_fifo = true;
+            assert_engines_agree(&mut p, frames, frames - 1);
+            assert_engines_agree(&mut p, frames, 0);
+        }
+        let mut exact = scb_pipeline(32);
+        exact.track_fifo = true;
+        exact.cycle_skip = false;
+        assert_engines_agree(&mut exact, 3, 1);
+        // Deadlock agreement (typed error, cycle, and report) at a
+        // capacity between "streams" and the 2-px case above.
+        assert_engines_agree(&mut scb_pipeline(3), 2, 0);
+    }
+
+    #[test]
+    fn all_lut_pipeline_mac_efficiency_is_zero_not_nan() {
+        // Regression: every CE on LUT adders (pes == 0) used to make
+        // `mac_efficiency` divide by zero and return NaN, which then
+        // poisoned JSON output and report tables.
+        let mut ce = stream_ce("lut_only", 4, 1, 1);
+        ce.pes = 0;
+        let stats = single_ce_pipeline(ce, 16).run(2, 1).unwrap();
+        assert_eq!(stats.mac_efficiency(), 0.0);
+        assert!(stats.mac_efficiency().is_finite());
+        assert_eq!(stats.layer_efficiency(0), None);
+    }
+
+    #[test]
+    fn degenerate_run_arguments_are_typed_config_errors() {
+        // Regression: `--frames` at or below the warm-up count used to
+        // trip an `assert!` deep in the engine — reachable from user
+        // input; both degenerate shapes must now surface as
+        // `ReproError::Config`.
+        let p = scb_pipeline(32);
+        let err = p.run(0, 0).expect_err("frames = 0 must be rejected");
+        assert_eq!(err.kind(), "config");
+        assert!(err.contains("at least 1 frame"), "{err}");
+        let err = p.run(2, 2).expect_err("warmup >= frames must be rejected");
+        assert_eq!(err.kind(), "config");
+        assert!(err.contains("no measured frame"), "{err}");
+        let mut stepped = scb_pipeline(32);
+        stepped.event_driven = false;
+        assert_eq!(stepped.run(2, 3).unwrap_err().kind(), "config");
+    }
+
+    #[test]
+    fn single_measured_frame_period_is_the_last_gap_and_rates_stay_finite() {
+        // Regression: with exactly one measured frame the old period
+        // estimate fell back to the absolute completion cycle (fill +
+        // every prior period), overstating the period severalfold.
+        let p = scb_pipeline(32);
+        // frames=1: only the first completion is observable.
+        let one = p.run(1, 0).unwrap();
+        assert_eq!(one.period_cycles, one.first_frame_cycles as f64);
+        // frames=2, warmup=1 (the sweep's default shape): the period must
+        // be the last inter-completion gap, not fill + run.
+        let two = p.run(2, 1).unwrap();
+        let fd = &two.frame_done[2];
+        assert_eq!(two.period_cycles, (fd[1] - fd[0]) as f64);
+        assert!(two.period_cycles <= two.first_frame_cycles as f64);
+        // A degenerate zero period can't divide through to NaN/inf.
+        let zeroed = SimStats { period_cycles: 0.0, ..two.clone() };
+        assert_eq!(zeroed.fps(1e8), 0.0);
+        assert_eq!(zeroed.mac_efficiency(), 0.0);
+        assert_eq!(zeroed.layer_efficiency(0), Some(0.0));
+    }
+
+    #[test]
+    fn incremental_advance_and_warm_clone_match_one_shot() {
+        // Warm-state reuse: advancing frame-by-frame, and resuming a
+        // cloned mid-run runner, must both be bit-identical to a cold
+        // one-shot run — this is what lets multi-frame studies pay the
+        // pipeline fill once.
+        let mut p = scb_pipeline(32);
+        p.track_fifo = true;
+        let one_shot = p.run(5, 1).unwrap();
+        let mut runner = SimRunner::new(&p, 5).unwrap();
+        for f in 1..=5 {
+            runner.advance_to(f).unwrap();
+            assert_eq!(runner.frames_completed(), f);
+        }
+        let warm = runner.clone();
+        let stats = runner.finish(1).unwrap();
+        assert_eq!(format!("{stats:?}"), format!("{one_shot:?}"));
+        // The clone finishes independently with its own exit credits.
+        let warm_stats = warm.finish(1).unwrap();
+        assert_eq!(format!("{warm_stats:?}"), format!("{one_shot:?}"));
+        // A clone taken mid-fill (before any completion) also agrees.
+        let mut base = SimRunner::new(&p, 5).unwrap();
+        base.advance_to(2).unwrap();
+        let resumed = base.clone().finish(1).unwrap();
+        assert_eq!(format!("{resumed:?}"), format!("{one_shot:?}"));
+        assert_eq!(SimRunner::new(&p, 0).unwrap_err().kind(), "config");
     }
 }

@@ -19,11 +19,12 @@ pub mod engine;
 
 pub use ce::{CeClass, CeConfig, PaddingMode};
 pub use converter::OrderConverter;
-pub use engine::{Deadlock, MainSrc, Pipeline, SideFifo, SimStats};
+pub use engine::{MainSrc, Pipeline, SideFifo, SimRunner, SimStats};
 
 use crate::model::memory::{scb_delay_buffer_bytes, startup_latency_px, CeKind, CePlan, FmScheme};
 use crate::model::throughput::LayerAlloc;
 use crate::nets::{LayerKind, LayerSrc, Network};
+use crate::util::error::ReproError;
 
 /// Simulator options: the optimization toggles of Fig 17.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +44,12 @@ pub struct SimOptions {
     /// either way (pinned by `skip_on_off_stats_identical_across_zoo`);
     /// disable only to exercise or diagnose the cycle-exact slow path.
     pub cycle_skip: bool,
+    /// Run the event-driven engine ([`SimRunner`]) instead of the
+    /// cycle-stepped reference loop. Stats are bit-identical either way
+    /// (pinned by `event_on_off_stats_identical_across_zoo` and the
+    /// differential/proptest suites); disable only to exercise or profile
+    /// the stepped reference engine.
+    pub event_driven: bool,
 }
 
 impl SimOptions {
@@ -57,6 +64,7 @@ impl SimOptions {
             stride_extra_line: false,
             track_fifo: false,
             cycle_skip: true,
+            event_driven: true,
         }
     }
 
@@ -68,6 +76,7 @@ impl SimOptions {
             stride_extra_line: true,
             track_fifo: false,
             cycle_skip: true,
+            event_driven: true,
         }
     }
 }
@@ -230,18 +239,23 @@ pub fn build_pipeline(net: &Network, allocs: &[LayerAlloc], plan: &CePlan, opts:
         source_px_per_frame: (net.input_size * net.input_size) as u64,
         track_fifo: opts.track_fifo,
         cycle_skip: opts.cycle_skip,
+        event_driven: opts.event_driven,
     }
 }
 
-/// Convenience wrapper: build, run, return stats.
+/// Convenience wrapper: build, run, return stats. Half the frames (at
+/// least one, and always leaving one measured frame) are treated as
+/// warm-up; `frames == 0` is a [`ReproError::Config`] rather than an
+/// underflow.
 pub fn simulate(
     net: &Network,
     allocs: &[LayerAlloc],
     plan: &CePlan,
     opts: &SimOptions,
     frames: u64,
-) -> Result<SimStats, Deadlock> {
-    build_pipeline(net, allocs, plan, opts).run(frames, (frames / 2).max(1).min(frames - 1))
+) -> Result<SimStats, ReproError> {
+    let warmup = if frames == 0 { 0 } else { (frames / 2).max(1).min(frames - 1) };
+    build_pipeline(net, allocs, plan, opts).run(frames, warmup)
 }
 
 #[cfg(test)]
@@ -349,6 +363,44 @@ mod tests {
                 net.name
             );
         }
+    }
+
+    #[test]
+    fn event_on_off_stats_identical_across_zoo() {
+        // The event-driven engine must be a pure wall-clock optimization
+        // over the stepped reference loop: every SimStats field —
+        // including the bulk-credited stall taxonomy and the tracked FIFO
+        // peaks/high-water traces — bit-identical, on every zoo network.
+        for net in crate::nets::all_networks() {
+            let plan = CePlan { boundary: net.layers.len() / 2 };
+            let p = dynamic_parallelism_tuning(&net, &plan, zc706::DSP_BUDGET, Granularity::Fgpm);
+            let opts = SimOptions { track_fifo: true, ..SimOptions::optimized() };
+            let on = simulate(&net, &p.allocs, &plan, &opts, 2).unwrap();
+            let off = simulate(
+                &net,
+                &p.allocs,
+                &plan,
+                &SimOptions { event_driven: false, ..opts },
+                2,
+            )
+            .unwrap();
+            assert_eq!(
+                format!("{on:?}"),
+                format!("{off:?}"),
+                "event-driven vs stepped stats diverge for {}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn zero_frames_is_a_typed_config_error() {
+        // Regression: frames = 0 used to underflow the warm-up arithmetic
+        // before the engine could reject it.
+        let (net, allocs, plan) = mbv2_setup(zc706::DSP_BUDGET);
+        let err = simulate(&net, &allocs, &plan, &SimOptions::optimized(), 0).unwrap_err();
+        assert_eq!(err.kind(), "config");
+        assert!(err.contains("at least 1 frame"), "{err}");
     }
 
     #[test]

@@ -549,8 +549,10 @@ impl SweepSpec {
     /// and the `eval.alloc` / `eval.sim` injection sites
     /// ([`crate::util::fault`]) fail exactly the cells whose content key
     /// (`fault_key`) their trigger selects. An *organic* simulator
-    /// deadlock is deliberately **not** a cell failure — it is a
-    /// measurement, recorded in-cell as [`SweepCell::sim_error`].
+    /// deadlock ([`ReproError::Simulation`]) is deliberately **not** a
+    /// cell failure — it is a measurement, recorded in-cell as
+    /// [`SweepCell::sim_error`]; any other simulate error (a degenerate
+    /// frame count would be [`ReproError::Config`]) propagates.
     fn eval_cell(
         &self,
         net: &Network,
@@ -614,7 +616,10 @@ impl SweepSpec {
                             None,
                         )
                     }
-                    Err(e) => (None, Some(e.to_string())),
+                    // Deadlock = an in-cell measurement; anything else
+                    // (config misuse) is a real cell failure.
+                    Err(e @ ReproError::Simulation(_)) => (None, Some(e.to_string())),
+                    Err(e) => return Err(e),
                 }
             }
         };

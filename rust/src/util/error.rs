@@ -54,10 +54,12 @@ pub enum ReproError {
     /// Alg 1/Alg 2 resource allocation failed (degenerate budgets — zero
     /// SRAM or zero DSPs cannot host any FGPM point).
     Allocation(String),
-    /// The cycle simulator failed in a way that is an *error*, not a
-    /// measurement. (An organic deadlock is a measurement and stays
-    /// in-cell as `SweepCell::sim_error`; this variant is reserved for
-    /// injected `eval.sim` faults and future hard sim failures.)
+    /// The cycle simulator stopped: an organic pipeline deadlock (the
+    /// message carries the per-CE/per-FIFO report out of
+    /// [`crate::sim::Pipeline::run`]) or an injected `eval.sim` fault.
+    /// The sweep records a deadlock surfacing from its simulate call
+    /// in-cell as `SweepCell::sim_error` (a measurement, not a cell
+    /// failure); injected faults fire before that call and fail the cell.
     Simulation(String),
     /// Sweep-cache I/O: unreadable, torn, or unwritable cache entries.
     CacheIo(String),

@@ -174,6 +174,39 @@ fn warm_cache_restores_simulated_figures_byte_identically() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The ISSUE 10 acceptance criterion: on all 12 committed baseline cells,
+/// the event-driven engine produces **bit-identical** `SimStats` to the
+/// cycle-stepped reference — every field, including the stall taxonomy,
+/// `frame_done` schedules, and the `--fifo` peaks/high-water traces
+/// (`Debug` formatting covers all of them, bit-for-bit for the integer
+/// fields and digit-for-digit for the derived period).
+#[test]
+fn every_baseline_cell_event_engine_matches_stepped_bit_for_bit() {
+    let _guard = seq();
+    for net in nets::all_networks() {
+        let short = nets::short_name(&net.name).expect("zoo net has a short name");
+        for platform in Platform::list() {
+            let file = format!("{short}_{}_fgpm.design.json", platform.name);
+            let path = baseline_dir().join(&file);
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            let design = Design::from_json(&text).unwrap_or_else(|e| panic!("{file}: {e}"));
+            let opts = SimOptions { track_fifo: true, ..*design.sim_options() };
+            let event = design
+                .simulate_with(&opts, 2)
+                .unwrap_or_else(|e| panic!("{file}: event-driven sim failed: {e}"));
+            let stepped = design
+                .simulate_with(&SimOptions { event_driven: false, ..opts }, 2)
+                .unwrap_or_else(|e| panic!("{file}: stepped sim failed: {e}"));
+            assert_eq!(
+                format!("{event:?}"),
+                format!("{stepped:?}"),
+                "{file}: event-driven stats diverge from the stepped reference"
+            );
+        }
+    }
+}
+
 /// Pinned slack of the FIFO tightness check: an on-chip modeled depth may
 /// exceed the simulator's observed peak occupancy by at most this factor
 /// once the quantum-skew margin is set aside. The margin is excluded

@@ -293,6 +293,63 @@ fn prop_fifo_model_bounds_sim_peaks_on_random_configs() {
     );
 }
 
+/// ISSUE 10: the event-driven engine is bit-identical to the cycle-stepped
+/// reference across random boundaries, granularities, DSP budgets, frame
+/// counts, and both option presets over the full zoo — every `SimStats`
+/// field including the stall taxonomy, `frame_done` schedules, and the
+/// tracked FIFO peaks/high-water traces (`Debug` covers all of them), or
+/// the identical typed deadlock error.
+#[test]
+fn prop_event_driven_engine_bit_identical_to_stepped() {
+    let nets_all = nets::all_networks();
+    check(
+        "event_vs_stepped",
+        6,
+        |r: &mut Rng| {
+            (
+                r.range(0, nets_all.len() - 1),
+                r.range(0, 64),
+                r.range(100, 1200),
+                *r.pick(&[Granularity::Fgpm, Granularity::Factorized]),
+                r.range(2, 3) as u64,
+                r.range(0, 1) == 1,
+            )
+        },
+        |&(ni, bfrac, dsp, gran, frames, baseline)| {
+            let net = &nets_all[ni];
+            let boundary = bfrac.min(net.layers.len());
+            let plan = CePlan { boundary };
+            let p = alloc::dynamic_parallelism_tuning(net, &plan, dsp, gran);
+            let base = if baseline { SimOptions::baseline() } else { SimOptions::optimized() };
+            let opts = SimOptions { track_fifo: true, ..base };
+            let event = sim::simulate(net, &p.allocs, &plan, &opts, frames);
+            let stepped = sim::simulate(
+                net,
+                &p.allocs,
+                &plan,
+                &SimOptions { event_driven: false, ..opts },
+                frames,
+            );
+            match (event, stepped) {
+                (Ok(a), Ok(b)) => {
+                    let (a, b) = (format!("{a:?}"), format!("{b:?}"));
+                    if a != b {
+                        return Err(format!("stats diverge:\nevent:   {a}\nstepped: {b}"));
+                    }
+                    Ok(())
+                }
+                (Err(a), Err(b)) => {
+                    if a != b {
+                        return Err(format!("errors diverge:\nevent:   {a}\nstepped: {b}"));
+                    }
+                    Ok(())
+                }
+                (a, b) => Err(format!("outcomes diverge:\nevent:   {a:?}\nstepped: {b:?}")),
+            }
+        },
+    );
+}
+
 // ---------------------------------------------------------------------
 // Platform catalog invariants (the design-space sweep's budget axes).
 // ---------------------------------------------------------------------
